@@ -1,0 +1,34 @@
+//! Clustering-quality comparison across eigensolvers (a compact Fig. 2):
+//! ARPACK (.1/.01), LOBPCG (.1), Bchdav (.1) on the four Graph Challenge
+//! categories, with ARI/NMI/time columns.
+//!
+//!     cargo run --release --example clustering_quality [-- n]
+
+use dist_chebdav::coordinator::{fmt_f, fmt_secs, paper_solver_set, quality_cell, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5_000);
+    let k = 16;
+    let mut table = Table::new(
+        &format!("clustering quality, n={n}, k={k} (compact Fig. 2)"),
+        &["graph", "solver", "ARI", "NMI", "eig time"],
+    );
+    for cat in ["LBOLBSV", "LBOHBSV", "HBOLBSV", "HBOHBSV"] {
+        let mat = table2_matrix(cat, n, 5);
+        for solver in paper_solver_set() {
+            let row = quality_cell(&mat, k, &solver, 3);
+            table.row(&[
+                cat.to_string(),
+                row.solver,
+                fmt_f(row.ari, 3),
+                fmt_f(row.nmi, 3),
+                fmt_secs(row.eig_seconds),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,10 @@
+fn main() {
+    use dist_chebdav::eig::{lanczos_smallest, LanczosOptions};
+    use dist_chebdav::graph::table2_matrix;
+    use dist_chebdav::util::time_it;
+    let mat = table2_matrix("LBOLBSV", 8192, 5);
+    for tol in [0.1, 0.01] {
+        let (res, t) = time_it(|| lanczos_smallest(&mat.lap, &LanczosOptions::new(32, tol)));
+        println!("ARPACK tol={tol}: {t:.2}s matvecs={} converged={}", res.matvecs, res.converged);
+    }
+}

@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real small
+//! workload (EXPERIMENTS.md §E2E records a run):
+//!
+//!   graph generator (L3)  ->  normalized Laplacian (L3)
+//!   -> Block Chebyshev-Davidson whose SpMM/filter hot path executes the
+//!      AOT-compiled Pallas ELL kernels through PJRT (runtime; L1+L2,
+//!      Python long gone)
+//!   -> row-normalized features -> K-means -> ARI/NMI vs ground truth
+//!   -> the same problem solved on the simulated 121-rank grid
+//!      (distributed Alg. 4) with the per-component time ledger.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use dist_chebdav::cluster::{kmeans, quality, row_normalize, KmeansOptions};
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{dist_run, fmt_secs};
+use dist_chebdav::eig::{bchdav, BchdavOptions};
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
+use dist_chebdav::util::time_it;
+
+fn main() {
+    let n = 16_384;
+    let k = 16;
+    let (k_b, m, tol) = (8, 11, 1e-3);
+
+    // --- workload ---
+    let mat = table2_matrix("LBOLBSV", n, 11);
+    let truth = mat.labels.clone().expect("SBM has labels");
+    let clusters = (*truth.iter().max().unwrap() + 1) as usize;
+    println!(
+        "[e2e] workload: {} n={} nnz={} blocks={}",
+        mat.name,
+        mat.lap.nrows,
+        mat.lap.nnz(),
+        clusters
+    );
+
+    // --- PJRT-backed eigensolve (the three-layer hot path) ---
+    let rt = PjrtRuntime::load(&PjrtRuntime::artifacts_dir())
+        .expect("run `make artifacts` first");
+    let op = PjrtOperator::new(&rt, &mat.lap, k_b).expect("operator");
+    println!(
+        "[e2e] PJRT: platform={} artifacts={} pjrt_spmm={}",
+        rt.client.platform_name(),
+        rt.manifest.entries.len(),
+        op.has_pjrt_spmm()
+    );
+    let mut opts = BchdavOptions::for_laplacian(k, k_b, m, tol);
+    opts.seed = 3;
+    let (res, eig_t) = time_it(|| bchdav(&op, &opts, None));
+    let stats = rt.stats.borrow().clone();
+    println!(
+        "[e2e] eigensolve: converged={} iters={} time={} | pjrt_calls={} fallbacks={} compilations={} pad_ratio={:.2}",
+        res.converged,
+        res.iterations,
+        fmt_secs(eig_t),
+        stats.pjrt_calls,
+        stats.native_fallbacks,
+        stats.compilations,
+        stats.mean_pad_ratio()
+    );
+    assert!(res.converged, "eigensolver must converge");
+    assert!(stats.pjrt_calls > 0, "hot path must run through PJRT");
+
+    // cross-check vs native backend (f32 kernel vs f64 reference)
+    let (res_native, native_t) = time_it(|| bchdav(&mat.lap, &opts, None));
+    let max_dev = res
+        .eigenvalues
+        .iter()
+        .zip(res_native.eigenvalues.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "[e2e] native cross-check: time={} max eigenvalue deviation = {:.2e}",
+        fmt_secs(native_t),
+        max_dev
+    );
+    assert!(max_dev < 1e-3, "PJRT vs native eigenvalues diverged");
+
+    // --- clustering (Alg. 1 steps 4-5) ---
+    let k_got = res.eigenvalues.len().min(k);
+    let feats = row_normalize(&res.eigenvectors.cols_block(0, k_got));
+    let mut kopts = KmeansOptions::new(clusters);
+    kopts.seed = 99;
+    let (km, km_t) = time_it(|| kmeans(&feats, &kopts));
+    let run = dist_chebdav::cluster::ClusteringRun {
+        assignments: km.assignments,
+        eigenvalues: res.eigenvalues.clone(),
+        eig_seconds: eig_t,
+        cluster_seconds: km_t,
+        solver: "Bchdav+PJRT".into(),
+        converged: res.converged,
+    };
+    let (ari, nmi) = quality(&run, &truth);
+    println!(
+        "[e2e] clustering: kmeans={} ARI={:.4} NMI={:.4}",
+        fmt_secs(km_t),
+        ari,
+        nmi
+    );
+    assert!(ari > 0.8, "clustering quality regressed (ARI {ari})");
+
+    // --- the distributed algorithm on the simulated 121-rank grid ---
+    let cfg = ExperimentConfig {
+        k,
+        k_b,
+        m,
+        tol,
+        ..Default::default()
+    };
+    let row1 = dist_run(&mat, &cfg, 1);
+    let row121 = dist_run(&mat, &cfg, 121);
+    println!(
+        "[e2e] distributed Alg.4: p=1 {} -> p=121 {} (speedup {:.1}x, sqrt(121)={:.0})",
+        fmt_secs(row1.total),
+        fmt_secs(row121.total),
+        row1.total / row121.total,
+        (121f64).sqrt()
+    );
+    for (name, comp, comm) in &row121.components {
+        println!(
+            "       p=121 {:<9} compute={} comm={}",
+            name,
+            fmt_secs(*comp),
+            fmt_secs(*comm)
+        );
+    }
+    assert!(row121.converged);
+    println!("[e2e] OK — all layers composed");
+}

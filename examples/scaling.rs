@@ -1,0 +1,68 @@
+//! Distributed scaling demo (a compact Fig. 7): the simulated-grid
+//! Block Chebyshev-Davidson sweep with the per-component breakdown and
+//! the ~sqrt(p) speedup line for reference.
+//!
+//!     cargo run --release --example scaling [-- n]
+
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{dist_scaling_sweep, fmt_f, fmt_secs, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 15);
+    let cfg = ExperimentConfig {
+        k: 8,
+        k_b: 8,
+        m: 15,
+        tol: 1e-3,
+        ps: vec![1, 4, 16, 64, 121, 256, 576, 1024],
+        ..Default::default()
+    };
+    let mat = table2_matrix("LBOLBSV", n, 3);
+    println!(
+        "matrix {} n={} nnz={} | m={} k={} k_b={} tol={:.0e} | alpha={:.1e} beta={:.1e}",
+        mat.name,
+        mat.lap.nrows,
+        mat.lap.nnz(),
+        cfg.m,
+        cfg.k,
+        cfg.k_b,
+        cfg.tol,
+        cfg.alpha,
+        cfg.beta
+    );
+    let rows = dist_scaling_sweep(&mat, &cfg);
+    let base = rows[0].total;
+    let mut table = Table::new(
+        "distributed Bchdav scaling (compact Fig. 7)",
+        &["p", "total", "compute", "comm", "speedup", "sqrt(p)"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.p.to_string(),
+            fmt_secs(r.total),
+            fmt_secs(r.compute),
+            fmt_secs(r.comm),
+            fmt_f(base / r.total, 2),
+            fmt_f((r.p as f64).sqrt(), 1),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Fig. 8-style breakdown at the largest p
+    let last = rows.last().unwrap();
+    let total = last.total.max(1e-30);
+    println!("\ncomponent breakdown at p={} (compact Fig. 8):", last.p);
+    for (name, comp, comm) in &last.components {
+        println!(
+            "  {:<9} {:>6.1}%  (compute {} + comm {})",
+            name,
+            100.0 * (comp + comm) / total,
+            fmt_secs(*comp),
+            fmt_secs(*comm)
+        );
+    }
+}

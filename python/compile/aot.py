@@ -1,0 +1,162 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``).  Python never runs again after
+this; the Rust coordinator loads ``artifacts/*.hlo.txt`` through the PJRT C
+API and executes them on its hot path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape buckets
+-------------
+PJRT executables have static shapes, so each (function, shape-bucket) pair
+becomes one artifact.  The Rust runtime picks the smallest bucket that fits
+and zero-pads (zero ELL planes multiply to zero; zero rows are sliced off
+the result), exactly the bucketed-shape discipline serving systems use.
+Shapes not covered by any bucket fall back to the native Rust kernels —
+loudly, via a counter in the runtime stats (no silent fallbacks).
+
+The manifest (``artifacts/manifest.tsv``) is the runtime's index: one line
+per artifact, tab-separated ``key=value`` pairs.  A JSON copy is written
+for humans.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a 1-tuple; see load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue.  Keep buckets in sync with rust/src/runtime/registry.rs
+# (the runtime reads them from the manifest, so editing here is sufficient).
+# ---------------------------------------------------------------------------
+
+SPMM_N = (1024, 4096, 16384)
+SPMM_W = (16, 32)
+SPMM_K = (8, 16)
+FILTER_M = (11, 15)
+ROWNORM_K = (16, 32, 64)
+KMEANS_D = (16, 32)
+KMEANS_C = (16, 64)
+
+
+def catalogue():
+    """Yield (name, params, fn, example_args) for every artifact."""
+    for n in SPMM_N:
+        for w in SPMM_W:
+            for k in SPMM_K:
+                yield (
+                    f"spmm_n{n}_w{w}_k{k}",
+                    dict(kind="spmm", n=n, w=w, k=k),
+                    model.spmm,
+                    (_spec((n, w)), _spec((n, w), I32), _spec((n, k))),
+                )
+                for m in FILTER_M:
+                    yield (
+                        f"filter_n{n}_w{w}_k{k}_m{m}",
+                        dict(kind="cheb_filter", n=n, w=w, k=k, m=m),
+                        functools.partial(model.chebyshev_filter, m=m),
+                        (_spec((n, w)), _spec((n, w), I32), _spec((n, k)), _spec((3,))),
+                    )
+                yield (
+                    f"chebstep_n{n}_w{w}_k{k}",
+                    dict(kind="cheb_step", n=n, w=w, k=k),
+                    model.cheb_single_step,
+                    (
+                        _spec((n, w)),
+                        _spec((n, w), I32),
+                        _spec((n, k)),
+                        _spec((n, k)),
+                        _spec((4,)),
+                    ),
+                )
+                yield (
+                    f"residual_n{n}_w{w}_k{k}",
+                    dict(kind="residual", n=n, w=w, k=k),
+                    model.residual,
+                    (_spec((n, w)), _spec((n, w), I32), _spec((n, k)), _spec((k,))),
+                )
+    for n in (4096, 16384):
+        for k in ROWNORM_K:
+            yield (
+                f"rownorm_n{n}_k{k}",
+                dict(kind="rownorm", n=n, k=k),
+                model.features,
+                (_spec((n, k)),),
+            )
+        for d in KMEANS_D:
+            for kc in KMEANS_C:
+                yield (
+                    f"kmeans_n{n}_d{d}_c{kc}",
+                    dict(kind="kmeans_assign", n=n, d=d, kc=kc),
+                    model.kmeans_step,
+                    (_spec((n, d)), _spec((kc, d))),
+                )
+
+
+def lower_all(out_dir, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, params, fn, args in catalogue():
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        ins = ";".join(
+            f"{'x'.join(str(d) for d in a.shape)}:{'i32' if a.dtype == I32 else 'f32'}"
+            for a in args
+        )
+        entry = dict(name=name, file=fname, inputs=ins, **params)
+        manifest.append(entry)
+        if verbose:
+            print(f"  {name:<40s} {len(text):>9d} chars", file=sys.stderr)
+    # TSV for the Rust runtime (hand-rolled parser), JSON for humans.
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for e in manifest:
+            f.write("\t".join(f"{k}={v}" for k, v in e.items()) + "\n")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    entries = lower_all(args.out, only=args.only)
+    print(f"wrote {len(entries)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the distributed Block Chebyshev-Davidson stack.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are validated against the pure-jnp oracles in
+``ref.py`` by the pytest suite, and the lowered HLO is what the Rust
+runtime executes.
+"""
+
+from .cheb import cheb_step
+from .kmeans import kmeans_assign
+from .rownorm import rownorm
+from .spmm_ell import spmm_ell
+
+__all__ = ["cheb_step", "kmeans_assign", "rownorm", "spmm_ell"]

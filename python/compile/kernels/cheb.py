@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: fused three-term Chebyshev recurrence step.
+
+The unfused schedule per filter degree is SpMM -> subtract -> scale ->
+subtract (four passes over the N x k panels).  This kernel fuses the whole
+Alg. 3 step 8 of the paper,
+
+    W = (2*sigma1/e) * (A@U - c*U) - sigma*sigma1 * V,
+
+into a single pass: the gather/FMA loop accumulates A@U per row tile and
+the epilogue applies the recurrence coefficients while the tile is still in
+VMEM.  This matters because the filter is memory-bound: fusing removes two
+full reads and one full write of the (N, k) panel per degree.
+
+The recurrence scalars are passed as a length-4 f32 operand (c, e, sigma,
+sigma1) so one compiled artifact serves every filter window — the bounds
+change every outer Bchdav iteration (low_nwb tracks the Ritz median,
+Alg. 2 step 18) and must NOT be baked into the executable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmm_ell import _round_tile
+
+
+def _cheb_step_kernel(scal_ref, vals_ref, cols_ref, u_ref, v_ref, w_ref, *, width, tile):
+    i = pl.program_id(0)
+    c = scal_ref[0]
+    e = scal_ref[1]
+    sigma = scal_ref[2]
+    sigma1 = scal_ref[3]
+    vals = vals_ref[...]  # (T, W)
+    cols = cols_ref[...]  # (T, W)
+    u = u_ref[...]  # (M, k) resident gather panel
+    acc = jnp.zeros((tile, u.shape[1]), jnp.float32)
+    for w in range(width):
+        acc = acc + vals[:, w : w + 1] * u[cols[:, w], :]
+    # Epilogue: the local rows of U are the same tile of the resident panel
+    # (square A in the sequential artifact), loaded with a dynamic slice.
+    u_loc = u_ref[pl.dslice(i * tile, tile), :]
+    v_loc = v_ref[...]
+    w_ref[...] = (2.0 * sigma1 / e) * (acc - c * u_loc) - (sigma * sigma1) * v_loc
+
+
+def cheb_step(vals, cols, u, v, scal, *, tile_rows=512, interpret=True):
+    """Fused W = (2*sigma1/e)(A@U - cU) - sigma*sigma1*V.
+
+    vals/cols (N, W), u (N, k) (also the gather panel), v (N, k),
+    scal = f32[4] = [c, e, sigma, sigma1].
+    """
+    n, width = vals.shape
+    k = u.shape[1]
+    t = _round_tile(n, tile_rows)
+    kernel = functools.partial(_cheb_step_kernel, width=width, tile=t)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((t, width), lambda i: (i, 0)),
+            pl.BlockSpec((t, width), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(scal, vals, cols, u, v)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: K-means assignment step.
+
+Step 4 of the spectral clustering pipeline (Alg. 1): Lloyd's assignment of
+each feature row to its nearest centroid.  The distance matrix for a row
+tile is computed via the expansion ||p - c||^2 = ||p||^2 - 2 p.c + ||c||^2;
+the p.c term is a (T, d) x (d, K) matmul, which is the MXU-friendly
+formulation (vs. the broadcast-subtract form that never touches the MXU).
+The centroid panel (K, d) is tiny and stays resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmm_ell import _round_tile
+
+
+def _kmeans_assign_kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]  # (T, d)
+    c = c_ref[...]  # (K, d)
+    # ||p||^2 is constant across candidates -> dropped from the argmin.
+    d2 = -2.0 * (p @ c.T) + jnp.sum(c * c, axis=1)[None, :]
+    o_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+
+
+def kmeans_assign(points, centroids, *, tile_rows=1024, interpret=True):
+    """assign[i] = argmin_k ||points[i] - centroids[k]||^2, as (N, 1) i32."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    t = _round_tile(n, tile_rows)
+    return pl.pallas_call(
+        _kmeans_assign_kernel,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(points, centroids)

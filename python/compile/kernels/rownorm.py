@@ -1,0 +1,34 @@
+"""L1 Pallas kernel: row-wise L2 normalization.
+
+Step 3 of the spectral clustering pipeline (Alg. 1 of the paper): each row
+of the eigenvector matrix is normalized to unit length before K-means.
+Trivially parallel over row tiles; one pass, fused norm + divide.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmm_ell import _round_tile
+
+_EPS = 1e-12
+
+
+def _rownorm_kernel(x_ref, y_ref):
+    x = x_ref[...]
+    nrm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    y_ref[...] = x / jnp.maximum(nrm, _EPS)
+
+
+def rownorm(x, *, tile_rows=1024, interpret=True):
+    """y[i, :] = x[i, :] / max(||x[i, :]||_2, eps)."""
+    n, k = x.shape
+    t = _round_tile(n, tile_rows)
+    return pl.pallas_call(
+        _rownorm_kernel,
+        grid=(n // t,),
+        in_specs=[pl.BlockSpec((t, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(x)

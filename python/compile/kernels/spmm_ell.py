@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: ELL-format sparse x tall-skinny dense SpMM.
+
+This is the compute hot-spot of the whole paper: every Chebyshev filter
+application is m back-to-back SpMMs (Alg. 3), and the filter dominates the
+per-iteration cost of the distributed Block Chebyshev-Davidson method
+(Table 1 / Fig. 8 of the paper).
+
+TPU adaptation (see DESIGN.md §Hardware adaptation): instead of the CSR
+SpMM the paper's MPI ranks run, the sparse block is stored in ELL format —
+``row_width`` parallel (value, column) planes — so the kernel body is a
+*regular* gather + multiply-accumulate with fully static shapes.  BlockSpec
+tiles the row dimension into VMEM-sized chunks; the dense panel ``x`` stays
+resident (it is the quantity the 1.5D algorithm replicates per grid column,
+so keeping it in fast memory mirrors the paper's communication schedule).
+The accumulation over the ``row_width`` axis is a static unroll of vector
+FMAs — on a real TPU these map onto the VPU lanes; under interpret=True we
+validate numerics on CPU.
+
+Rows longer than ``row_width`` are handled by the Rust coordinator's HYB
+overflow path (sparse/ell.rs), so the kernel never truncates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_tile(n, want):
+    """Largest divisor of n that is <= want (grid tiles must divide N)."""
+    t = min(want, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _spmm_ell_kernel(vals_ref, cols_ref, x_ref, y_ref, *, width):
+    """One row-tile: y_tile = A_tile @ x  (A_tile in ELL planes)."""
+    vals = vals_ref[...]  # (T, W) f32
+    cols = cols_ref[...]  # (T, W) i32
+    x = x_ref[...]  # (M, k) f32 — resident panel
+    acc = jnp.zeros((vals.shape[0], x.shape[1]), jnp.float32)
+    # Static unroll over the ELL planes: each plane is one gather + FMA.
+    for w in range(width):
+        acc = acc + vals[:, w : w + 1] * x[cols[:, w], :]
+    y_ref[...] = acc
+
+
+def spmm_ell(vals, cols, x, *, tile_rows=512, interpret=True):
+    """y = A @ x with A in ELL format.
+
+    vals (N, W) f32, cols (N, W) i32, x (M, k) f32 -> y (N, k) f32.
+
+    ``tile_rows`` is the VMEM row-tile target; it is clipped to a divisor
+    of N.  VMEM footprint per tile ~= T*W*(4+4) + M*k*4 + T*k*4 bytes; the
+    AOT buckets in aot.py are chosen so this stays well under 16 MiB for
+    the row tile (the x panel residency is the deliberate trade — see
+    DESIGN.md §Perf).
+    """
+    n, width = vals.shape
+    t = _round_tile(n, tile_rows)
+    grid = (n // t,)
+    kernel = functools.partial(_spmm_ell_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, width), lambda i: (i, 0)),
+            pl.BlockSpec((t, width), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, x.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, x.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, x)

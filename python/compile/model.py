@@ -1,0 +1,81 @@
+"""L2: JAX compute graphs composed from the L1 Pallas kernels.
+
+These are the functions that get AOT-lowered to HLO text by aot.py and
+executed from the Rust coordinator's hot path.  The headline graph is the
+fused degree-m Chebyshev filter: a single lowered module that runs the
+whole three-term recurrence as a ``lax.scan`` over the fused cheb_step
+kernel — one dispatch per filter application instead of one per degree,
+and no Python anywhere near the request path.
+
+Filter-window scalars (a, b, a0) are *runtime operands* (f32[3]) because
+the window moves every Bchdav iteration (low_nwb = Ritz median, Alg. 2
+step 18); only shapes and the degree m are baked into an artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cheb_step, kmeans_assign, rownorm, spmm_ell
+
+
+def spmm(vals, cols, x):
+    """y = A @ x, A in ELL format (thin L2 wrapper over the L1 kernel)."""
+    return spmm_ell(vals, cols, x)
+
+
+def chebyshev_filter(vals, cols, v, bounds, *, m):
+    """Degree-m Chebyshev filter (Algorithm 3), fully fused.
+
+    bounds = f32[3] = [a, b, a0] with Alg. 3's semantics: a = lower bound
+    of the *unwanted* eigenvalues (low_nwb), b = upper bound of the whole
+    spectrum, a0 = lower bound of the whole spectrum.  For the symmetric
+    normalized Laplacian a0=0 and b=2 are known analytically (the paper's
+    core efficiency argument); only the cut `a` moves between iterations.
+
+    Degree 1 is the base map (A@V - cV) * sigma/e; degrees 2..m run the
+    fused recurrence kernel under lax.scan with the sigma update
+    sigma' = 1/(tau - sigma) carried in-graph.
+    """
+    a, b, a0 = bounds[0], bounds[1], bounds[2]
+    c = (a + b) / 2.0
+    e = (b - a) / 2.0
+    sigma = e / (a0 - c)
+    tau = 2.0 / sigma
+
+    u = (spmm_ell(vals, cols, v) - c * v) * (sigma / e)
+    if m <= 1:
+        return u
+
+    def step(carry, _):
+        v_prev, u_cur, sig = carry
+        sig1 = 1.0 / (tau - sig)
+        scal = jnp.stack([c, e, sig, sig1])
+        w = cheb_step(vals, cols, u_cur, v_prev, scal)
+        return (u_cur, w, sig1), ()
+
+    (_, u, _), _ = jax.lax.scan(step, (v, u, sigma), None, length=m - 1)
+    return u
+
+
+def cheb_single_step(vals, cols, u, v, scal):
+    """One fused recurrence step (distributed path: the Rust coordinator
+    interleaves these with grid-transpose communication, Alg. 5)."""
+    return cheb_step(vals, cols, u, v, scal)
+
+
+def residual(vals, cols, v, d):
+    """Residual block r = A@V - V*diag(d) (Alg. 2/4 step 12).
+
+    d is f32[k]; returns (N, k).
+    """
+    return spmm_ell(vals, cols, v) - v * d[None, :]
+
+
+def features(v):
+    """Eigenvectors -> row-normalized feature matrix (Alg. 1 step 4)."""
+    return rownorm(v)
+
+
+def kmeans_step(points, centroids):
+    """Lloyd assignment (Alg. 1 step 5's inner loop).  Returns (N, 1) i32."""
+    return kmeans_assign(points, centroids)

@@ -1,0 +1,116 @@
+"""L1/L2 correctness: fused Chebyshev step kernel and the full degree-m
+filter graph vs oracles, plus the filter's *mathematical* contract: it must
+amplify the wanted (small-eigenvalue) invariant subspace of a normalized
+Laplacian relative to the unwanted one.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import cheb_step
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _laplacian_ell(rng, n, width=24, density=0.15):
+    """Random symmetric normalized Laplacian in ELL form + dense copy."""
+    s = (rng.random((n, n)) < density).astype(np.float64)
+    s = np.triu(s, 1)
+    s = s + s.T
+    deg = np.maximum(s.sum(1), 1.0)
+    dinv = 1.0 / np.sqrt(deg)
+    lap = np.eye(n) - dinv[:, None] * s * dinv[None, :]
+    vals, cols = ref.ell_from_dense(lap, width)
+    return lap, vals, cols
+
+
+@given(
+    n=st.sampled_from([16, 48, 64]),
+    k=st.integers(1, 8),
+    tile=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cheb_step_matches_ref(n, k, tile, seed):
+    rng = np.random.default_rng(seed)
+    _, vals, cols = _laplacian_ell(rng, n)
+    u = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    c, e, s, s1 = 1.0, 0.97, -1.03, 0.41
+    scal = jnp.asarray([c, e, s, s1], jnp.float32)
+    got = cheb_step(vals, cols, u, v, scal, tile_rows=tile)
+    want = ref.cheb_step_ref(vals, cols, u, v, c, e, s, s1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.sampled_from([1, 2, 3, 7, 11]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filter_matches_ref(m, seed):
+    rng = np.random.default_rng(seed)
+    n, k = 48, 4
+    _, vals, cols = _laplacian_ell(rng, n)
+    v = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    bounds = jnp.asarray([0.1, 2.0, 0.0], jnp.float32)  # cut, top, bottom
+    got = model.chebyshev_filter(vals, cols, v, bounds, m=m)
+    want = ref.chebyshev_filter_ref(vals, cols, v, 0.1, 2.0, 0.0, m)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_filter_amplifies_wanted_subspace():
+    """After filtering, the component of a random block along the smallest
+    eigenvectors must dominate — the property Davidson relies on.
+
+    Uses a planted spectrum (8 wanted eigenvalues in [0, .2], rest in
+    [.8, 2]) so the amplification factor is determined by the designed gap
+    rather than by a random graph's (possibly tiny) spectral gap.
+    """
+    rng = np.random.default_rng(3)
+    n, k, m = 64, 4, 15
+    evals = np.concatenate([np.linspace(0.0, 0.2, 8), np.linspace(0.8, 2.0, n - 8)])
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lap = (q * evals) @ q.T
+    vals, cols = ref.ell_from_dense(lap, n)
+    evecs = q
+    cut = 0.5  # inside the designed gap: dampen [cut, 2], amplify [0, cut)
+    v = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    out = np.asarray(
+        model.chebyshev_filter(vals, cols, v, jnp.asarray([cut, 2.0, 0.0], jnp.float32), m=m)
+    )
+    # energy in wanted (first 8) vs unwanted eigendirections, per column
+    want_e = np.linalg.norm(evecs[:, :8].T @ out) ** 2
+    unw_e = np.linalg.norm(evecs[:, 8:].T @ out) ** 2
+    assert want_e > 50.0 * unw_e, (want_e, unw_e)
+
+
+def test_filter_eigenvector_invariance():
+    """phi(A) v = phi(lambda) v for an exact eigenvector."""
+    rng = np.random.default_rng(11)
+    n, m = 64, 7
+    lap, vals, cols = _laplacian_ell(rng, n)
+    evals, evecs = np.linalg.eigh(lap)
+    i = 2
+    v = jnp.asarray(evecs[:, [i]], jnp.float32)
+    cut = float(evals[6])  # dampen [cut, 2], v's eigenvalue is below it
+    out = np.asarray(
+        model.chebyshev_filter(vals, cols, v, jnp.asarray([cut, 2.0, 0.0], jnp.float32), m=m)
+    )
+    # the output must stay parallel to v
+    cosine = abs(float(out[:, 0] @ evecs[:, i]) / np.linalg.norm(out))
+    assert cosine > 1 - 1e-4
+
+
+def test_residual_matches_definition():
+    rng = np.random.default_rng(5)
+    n, k = 48, 4
+    lap, vals, cols = _laplacian_ell(rng, n)
+    v = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((k,)), jnp.float32)
+    got = model.residual(vals, cols, v, d)
+    want = np.asarray(lap, np.float32) @ np.asarray(v) - np.asarray(v) * np.asarray(d)[None, :]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,67 @@
+"""L1 correctness: rownorm + kmeans assignment kernels vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans_assign, rownorm
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    n=st.sampled_from([8, 33, 128]),
+    k=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rownorm_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    np.testing.assert_allclose(
+        rownorm(x, tile_rows=16), ref.rownorm_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rownorm_zero_row_is_safe():
+    x = jnp.zeros((8, 4), jnp.float32)
+    out = np.asarray(rownorm(x, tile_rows=4))
+    assert np.all(np.isfinite(out)) and np.all(out == 0.0)
+
+
+def test_rownorm_unit_rows():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 6)), jnp.float32)
+    out = np.asarray(rownorm(x))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=1), 1.0, rtol=1e-5)
+
+
+@given(
+    n=st.sampled_from([16, 64, 100]),
+    d=st.integers(2, 8),
+    kc=st.integers(2, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(n, d, kc, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((kc, d)), jnp.float32)
+    got = np.ravel(kmeans_assign(pts, cent, tile_rows=16))
+    want = np.asarray(ref.kmeans_assign_ref(pts, cent))
+    # ties can legitimately differ; compare achieved distances instead
+    pn = np.asarray(pts)
+    cn = np.asarray(cent)
+    dg = np.linalg.norm(pn - cn[got], axis=1)
+    dw = np.linalg.norm(pn - cn[want], axis=1)
+    np.testing.assert_allclose(dg, dw, rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_assign_obvious_clusters():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((20, 3)) * 0.01 + 10.0
+    b = rng.standard_normal((20, 3)) * 0.01 - 10.0
+    pts = jnp.asarray(np.vstack([a, b]), jnp.float32)
+    cent = jnp.asarray([[10.0, 10.0, 10.0], [-10.0, -10.0, -10.0]], jnp.float32)
+    got = np.ravel(kmeans_assign(pts, cent, tile_rows=8))
+    assert np.all(got[:20] == 0) and np.all(got[20:] == 1)

@@ -1,0 +1,43 @@
+//! Shared helpers for the figure/table bench harnesses.
+//!
+//! Every bench is a plain `harness = false` binary (criterion is not in
+//! the offline crate set): it regenerates one table or figure from the
+//! paper's evaluation section, printing the same rows/series the paper
+//! plots and saving a JSON copy under results/.
+//!
+//! Scale knobs: `CHEBDAV_BENCH_N` overrides the default (laptop-sized)
+//! node counts; `CHEBDAV_BENCH_FULL=1` switches to the larger
+//! paper-shaped sizes.
+
+#![allow(dead_code)]
+
+pub fn bench_n(default: usize) -> usize {
+    if let Ok(v) = std::env::var("CHEBDAV_BENCH_N") {
+        if let Ok(n) = v.parse() {
+            return n;
+        }
+    }
+    if full() {
+        default * 4
+    } else {
+        default
+    }
+}
+
+pub fn full() -> bool {
+    std::env::var("CHEBDAV_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn banner(fig: &str, paper_claim: &str) {
+    println!("==================================================================");
+    println!("{fig}");
+    println!("paper: {paper_claim}");
+    println!("==================================================================");
+}
+
+pub fn save(name: &str, table: &dist_chebdav::coordinator::Table) {
+    match dist_chebdav::coordinator::save_json(name, &table.to_json()) {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => println!("[json save failed: {e}]"),
+    }
+}

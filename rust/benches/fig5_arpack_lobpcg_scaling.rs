@@ -1,0 +1,50 @@
+//! Fig. 5 — scalability of parallel ARPACK and LOBPCG (k=64, tol .01,
+//! LBOLBSV(SG)-1M scaled down) up to p=1024.
+//!
+//! Paper shape to reproduce: both speedups flatten past a few hundred
+//! processes — per-iteration (re)orthogonalization collectives stop
+//! scaling while the local work keeps shrinking.
+
+mod common;
+
+use dist_chebdav::coordinator::{fmt_f, fmt_secs, Table};
+use dist_chebdav::dist::{arpack_scaling, lobpcg_scaling};
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::mpi_sim::CostModel;
+
+fn main() {
+    let n = common::bench_n(8_192);
+    let k = if common::full() { 64 } else { 16 };
+    common::banner("Fig5", "ARPACK/LOBPCG speedup flattens past ~256 processes");
+    let mat = table2_matrix("LBOLBSV", n, 9);
+    let ps = [1usize, 4, 16, 64, 121, 256, 576, 1024];
+    let cost = CostModel::default();
+    let mut table = Table::new(
+        &format!("Fig5: parallel eigensolver scaling, n={n}, k={k}, tol=.01"),
+        &["solver", "p", "time", "speedup", "compute", "comm"],
+    );
+    for scaling in [
+        arpack_scaling(&mat.lap, k, 0.01, &ps, &cost),
+        lobpcg_scaling(&mat.lap, k, 0.01, &ps, &cost),
+    ] {
+        println!(
+            "{}: sequential run {} ({} iterations, converged={})",
+            scaling.solver,
+            fmt_secs(scaling.seq_compute),
+            scaling.iterations,
+            scaling.converged
+        );
+        for pt in &scaling.points {
+            table.row(&[
+                scaling.solver.to_string(),
+                pt.p.to_string(),
+                fmt_secs(pt.time),
+                fmt_f(pt.speedup, 2),
+                fmt_secs(pt.compute),
+                fmt_secs(pt.comm),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    common::save("fig5", &table);
+}

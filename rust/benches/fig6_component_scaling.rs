@@ -1,0 +1,37 @@
+//! Fig. 6 — scaling of local computation vs communication in one
+//! distributed Chebyshev filter (m=11), one SpMM, and one TSQR, on the
+//! HBOLBSV matrix, k=8 vectors.
+//!
+//! Paper shape to reproduce: filter/SpMM speedup ~ sqrt(p) (bandwidth
+//! term 2 N k / sqrt(p) dominates); TSQR communication does not scale
+//! (k^2 log p) but its absolute cost is tiny.
+
+mod common;
+
+use dist_chebdav::coordinator::{component_scaling, fmt_secs, Table};
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::mpi_sim::CostModel;
+
+fn main() {
+    let n = common::bench_n(16_384);
+    common::banner("Fig6", "filter/SpMM comm shrinks ~1/sqrt(p); TSQR comm grows ~log p");
+    let mat = table2_matrix("HBOLBSV", n, 13);
+    let ps = [4usize, 16, 64, 121, 256, 576, 1024];
+    let cost = CostModel::default();
+    let reps = 3;
+    let rows = component_scaling(&mat, 11, 8, &ps, &cost, reps);
+    let mut table = Table::new(
+        &format!("Fig6: component local-compute vs comm, {} n={n} m=11 k=8", mat.name),
+        &["component", "p", "local compute", "communication"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.component.to_string(),
+            r.p.to_string(),
+            fmt_secs(r.compute),
+            fmt_secs(r.comm),
+        ]);
+    }
+    print!("{}", table.render());
+    common::save("fig6", &table);
+}

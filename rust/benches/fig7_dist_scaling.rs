@@ -1,0 +1,65 @@
+//! Fig. 7 — scaling of the whole distributed Block Chebyshev-Davidson
+//! algorithm and its components, on the four Table 2 matrices
+//! (tol = 1e-3, m = 15; k/k_b per matrix exactly as the paper:
+//! LBOLBSV k=k_b=16, HBOHBSV/MAWI/Graph500 k=k_b=4).
+//!
+//! Paper shape to reproduce: whole-algorithm speedup ~ sqrt(p), carried
+//! by the dominant Chebyshev filter.
+
+mod common;
+
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{dist_scaling_sweep, fmt_f, fmt_secs, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    let n = common::bench_n(8_192);
+    common::banner("Fig7", "distributed Bchdav speedup ~ sqrt(p), filter dominant");
+    let cases = [
+        ("LBOLBSV", 16usize, 16usize),
+        ("HBOHBSV", 4, 4),
+        ("MAWI", 4, 4),
+        ("Graph500", 4, 4),
+    ];
+    let ps = vec![1usize, 4, 16, 64, 121, 256, 576, 1024];
+    let mut table = Table::new(
+        &format!("Fig7: distributed Bchdav scaling, n~{n}, m=15, tol=1e-3"),
+        &["matrix", "p", "total", "filter", "orth", "other", "speedup", "sqrt(p)"],
+    );
+    for (name, k, k_b) in cases {
+        let mat = table2_matrix(name, n, 31);
+        let cfg = ExperimentConfig {
+            k,
+            k_b,
+            m: 15,
+            tol: 1e-3,
+            ps: ps.clone(),
+            ..Default::default()
+        };
+        let rows = dist_scaling_sweep(&mat, &cfg);
+        let base = rows[0].total;
+        for r in &rows {
+            let find = |c: &str| {
+                r.components
+                    .iter()
+                    .find(|(n_, _, _)| n_ == c)
+                    .map(|(_, a, b)| a + b)
+                    .unwrap_or(0.0)
+            };
+            let filter = find("filter");
+            let orth = find("orth");
+            table.row(&[
+                mat.name.clone(),
+                r.p.to_string(),
+                fmt_secs(r.total),
+                fmt_secs(filter),
+                fmt_secs(orth),
+                fmt_secs(r.total - filter - orth),
+                fmt_f(base / r.total, 2),
+                fmt_f((r.p as f64).sqrt(), 1),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    common::save("fig7", &table);
+}

@@ -1,0 +1,59 @@
+//! Fig. 8 — percentage of CPU time per component at p = 121, for the
+//! same runs as Fig. 7.
+//!
+//! Paper shape to reproduce: the Chebyshev filter dominates (the whole
+//! reason the algorithm stays scalable even though orthonormalization
+//! does not scale).
+
+mod common;
+
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{dist_run, fmt_f, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    let n = common::bench_n(8_192);
+    common::banner("Fig8", "filter dominates the per-component time split at p=121");
+    let cases = [
+        ("LBOLBSV", 16usize, 16usize),
+        ("HBOHBSV", 4, 4),
+        ("MAWI", 4, 4),
+        ("Graph500", 4, 4),
+    ];
+    let mut table = Table::new(
+        &format!("Fig8: CPU-time percentage per component at p=121, n~{n}"),
+        &["matrix", "filter%", "spmm%", "orth%", "rayleigh%", "residual%"],
+    );
+    for (name, k, k_b) in cases {
+        let mat = table2_matrix(name, n, 31);
+        let cfg = ExperimentConfig {
+            k,
+            k_b,
+            m: 15,
+            tol: 1e-3,
+            ..Default::default()
+        };
+        let row = dist_run(&mat, &cfg, 121);
+        let total = row.total.max(1e-30);
+        let pct = |c: &str| {
+            100.0
+                * row
+                    .components
+                    .iter()
+                    .find(|(n_, _, _)| n_ == c)
+                    .map(|(_, a, b)| a + b)
+                    .unwrap_or(0.0)
+                / total
+        };
+        table.row(&[
+            mat.name.clone(),
+            fmt_f(pct("filter"), 1),
+            fmt_f(pct("spmm"), 1),
+            fmt_f(pct("orth"), 1),
+            fmt_f(pct("rayleigh"), 1),
+            fmt_f(pct("residual"), 1),
+        ]);
+    }
+    print!("{}", table.render());
+    common::save("fig8", &table);
+}

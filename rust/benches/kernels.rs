@@ -1,0 +1,115 @@
+//! Kernel microbenches (not a paper figure — the §Perf instrumentation):
+//!
+//! * native CSR SpMM vs HYB(ELL) SpMM vs the PJRT-compiled Pallas
+//!   artifact, across panel widths;
+//! * Householder QR vs TSQR trees of different leaf counts;
+//! * fused PJRT Chebyshev filter vs per-degree recurrence.
+//!
+//! Used to drive the performance pass recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use dist_chebdav::coordinator::{fmt_f, fmt_secs, Table};
+use dist_chebdav::eig::SpmmOp;
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::linalg::Mat;
+use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
+use dist_chebdav::sparse::EllHyb;
+use dist_chebdav::util::{bench, Rng};
+
+fn main() {
+    let n = common::bench_n(8_192);
+    common::banner("kernels", "hot-path microbenches (EXPERIMENTS.md §Perf)");
+    let mat = table2_matrix("LBOLBSV", n, 3);
+    let a = &mat.lap;
+    let nnz = a.nnz();
+    let mut rng = Rng::new(5);
+
+    let mut table = Table::new(
+        &format!("SpMM backends, n={n} nnz={nnz}"),
+        &["backend", "k", "min time", "GF/s (2*nnz*k)"],
+    );
+    let rt = PjrtRuntime::load(&PjrtRuntime::artifacts_dir()).ok();
+    for k in [4usize, 8, 16] {
+        let x = Mat::randn(n, k, &mut rng);
+        let flops = (2 * nnz * k) as f64;
+
+        let s = bench(2, 5, || a.spmm(&x));
+        table.row(&[
+            "native CSR".into(),
+            k.to_string(),
+            fmt_secs(s.min),
+            fmt_f(flops / s.min / 1e9, 2),
+        ]);
+
+        let hyb = EllHyb::from_csr(a, EllHyb::auto_width(a, 0.98, 32));
+        let s = bench(2, 5, || hyb.spmm_native(&x));
+        table.row(&[
+            "native HYB".into(),
+            k.to_string(),
+            fmt_secs(s.min),
+            fmt_f(flops / s.min / 1e9, 2),
+        ]);
+
+        if let Some(rt) = &rt {
+            if let Ok(op) = PjrtOperator::new(rt, a, k) {
+                if op.has_pjrt_spmm() {
+                    let s = bench(2, 5, || op.spmm(&x));
+                    table.row(&[
+                        "PJRT (Pallas ELL)".into(),
+                        k.to_string(),
+                        fmt_secs(s.min),
+                        fmt_f(flops / s.min / 1e9, 2),
+                    ]);
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    common::save("kernels_spmm", &table);
+
+    // --- filter: fused artifact vs per-degree recurrence ---
+    let mut table = Table::new(
+        &format!("Chebyshev filter (m=11), n={n}"),
+        &["path", "k", "min time"],
+    );
+    for k in [8usize, 16] {
+        let v = Mat::randn(n, k, &mut rng);
+        let s = bench(1, 3, || {
+            dist_chebdav::eig::chebyshev_filter_via_spmm(a, &v, 11, 0.5, 2.0, 0.0)
+        });
+        table.row(&["native recurrence".into(), k.to_string(), fmt_secs(s.min)]);
+        if let Some(rt) = &rt {
+            if let Ok(op) = PjrtOperator::new(rt, a, k) {
+                let s = bench(1, 3, || op.cheb_filter(&v, 11, 0.5, 2.0, 0.0));
+                let label = if op.has_fused_filter(11) {
+                    "PJRT fused"
+                } else {
+                    "PJRT per-degree"
+                };
+                table.row(&[label.into(), k.to_string(), fmt_secs(s.min)]);
+            }
+        }
+    }
+    print!("{}", table.render());
+    common::save("kernels_filter", &table);
+
+    // --- orthonormalization: QR vs TSQR trees ---
+    let mut table = Table::new(
+        &format!("orthonormalization, n={n} k=16"),
+        &["path", "min time"],
+    );
+    let v = Mat::randn(n, 16, &mut rng);
+    let s = bench(1, 3, || dist_chebdav::linalg::qr_thin(&v));
+    table.row(&["Householder QR".into(), fmt_secs(s.min)]);
+    for p in [4usize, 16, 64] {
+        let cost = dist_chebdav::mpi_sim::CostModel::default();
+        let s = bench(1, 3, || {
+            let mut led = dist_chebdav::mpi_sim::Ledger::new();
+            dist_chebdav::dist::tsqr(&v, p, &cost, &mut led, "orth")
+        });
+        table.row(&[format!("TSQR ({p} leaves)"), fmt_secs(s.min)]);
+    }
+    print!("{}", table.render());
+    common::save("kernels_orth", &table);
+}

@@ -1,0 +1,56 @@
+//! Table 1 — per-iteration flops / messages / words of every component
+//! of the distributed algorithm: the analytic model evaluated at the
+//! run's parameters, cross-checked against the measured collective
+//! ledger of an actual distributed run (messages/words are counted by
+//! the simulator, so the comparison is exact up to dropped constants).
+
+mod common;
+
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{fmt_f, table1, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    let n = common::bench_n(8_192);
+    common::banner(
+        "Table1",
+        "filter: O(nnz m kb / p) flops, O(m log p) msgs, O(2 m N kb / sqrt p) words; etc.",
+    );
+    let mat = table2_matrix("LBOLBSV", n, 23);
+    let cfg = ExperimentConfig {
+        k: 16,
+        k_b: 8,
+        m: 11,
+        tol: 1e-3,
+        ..Default::default()
+    };
+    for p in [16usize, 121, 1024] {
+        let (rows, iters) = table1(&mat, &cfg, p);
+        let mut table = Table::new(
+            &format!(
+                "Table1 @ p={p}: analytic vs measured per iteration ({} iterations)",
+                iters
+            ),
+            &[
+                "component",
+                "flops (analytic)",
+                "msgs (analytic)",
+                "msgs (measured)",
+                "words (analytic)",
+                "words (measured)",
+            ],
+        );
+        for r in &rows {
+            table.row(&[
+                r.component.to_string(),
+                format!("{:.3e}", r.analytic_flops),
+                fmt_f(r.analytic_msgs, 1),
+                fmt_f(r.measured_msgs, 1),
+                format!("{:.3e}", r.analytic_words),
+                format!("{:.3e}", r.measured_words),
+            ]);
+        }
+        print!("{}", table.render());
+        common::save(&format!("table1_p{p}"), &table);
+    }
+}

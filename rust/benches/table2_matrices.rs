@@ -1,0 +1,30 @@
+//! Table 2 — properties of the evaluation matrices: N, average degree,
+//! nnz(A), and the 2D-partition load imbalance at 121 ranks (eq. 19).
+//!
+//! Paper shape to reproduce (scaled sizes): SBM categories balanced
+//! (imb ~ 1.2), MAWI-like and Graph500 heavily imbalanced (~7-9).
+
+mod common;
+
+use dist_chebdav::coordinator::{fmt_f, table2, Table};
+
+fn main() {
+    let n = common::bench_n(65_536);
+    common::banner("Table2", "load imb.: SBM ~1.2 | MAWI ~8.8 | Graph500 ~7.2 (paper values)");
+    let rows = table2(&["LBOLBSV", "HBOLBSV", "MAWI", "Graph500"], n, 1);
+    let mut table = Table::new(
+        &format!("Table2: matrix properties at 11x11 partition, n~{n}"),
+        &["matrix", "N", "avg degree", "nnz(A)", "load imb."],
+    );
+    for r in &rows {
+        table.row(&[
+            r.name.clone(),
+            r.n.to_string(),
+            fmt_f(r.avg_degree, 1),
+            r.nnz.to_string(),
+            fmt_f(r.load_imbalance, 2),
+        ]);
+    }
+    print!("{}", table.render());
+    common::save("table2", &table);
+}

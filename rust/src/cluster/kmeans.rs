@@ -1,0 +1,235 @@
+//! K-means (k-means++ init + Lloyd iterations) — step 5 of Algorithm 1.
+//!
+//! The assignment step has a PJRT-artifact twin (the Pallas
+//! `kmeans_assign` kernel); `runtime::backend` can route it through the
+//! compiled executable, and the `kernels` bench compares the two.
+
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KmeansOptions {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Independent restarts; best inertia wins (paper repeats 20x).
+    pub restarts: usize,
+    pub seed: u64,
+}
+
+impl KmeansOptions {
+    pub fn new(k: usize) -> KmeansOptions {
+        KmeansOptions {
+            k,
+            max_iters: 100,
+            restarts: 4,
+            seed: 0xc1u64,
+        }
+    }
+}
+
+pub struct KmeansResult {
+    pub assignments: Vec<u32>,
+    pub centroids: Mat,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Squared distance between row `i` of `x` and row `c` of `cent`.
+#[inline]
+fn dist2(x: &Mat, i: usize, cent: &Mat, c: usize) -> f64 {
+    x.row(i)
+        .iter()
+        .zip(cent.row(c).iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum()
+}
+
+/// k-means++ seeding.
+fn seed_centroids(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = x.rows;
+    let mut cent = Mat::zeros(k, x.cols);
+    let first = rng.below(n);
+    cent.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| dist2(x, i, &cent, 0)).collect();
+    for c in 1..k {
+        // sample proportional to current d2
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let target = rng.f64() * total;
+            let mut acc = 0.0;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                acc += w;
+                if acc >= target {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        cent.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(dist2(x, i, &cent, c));
+        }
+    }
+    cent
+}
+
+fn lloyd(x: &Mat, mut cent: Mat, max_iters: usize, rng: &mut Rng) -> KmeansResult {
+    let n = x.rows;
+    let k = cent.rows;
+    let d = x.cols;
+    let mut assign = vec![0u32; n];
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        iterations += 1;
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = 0u32;
+            let mut bd = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist2(x, i, &cent, c);
+                if dd < bd {
+                    bd = dd;
+                    best = c as u32;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && iterations > 1 {
+            break;
+        }
+        // update step
+        let mut sums = Mat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            for t in 0..d {
+                sums[(c, t)] += x[(i, t)];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // empty cluster: reseed at a random point
+                let pick = rng.below(n);
+                sums.row_mut(c).copy_from_slice(x.row(pick));
+                counts[c] = 1;
+            }
+            for t in 0..d {
+                sums[(c, t)] /= counts[c] as f64;
+            }
+        }
+        cent = sums;
+    }
+    let inertia: f64 = (0..n).map(|i| dist2(x, i, &cent, assign[i] as usize)).sum();
+    KmeansResult {
+        assignments: assign,
+        centroids: cent,
+        inertia,
+        iterations,
+    }
+}
+
+/// Full k-means with restarts; best-inertia run wins.
+pub fn kmeans(x: &Mat, opts: &KmeansOptions) -> KmeansResult {
+    assert!(opts.k >= 1 && x.rows >= opts.k);
+    let mut rng = Rng::new(opts.seed);
+    let mut best: Option<KmeansResult> = None;
+    for _ in 0..opts.restarts.max(1) {
+        let cent = seed_centroids(x, opts.k, &mut rng);
+        let run = lloyd(x, cent, opts.max_iters, &mut rng);
+        if best.as_ref().map(|b| run.inertia < b.inertia).unwrap_or(true) {
+            best = Some(run);
+        }
+    }
+    best.unwrap()
+}
+
+/// Row-wise L2 normalization (step 4 of Algorithm 1) — native twin of
+/// the `rownorm` Pallas kernel.
+pub fn row_normalize(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for i in 0..x.rows {
+        let nrm = x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nrm > 1e-12 {
+            for v in out.row_mut(i) {
+                *v /= nrm;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(k: usize, per: usize, spread: f64, rng: &mut Rng) -> (Mat, Vec<u32>) {
+        let n = k * per;
+        let mut x = Mat::zeros(n, 2);
+        let mut labels = vec![0u32; n];
+        for c in 0..k {
+            let cx = (c as f64) * 10.0;
+            let cy = (c % 2) as f64 * 10.0;
+            for i in 0..per {
+                let r = c * per + i;
+                x[(r, 0)] = cx + spread * rng.normal();
+                x[(r, 1)] = cy + spread * rng.normal();
+                labels[r] = c as u32;
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let (x, truth) = blobs(4, 50, 0.3, &mut rng);
+        let res = kmeans(&x, &KmeansOptions::new(4));
+        // assignment must be a relabeling of truth
+        let ari = crate::cluster::metrics::adjusted_rand_index(&res.assignments, &truth);
+        assert!(ari > 0.99, "ARI {ari}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(2);
+        let (x, _) = blobs(4, 40, 1.0, &mut rng);
+        let i2 = kmeans(&x, &KmeansOptions::new(2)).inertia;
+        let i4 = kmeans(&x, &KmeansOptions::new(4)).inertia;
+        assert!(i4 < i2);
+    }
+
+    #[test]
+    fn handles_k_equals_one_and_n() {
+        let mut rng = Rng::new(3);
+        let (x, _) = blobs(2, 10, 0.5, &mut rng);
+        let r1 = kmeans(&x, &KmeansOptions::new(1));
+        assert!(r1.assignments.iter().all(|&a| a == 0));
+        let rn = kmeans(
+            &x,
+            &KmeansOptions {
+                k: 20,
+                ..KmeansOptions::new(20)
+            },
+        );
+        assert_eq!(rn.assignments.len(), 20);
+    }
+
+    #[test]
+    fn row_normalize_unit_rows() {
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(30, 5, &mut rng);
+        let y = row_normalize(&x);
+        for i in 0..30 {
+            let n: f64 = y.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+}

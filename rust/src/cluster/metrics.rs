@@ -1,0 +1,158 @@
+//! External clustering-quality indexes used throughout the paper's §4.1:
+//! Adjusted Rand Index (Hubert & Arabie 1985) and Normalized Mutual
+//! Information (Danon et al. 2005). Values near 1 = strong agreement
+//! with ground truth; near 0 = independence. ARI is chance-adjusted,
+//! NMI is not (the paper makes the same remark).
+
+use std::collections::HashMap;
+
+/// Contingency table between two labelings.
+fn contingency(a: &[u32], b: &[u32]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), b.len());
+    let remap = |xs: &[u32]| -> Vec<usize> {
+        let mut map = HashMap::new();
+        xs.iter()
+            .map(|&x| {
+                let next = map.len();
+                *map.entry(x).or_insert(next)
+            })
+            .collect()
+    };
+    let ra = remap(a);
+    let rb = remap(b);
+    let ka = ra.iter().max().map(|&x| x + 1).unwrap_or(0);
+    let kb = rb.iter().max().map(|&x| x + 1).unwrap_or(0);
+    let mut table = vec![vec![0.0f64; kb]; ka];
+    for (&i, &j) in ra.iter().zip(rb.iter()) {
+        table[i][j] += 1.0;
+    }
+    let rows: Vec<f64> = table.iter().map(|r| r.iter().sum()).collect();
+    let cols: Vec<f64> = (0..kb).map(|j| table.iter().map(|r| r[j]).sum()).collect();
+    (table, rows, cols)
+}
+
+fn choose2(x: f64) -> f64 {
+    x * (x - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index in [-1, 1]; 1 = identical partitions (up to
+/// label permutation), ~0 = chance.
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> f64 {
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let sum_ij: f64 = table.iter().flatten().map(|&x| choose2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| choose2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| choose2(x)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total.max(1e-300);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-300 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information in [0, 1] (arithmetic-mean
+/// normalization, the scikit-learn default).
+pub fn normalized_mutual_information(a: &[u32], b: &[u32]) -> f64 {
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let entropy = |marg: &[f64]| -> f64 {
+        marg.iter()
+            .filter(|&&x| x > 0.0)
+            .map(|&x| {
+                let p = x / n;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let ha = entropy(&rows);
+    let hb = entropy(&cols);
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij > 0.0 {
+                let pij = nij / n;
+                mi += pij * (n * nij / (rows[i] * cols[j])).ln();
+            }
+        }
+    }
+    let denom = 0.5 * (ha + hb);
+    if denom < 1e-300 {
+        return 1.0; // both partitions trivial
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_information(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_labels_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![5, 5, 9, 9, 7, 7];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_information(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_labels_score_near_zero_ari() {
+        let mut rng = Rng::new(1);
+        let n = 4000;
+        let a: Vec<u32> = (0..n).map(|_| rng.below(5) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.below(5) as u32).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.02, "ARI {ari}");
+        // NMI is not chance-adjusted: small but positive
+        let nmi = normalized_mutual_information(&a, &b);
+        assert!(nmi < 0.05, "NMI {nmi}");
+    }
+
+    #[test]
+    fn partial_agreement_in_between() {
+        // half the points relabeled
+        let a: Vec<u32> = (0..100).map(|i| (i / 50) as u32).collect();
+        let mut b = a.clone();
+        for item in b.iter_mut().take(25) {
+            *item = 1;
+        }
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.0 && ari < 1.0, "{ari}");
+    }
+
+    #[test]
+    fn known_ari_value() {
+        // classic example: ARI is symmetric
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 1, 0, 1];
+        let ari_ab = adjusted_rand_index(&a, &b);
+        let ari_ba = adjusted_rand_index(&b, &a);
+        assert!((ari_ab - ari_ba).abs() < 1e-12);
+        assert!(ari_ab < 0.01); // orthogonal partitions
+    }
+
+    #[test]
+    fn nmi_symmetry() {
+        let mut rng = Rng::new(2);
+        let a: Vec<u32> = (0..200).map(|_| rng.below(4) as u32).collect();
+        let b: Vec<u32> = (0..200).map(|_| rng.below(3) as u32).collect();
+        let ab = normalized_mutual_information(&a, &b);
+        let ba = normalized_mutual_information(&b, &a);
+        assert!((ab - ba).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Spectral clustering (Algorithm 1 of the paper): K-means, quality
+//! indexes (ARI/NMI), and the end-to-end pipeline with pluggable
+//! eigensolvers.
+
+pub mod kmeans;
+pub mod metrics;
+pub mod pipeline;
+
+pub use kmeans::{kmeans, row_normalize, KmeansOptions, KmeansResult};
+pub use metrics::{adjusted_rand_index, normalized_mutual_information};
+pub use pipeline::{
+    default_k, quality, spectral_clustering, spectral_clustering_op, ClusteringRun, Eigensolver,
+};

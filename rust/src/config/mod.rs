@@ -1,0 +1,137 @@
+//! Configuration: a TOML-subset parser plus the typed experiment config
+//! the launcher consumes (graph spec + solver spec + grid spec).
+
+pub mod toml;
+
+pub use toml::{Toml, Value};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Typed experiment configuration — what `chebdav run <config.toml>`
+/// (and the figure benches, with their own inline defaults) consume.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// graph: one of LBOLBSV/LBOHBSV/HBOLBSV/HBOHBSV/MAWI/Graph500
+    pub graph: String,
+    pub n: usize,
+    pub seed: u64,
+    /// eigensolver parameters
+    pub k: usize,
+    pub k_b: usize,
+    pub m: usize,
+    pub tol: f64,
+    /// process counts to sweep (perfect squares are used as-is; others
+    /// are rounded down to a square for the 2D grid)
+    pub ps: Vec<usize>,
+    /// clusters for K-means (0 = use ground-truth block count)
+    pub clusters: usize,
+    /// alpha/beta overrides for the comm model
+    pub alpha: f64,
+    pub beta: f64,
+    /// execute the SpMM hot path through the PJRT artifacts
+    pub use_pjrt: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            graph: "LBOLBSV".into(),
+            n: 1 << 14,
+            seed: 42,
+            k: 16,
+            k_b: 8,
+            m: 11,
+            tol: 1e-3,
+            ps: vec![1, 4, 16, 64, 121, 256, 576, 1024],
+            clusters: 0,
+            alpha: 2.0e-6,
+            beta: 1.0e-9,
+            use_pjrt: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let t = Toml::parse(text)?;
+        let d = ExperimentConfig::default();
+        Ok(ExperimentConfig {
+            name: t.get_or("", "name", d.name.clone(), |v| {
+                v.as_str().map(String::from)
+            }),
+            graph: t.get_or("graph", "kind", d.graph.clone(), |v| {
+                v.as_str().map(String::from)
+            }),
+            n: t.get_or("graph", "n", d.n, |v| v.as_int().map(|i| i as usize)),
+            seed: t.get_or("graph", "seed", d.seed, |v| v.as_int().map(|i| i as u64)),
+            k: t.get_or("solver", "k", d.k, |v| v.as_int().map(|i| i as usize)),
+            k_b: t.get_or("solver", "k_b", d.k_b, |v| v.as_int().map(|i| i as usize)),
+            m: t.get_or("solver", "m", d.m, |v| v.as_int().map(|i| i as usize)),
+            tol: t.get_or("solver", "tol", d.tol, |v| v.as_float()),
+            ps: t.get_or("grid", "ps", d.ps.clone(), |v| v.as_usize_array()),
+            clusters: t.get_or("cluster", "clusters", d.clusters, |v| {
+                v.as_int().map(|i| i as usize)
+            }),
+            alpha: t.get_or("comm", "alpha", d.alpha, |v| v.as_float()),
+            beta: t.get_or("comm", "beta", d.beta, |v| v.as_float()),
+            use_pjrt: t.get_or("runtime", "use_pjrt", d.use_pjrt, |v| v.as_bool()),
+        })
+    }
+
+    pub fn cost_model(&self) -> crate::mpi_sim::CostModel {
+        crate::mpi_sim::CostModel {
+            alpha: self.alpha,
+            beta: self.beta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let c = ExperimentConfig::from_toml("name = \"x\"").unwrap();
+        assert_eq!(c.name, "x");
+        assert_eq!(c.k, 16);
+        assert!(!c.use_pjrt);
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let text = r#"
+name = "fig7-mawi"
+[graph]
+kind = "MAWI"
+n = 32768
+seed = 9
+[solver]
+k = 4
+k_b = 4
+m = 15
+tol = 1e-3
+[grid]
+ps = [1, 121, 1024]
+[comm]
+alpha = 1e-6
+beta = 2e-9
+[runtime]
+use_pjrt = true
+"#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.graph, "MAWI");
+        assert_eq!(c.ps, vec![1, 121, 1024]);
+        assert_eq!(c.alpha, 1e-6);
+        assert!(c.use_pjrt);
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal TOML-subset parser for experiment config files (the offline
+//! crate set has no `toml`/serde). Supported: `[section]` headers,
+//! `key = value` with string / integer / float / boolean / flat-array
+//! values, `#` comments. That covers every config this repo ships.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|x| x.as_int().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    /// section -> key -> value; top-level keys live in section "".
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_or<T>(&self, section: &str, key: &str, default: T, f: impl Fn(&Value) -> Option<T>) -> T {
+        self.get(section, key).and_then(f).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string {s:?}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array {s:?}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(|x| x.trim())
+            .filter(|x| !x.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# experiment config
+name = "fig7"
+[graph]
+kind = "LBOLBSV"   # category
+n = 65536
+[solver]
+k = 16
+k_b = 16
+m = 15
+tol = 1e-3
+ps = [1, 4, 16, 64]
+warm = true
+"#;
+        let t = Toml::parse(text).unwrap();
+        assert_eq!(t.get("", "name").unwrap().as_str(), Some("fig7"));
+        assert_eq!(t.get("graph", "n").unwrap().as_int(), Some(65536));
+        assert_eq!(t.get("solver", "tol").unwrap().as_float(), Some(1e-3));
+        assert_eq!(
+            t.get("solver", "ps").unwrap().as_usize_array(),
+            Some(vec![1, 4, 16, 64])
+        );
+        assert_eq!(t.get("solver", "warm").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Toml::parse("[oops").is_err());
+        assert!(Toml::parse("key value").is_err());
+        assert!(Toml::parse("k = @@").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let t = Toml::parse("s = \"a#b\"").unwrap();
+        assert_eq!(t.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+}

@@ -1,0 +1,300 @@
+//! Hand-rolled CLI (no clap in the offline crate set): the `chebdav`
+//! launcher. Subcommands:
+//!
+//!   chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --pjrt]
+//!   chebdav cluster [same flags]               # Algorithm 1 end-to-end
+//!   chebdav scale   <config.toml>              # Fig. 7-style sweep
+//!   chebdav table2  [--n N]                    # matrix properties
+//!   chebdav info                               # runtime / artifact info
+
+use super::experiments::{self, ledger_to_row};
+use super::report::{fmt_f, fmt_secs, Table};
+use crate::cluster::{quality, spectral_clustering, Eigensolver};
+use crate::config::ExperimentConfig;
+use crate::eig::{bchdav, BchdavOptions, SpmmOp};
+use crate::graph::table2_matrix;
+use crate::runtime::{PjrtOperator, PjrtRuntime};
+use anyhow::{bail, Context, Result};
+
+pub struct Args {
+    pub flags: std::collections::BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut flags = std::collections::BTreeMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { flags, positional }
+}
+
+impl Args {
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn config_from_args(args: &Args) -> ExperimentConfig {
+    ExperimentConfig {
+        graph: args.get("graph", "LBOLBSV".to_string()),
+        n: args.get("n", 1 << 13),
+        seed: args.get("seed", 42u64),
+        k: args.get("k", 16),
+        k_b: args.get("kb", 4),
+        m: args.get("m", 11),
+        tol: args.get("tol", 1e-2),
+        use_pjrt: args.has("pjrt"),
+        ..Default::default()
+    }
+}
+
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "solve" => cmd_solve(&args),
+        "cluster" => cmd_cluster(&args),
+        "scale" => cmd_scale(&args),
+        "table2" => cmd_table2(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `chebdav help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "chebdav — distributed Block Chebyshev-Davidson spectral clustering
+
+USAGE:
+  chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --seed S --pjrt]
+  chebdav cluster [--graph G --n N --k K --kb B --m M --tol T --seed S]
+  chebdav scale   <config.toml>
+  chebdav table2  [--n N --seed S]
+  chebdav info
+
+GRAPHS: LBOLBSV LBOHBSV HBOLBSV HBOHBSV MAWI Graph500"
+    );
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
+    let mut opts = BchdavOptions::for_laplacian(cfg.k, cfg.k_b, cfg.m, cfg.tol);
+    opts.seed = cfg.seed;
+    println!(
+        "solving {} (n={}, nnz={}) for k={} smallest eigenpairs (k_b={}, m={}, tol={:.0e}, backend={})",
+        mat.name,
+        mat.lap.nrows,
+        mat.lap.nnz(),
+        cfg.k,
+        cfg.k_b,
+        cfg.m,
+        cfg.tol,
+        if cfg.use_pjrt { "pjrt" } else { "native" },
+    );
+    let (res, dt) = if cfg.use_pjrt {
+        let rt = PjrtRuntime::load(&PjrtRuntime::artifacts_dir())?;
+        let op = PjrtOperator::new(&rt, &mat.lap, cfg.k_b).context("PJRT operator")?;
+        let out = crate::util::time_it(|| bchdav(&op, &opts, None));
+        let stats = rt.stats.borrow();
+        println!(
+            "pjrt: {} artifact calls, {} native fallbacks, {} compilations, mean pad ratio {:.2}",
+            stats.pjrt_calls,
+            stats.native_fallbacks,
+            stats.compilations,
+            stats.mean_pad_ratio()
+        );
+        out
+    } else {
+        crate::util::time_it(|| bchdav(&mat.lap, &opts, None))
+    };
+    println!(
+        "converged={} iterations={} spmm_count={} time={}",
+        res.converged,
+        res.iterations,
+        res.spmm_count,
+        fmt_secs(dt)
+    );
+    let shown = res.eigenvalues.len().min(cfg.k);
+    println!("eigenvalues: {:?}", &res.eigenvalues[..shown]);
+    for (name, secs, pct) in res.timers.breakdown() {
+        println!("  {name:<10} {:<12} {:.1}%", fmt_secs(secs), pct);
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
+    let truth = mat
+        .labels
+        .as_ref()
+        .context("graph has no ground-truth labels (use an SBM category)")?;
+    let clusters = (*truth.iter().max().unwrap() + 1) as usize;
+    let solver = Eigensolver::Bchdav {
+        k_b: cfg.k_b,
+        m: cfg.m,
+        tol: cfg.tol,
+    };
+    println!(
+        "spectral clustering on {} (n={}, {} ground-truth blocks, k={})",
+        mat.name, cfg.n, clusters, cfg.k
+    );
+    let run = spectral_clustering(&mat.lap, cfg.k, clusters, &solver, cfg.seed);
+    let (ari, nmi) = quality(&run, truth);
+    println!(
+        "solver={} converged={} eig={} cluster={} ARI={:.4} NMI={:.4}",
+        run.solver,
+        run.converged,
+        fmt_secs(run.eig_seconds),
+        fmt_secs(run.cluster_seconds),
+        ari,
+        nmi
+    );
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: chebdav scale <config.toml>")?;
+    let cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+    let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
+    println!(
+        "scaling sweep `{}` on {} (n={}, nnz={}), ps={:?}",
+        cfg.name,
+        mat.name,
+        mat.lap.nrows,
+        mat.lap.nnz(),
+        cfg.ps
+    );
+    let mut table = Table::new(
+        &format!("distributed Bchdav scaling — {}", cfg.name),
+        &["p", "total", "compute", "comm", "speedup", "iters"],
+    );
+    let mut base = None;
+    for &p in &cfg.ps {
+        let row = experiments::dist_run(&mat, &cfg, p);
+        let base_t = *base.get_or_insert(row.total);
+        table.row(&[
+            row.p.to_string(),
+            fmt_secs(row.total),
+            fmt_secs(row.compute),
+            fmt_secs(row.comm),
+            fmt_f(base_t / row.total, 2),
+            row.iterations.to_string(),
+        ]);
+        let _ = ledger_to_row(row.p, &crate::mpi_sim::Ledger::new(), 0, true);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let n = args.get("n", 1usize << 13);
+    let seed = args.get("seed", 1u64);
+    let rows = experiments::table2(
+        &["LBOLBSV", "HBOLBSV", "MAWI", "Graph500"],
+        n,
+        seed,
+    );
+    let mut table = Table::new(
+        "Table 2 — matrix properties (121-rank 2D partition)",
+        &["matrix", "N", "avg degree", "nnz", "load imb."],
+    );
+    for r in rows {
+        table.row(&[
+            r.name,
+            r.n.to_string(),
+            fmt_f(r.avg_degree, 1),
+            r.nnz.to_string(),
+            fmt_f(r.load_imbalance, 2),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("chebdav — three-layer Rust + JAX/Pallas (AOT via PJRT) stack");
+    let dir = PjrtRuntime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => {
+            println!(
+                "PJRT platform: {} ({} devices)",
+                rt.client.platform_name(),
+                rt.client.device_count()
+            );
+            println!("artifacts: {} entries", rt.manifest.entries.len());
+            let kinds: std::collections::BTreeMap<&str, usize> =
+                rt.manifest.entries.iter().fold(Default::default(), |mut m, e| {
+                    *m.entry(e.kind.as_str()).or_insert(0) += 1;
+                    m
+                });
+            for (k, c) in kinds {
+                println!("  {k:<14} x{c}");
+            }
+        }
+        Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
+    }
+    println!("hardware threads: {}", crate::util::hardware_threads());
+    Ok(())
+}
+
+// Silence "unused" for SpmmOp (used via trait objects in cmd_solve).
+#[allow(unused)]
+fn _t(op: &dyn Fn(&dyn SpmmOp)) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_args_flags_and_positionals() {
+        let argv: Vec<String> = ["--n", "100", "conf.toml", "--pjrt", "--tol", "1e-3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parse_args(&argv);
+        assert_eq!(a.get("n", 0usize), 100);
+        assert!(a.has("pjrt"));
+        assert_eq!(a.get("tol", 0.0f64), 1e-3);
+        assert_eq!(a.positional, vec!["conf.toml"]);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let argv = vec!["frobnicate".to_string()];
+        assert!(main_with_args(&argv).is_err());
+    }
+}

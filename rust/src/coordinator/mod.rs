@@ -1,0 +1,13 @@
+//! Coordinator: the launcher (CLI), the experiment drivers behind every
+//! figure/table bench, and report rendering.
+
+pub mod cli;
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{
+    component_scaling, dist_run, dist_scaling_sweep, grid_side, paper_solver_set, quality_cell,
+    table1, table2, vs_parsec, ComponentScalingRow, DistRunRow, QualityRow, Table1Row, Table2Row,
+    VsParsecRow,
+};
+pub use report::{fmt_f, fmt_secs, save_json, Table};

@@ -1,0 +1,124 @@
+//! Report rendering: fixed-width ASCII tables (what the benches print —
+//! the same rows the paper's figures plot) plus JSON dumps for plotting.
+
+use crate::util::Json;
+use std::fmt::Write as _;
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(s, " {:<width$} |", cells[i], width = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = Json::obj();
+                for (h, c) in self.headers.iter().zip(r.iter()) {
+                    obj = match c.parse::<f64>() {
+                        Ok(x) if c.chars().next().map(|ch| ch.is_ascii_digit() || ch == '-' || ch == '.').unwrap_or(false) => obj.put(h, x),
+                        _ => obj.put(h, c.as_str()),
+                    };
+                }
+                obj
+            })
+            .collect();
+        Json::obj()
+            .put("title", self.title.as_str())
+            .put("rows", rows)
+    }
+}
+
+pub fn fmt_secs(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3}s")
+    } else if t >= 1e-3 {
+        format!("{:.3}ms", t * 1e3)
+    } else {
+        format!("{:.3}us", t * 1e6)
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Write a JSON report next to the bench output (results/<name>.json).
+pub fn save_json(name: &str, json: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.render())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("demo", &["p", "time", "speedup"]);
+        t.row(&["1".into(), "10.0s".into(), "1.00".into()]);
+        t.row(&["121".into(), "0.9s".into(), "11.11".into()]);
+        let s = t.render();
+        assert!(s.contains("### demo"));
+        assert!(s.lines().count() >= 4);
+        // all body lines same length
+        let lens: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+    }
+}

@@ -1,0 +1,178 @@
+//! AMG-lite preconditioner for LOBPCG (paper Fig. 4's ablation).
+//!
+//! Two-level unsmoothed aggregation: greedy BFS aggregates of ~`agg_size`
+//! nodes define a piecewise-constant prolongation P; the coarse operator
+//! A_c = P^T A P is factored once (dense Cholesky with a diagonal shift,
+//! since the Laplacian is singular); the apply is
+//!     z = P A_c^{-1} P^T r  +  omega * r
+//! (the smoother is scaled-identity because diag(L_sym) = I).
+//!
+//! The paper's point, which Fig. 4 demonstrates: this extra machinery
+//! does *not* improve clustering quality on these graphs but costs real
+//! time — reproduced by bench fig4_amg.
+
+use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
+use crate::sparse::Csr;
+
+pub struct AmgLite {
+    /// aggregate id per node
+    pub agg_of: Vec<u32>,
+    pub n_agg: usize,
+    /// lower Cholesky factor of the (shifted) coarse operator
+    chol: Mat,
+    /// Jacobi/identity smoothing weight
+    pub omega: f64,
+    /// sqrt(aggregate size) normalization of P's columns
+    col_scale: Vec<f64>,
+}
+
+impl AmgLite {
+    /// Build from the sparse symmetric operator (Laplacian).
+    pub fn build(a: &Csr, agg_size: usize) -> AmgLite {
+        let n = a.nrows;
+        let agg_of = greedy_aggregate(a, agg_size.max(2));
+        let n_agg = agg_of.iter().map(|&x| x as usize + 1).max().unwrap_or(1);
+        // column norms of piecewise-constant P (normalized columns)
+        let mut counts = vec![0usize; n_agg];
+        for &g in &agg_of {
+            counts[g as usize] += 1;
+        }
+        let col_scale: Vec<f64> = counts
+            .iter()
+            .map(|&c| 1.0 / (c.max(1) as f64).sqrt())
+            .collect();
+        // coarse operator: Ac[g,h] = sum_{i in g, j in h} A_ij * s_g * s_h
+        let mut ac = Mat::zeros(n_agg, n_agg);
+        for i in 0..n {
+            let gi = agg_of[i] as usize;
+            for idx in a.indptr[i]..a.indptr[i + 1] {
+                let j = a.indices[idx] as usize;
+                let gj = agg_of[j] as usize;
+                ac[(gi, gj)] += a.values[idx] * col_scale[gi] * col_scale[gj];
+            }
+        }
+        // shift to make strictly SPD (Laplacian coarse op is singular)
+        let shift = 1e-8
+            + (0..n_agg)
+                .map(|g| ac[(g, g)].abs())
+                .fold(0.0, f64::max)
+                * 1e-10;
+        for g in 0..n_agg {
+            ac[(g, g)] += shift.max(1e-8);
+        }
+        let chol = cholesky(&ac).expect("shifted coarse operator must be SPD");
+        AmgLite {
+            agg_of,
+            n_agg,
+            chol,
+            omega: 0.5,
+            col_scale,
+        }
+    }
+
+    /// z = P Ac^{-1} P^T r + omega r, column-wise over a block.
+    pub fn apply(&self, r: &Mat) -> Mat {
+        let n = r.rows;
+        let mut z = r.clone();
+        z.scale(self.omega);
+        for c in 0..r.cols {
+            // restrict
+            let mut rc = vec![0.0f64; self.n_agg];
+            for i in 0..n {
+                let g = self.agg_of[i] as usize;
+                rc[g] += r[(i, c)] * self.col_scale[g];
+            }
+            // coarse solve
+            let y = solve_lower(&self.chol, &rc);
+            let x = solve_lower_t(&self.chol, &y);
+            // prolong
+            for i in 0..n {
+                let g = self.agg_of[i] as usize;
+                z[(i, c)] += x[g] * self.col_scale[g];
+            }
+        }
+        z
+    }
+}
+
+/// Greedy BFS aggregation: repeatedly seed an unaggregated node and absorb
+/// unaggregated neighbors until the aggregate reaches `size`.
+fn greedy_aggregate(a: &Csr, size: usize) -> Vec<u32> {
+    let n = a.nrows;
+    let mut agg = vec![u32::MAX; n];
+    let mut next_agg = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for seed in 0..n {
+        if agg[seed] != u32::MAX {
+            continue;
+        }
+        let mut members = 1usize;
+        agg[seed] = next_agg;
+        queue.clear();
+        queue.push_back(seed);
+        'grow: while let Some(u) = queue.pop_front() {
+            for idx in a.indptr[u]..a.indptr[u + 1] {
+                let v = a.indices[idx] as usize;
+                if agg[v] == u32::MAX {
+                    agg[v] = next_agg;
+                    members += 1;
+                    queue.push_back(v);
+                    if members >= size {
+                        break 'grow;
+                    }
+                }
+            }
+        }
+        next_agg += 1;
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    fn lap(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < 0.1 {
+                    edges.push((u, v));
+                }
+            }
+        }
+        normalized_laplacian(n, &edges)
+    }
+
+    #[test]
+    fn aggregates_cover_all_nodes() {
+        let a = lap(120, 1);
+        let agg = greedy_aggregate(&a, 8);
+        assert!(agg.iter().all(|&g| g != u32::MAX));
+        let n_agg = agg.iter().map(|&g| g as usize + 1).max().unwrap();
+        assert!(n_agg >= 120 / 8 && n_agg <= 120);
+    }
+
+    #[test]
+    fn apply_is_linear_and_spd_ish() {
+        let a = lap(80, 2);
+        let m = AmgLite::build(&a, 8);
+        let mut rng = Rng::new(3);
+        let r1 = Mat::randn(80, 2, &mut rng);
+        let r2 = Mat::randn(80, 2, &mut rng);
+        // linearity
+        let mut sum = r1.clone();
+        sum.axpy(1.0, &r2);
+        let z_sum = m.apply(&sum);
+        let mut z12 = m.apply(&r1);
+        z12.axpy(1.0, &m.apply(&r2));
+        assert!(z_sum.max_abs_diff(&z12) < 1e-9);
+        // positive definiteness of the apply (r^T M r > 0)
+        let z = m.apply(&r1);
+        let dot: f64 = z.data.iter().zip(r1.data.iter()).map(|(a, b)| a * b).sum();
+        assert!(dot > 0.0);
+    }
+}

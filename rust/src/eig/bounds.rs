@@ -1,0 +1,136 @@
+//! Spectrum bounds for the Chebyshev filter.
+//!
+//! The paper's point: for spectral clustering the bounds are *analytic*
+//! (normalized Laplacian spectrum ⊂ [0, 2]), so the k-step Lanczos
+//! estimation that general Chebyshev-Davidson needs (and whose matvecs
+//! cost real time) can be skipped. Both paths are provided; the quality
+//! benches use the analytic one, and `estimate_lanczos` exists for
+//! general symmetric inputs + as the ablation (DESIGN.md).
+
+use super::op::SpmmOp;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpectrumBounds {
+    /// Lower bound of the whole spectrum (Alg. 3's a0).
+    pub lower: f64,
+    /// Upper bound of the whole spectrum (Alg. 3's b).
+    pub upper: f64,
+}
+
+impl SpectrumBounds {
+    /// Analytic bounds of a symmetric normalized Laplacian.
+    pub fn normalized_laplacian() -> SpectrumBounds {
+        SpectrumBounds {
+            lower: 0.0,
+            upper: 2.0,
+        }
+    }
+
+    /// Initial cut between wanted and unwanted eigenvalues:
+    /// a0 + (b - a0) * k_want / N  (paper §2). Refined every iteration
+    /// from the Ritz-value median (Alg. 2 step 18).
+    pub fn initial_cut(&self, k_want: usize, n: usize) -> f64 {
+        let frac = (k_want as f64 / n as f64).max(1e-6);
+        self.lower + (self.upper - self.lower) * frac
+    }
+}
+
+/// k-step Lanczos with a random start: returns safe outer bounds
+/// (theta_min - ||r||, theta_max + ||r||) like Zhou's bound estimator.
+pub fn estimate_lanczos<Op: SpmmOp + ?Sized>(a: &Op, steps: usize, seed: u64) -> SpectrumBounds {
+    let n = a.n();
+    let k = steps.min(n).max(2);
+    let mut rng = Rng::new(seed);
+    let mut q_prev = vec![0.0f64; n];
+    let mut q = (0..n).map(|_| rng.normal()).collect::<Vec<_>>();
+    let nrm = q.iter().map(|x| x * x).sum::<f64>().sqrt();
+    q.iter_mut().for_each(|x| *x /= nrm);
+
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k);
+    let mut beta_last = 0.0;
+    for j in 0..k {
+        let qm = Mat::from_rows(n, 1, q.clone());
+        let mut w = a.spmm(&qm).data;
+        if j > 0 {
+            for i in 0..n {
+                w[i] -= betas[j - 1] * q_prev[i];
+            }
+        }
+        let alpha: f64 = w.iter().zip(q.iter()).map(|(a, b)| a * b).sum();
+        for i in 0..n {
+            w[i] -= alpha * q[i];
+        }
+        let beta: f64 = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        alphas.push(alpha);
+        beta_last = beta;
+        if j + 1 < k {
+            if beta < 1e-14 {
+                break;
+            }
+            betas.push(beta);
+            q_prev = std::mem::replace(&mut q, w.iter().map(|x| x / beta).collect());
+        }
+    }
+    // eigenvalues of the small tridiagonal
+    let t = {
+        let m = alphas.len();
+        let mut t = Mat::zeros(m, m);
+        for i in 0..m {
+            t[(i, i)] = alphas[i];
+            if i + 1 < m {
+                t[(i, i + 1)] = betas[i];
+                t[(i + 1, i)] = betas[i];
+            }
+        }
+        t
+    };
+    let (vals, _) = crate::linalg::eigh(&t);
+    SpectrumBounds {
+        lower: vals.first().copied().unwrap_or(0.0) - beta_last.abs(),
+        upper: vals.last().copied().unwrap_or(1.0) + beta_last.abs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    #[test]
+    fn initial_cut_between_bounds() {
+        let b = SpectrumBounds::normalized_laplacian();
+        let cut = b.initial_cut(32, 10_000);
+        assert!(cut > 0.0 && cut < 2.0);
+        assert!((cut - 2.0 * 32.0 / 10_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lanczos_bounds_enclose_spectrum() {
+        let mut rng = Rng::new(1);
+        let n = 80;
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < 0.1 {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let lap = normalized_laplacian(n, &edges);
+        let (evals, _) = crate::linalg::eigh(&lap.to_dense());
+        let est = estimate_lanczos(&lap, 12, 7);
+        assert!(est.lower <= evals[0] + 1e-8, "{} vs {}", est.lower, evals[0]);
+        assert!(
+            est.upper >= evals[n - 1] - 1e-8,
+            "{} vs {}",
+            est.upper,
+            evals[n - 1]
+        );
+        // and not absurdly loose
+        assert!(est.upper - est.lower < 3.0 * (evals[n - 1] - evals[0]) + 1.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Chebyshev polynomial filter (Algorithm 3 of the paper).
+//!
+//! Parameter semantics (Alg. 3 line 1): `a` = lower bound of the
+//! *unwanted* eigenvalues (the moving cut, Alg. 2's low_nwb), `b` = upper
+//! bound of the whole spectrum, `a0` = lower bound of the whole spectrum.
+//! The scaled filter rho_m satisfies rho_m(a0) = 1 and |rho_m| << 1 on
+//! [a, b], so the wanted eigenvalues in [a0, a) are amplified by factors
+//! growing like cosh(m * acosh(|map(x)|)).
+//!
+//! For the symmetric normalized Laplacian the outer bounds are analytic:
+//! a0 = 0, b = 2 (paper's core efficiency argument — no Lanczos bound
+//! estimation run is needed).
+
+use super::op::SpmmOp;
+use crate::linalg::Mat;
+
+/// Apply the degree-m scaled Chebyshev filter to the block `v` using only
+/// A's SpMM. One SpMM per degree (three-term recurrence, eq. 5).
+pub fn chebyshev_filter_via_spmm<Op: SpmmOp + ?Sized>(
+    a_op: &Op,
+    v: &Mat,
+    m: usize,
+    a: f64,
+    b: f64,
+    a0: f64,
+) -> Mat {
+    assert!(m >= 1);
+    assert!(a0 < a && a < b, "need a0 < a < b, got a0={a0} a={a} b={b}");
+    let c = (a + b) / 2.0;
+    let e = (b - a) / 2.0;
+    let mut sigma = e / (a0 - c);
+    let tau = 2.0 / sigma;
+
+    // U = (A V - c V) * sigma / e — combine fused into one pass over the
+    // panel (the unfused axpy+scale costs two extra full sweeps; see
+    // EXPERIMENTS.md §Perf)
+    let mut u = a_op.spmm(v);
+    {
+        let s = sigma / e;
+        for (uv, &vv) in u.data.iter_mut().zip(v.data.iter()) {
+            *uv = (*uv - c * vv) * s;
+        }
+    }
+    if m == 1 {
+        return u;
+    }
+    let mut v_prev = v.clone();
+    for _ in 2..=m {
+        let sigma1 = 1.0 / (tau - sigma);
+        // W = (2 sigma1 / e)(A U - c U) - sigma sigma1 V, single fused pass
+        let mut w = a_op.spmm(&u);
+        let s1 = 2.0 * sigma1 / e;
+        let s2 = sigma * sigma1;
+        for ((wv, &uv), &pv) in w
+            .data
+            .iter_mut()
+            .zip(u.data.iter())
+            .zip(v_prev.data.iter())
+        {
+            *wv = s1 * (*wv - c * uv) - s2 * pv;
+        }
+        v_prev = std::mem::replace(&mut u, w);
+        sigma = sigma1;
+    }
+    u
+}
+
+/// The scalar filter value rho_m(x) — used by tests and by the adaptive
+/// degree heuristics (a pure function of the recurrence).
+pub fn filter_scalar(x: f64, m: usize, a: f64, b: f64, a0: f64) -> f64 {
+    let c = (a + b) / 2.0;
+    let e = (b - a) / 2.0;
+    let mut sigma = e / (a0 - c);
+    let tau = 2.0 / sigma;
+    let mut u = (x - c) * sigma / e;
+    if m == 1 {
+        return u;
+    }
+    let mut v = 1.0;
+    for _ in 2..=m {
+        let sigma1 = 1.0 / (tau - sigma);
+        let w = 2.0 * sigma1 * (x - c) * u / e - sigma * sigma1 * v;
+        v = u;
+        u = w;
+        sigma = sigma1;
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigh, matmul, qr_thin};
+    use crate::sparse::Csr;
+    use crate::util::Rng;
+
+    /// Dense symmetric matrix with planted spectrum, as CSR.
+    fn planted(n: usize, evals: &[f64], rng: &mut Rng) -> (Csr, Mat) {
+        let g = Mat::randn(n, n, rng);
+        let (q, _) = qr_thin(&g);
+        let mut qd = q.clone();
+        for i in 0..n {
+            for j in 0..n {
+                qd[(i, j)] *= evals[j];
+            }
+        }
+        let a = matmul(&qd, &q.transpose());
+        (Csr::from_dense(&a), q)
+    }
+
+    #[test]
+    fn filter_normalizes_at_a0() {
+        for m in [1usize, 3, 8, 15] {
+            let v = filter_scalar(0.0, m, 0.4, 2.0, 0.0);
+            assert!((v - 1.0).abs() < 1e-9, "m={m} rho(a0)={v}");
+        }
+    }
+
+    #[test]
+    fn filter_dampens_unwanted_interval() {
+        for m in [5usize, 11, 15] {
+            for x in [0.5, 0.8, 1.3, 1.9] {
+                let v = filter_scalar(x, m, 0.4, 2.0, 0.0).abs();
+                assert!(v < 0.5, "m={m} x={x} rho={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn amplification_grows_with_degree() {
+        // Selectivity = wanted-region value over worst dampened-region
+        // value; it must grow (fast) with the degree.
+        let selectivity = |m: usize| {
+            let want = filter_scalar(0.05, m, 0.4, 2.0, 0.0).abs();
+            let worst = (0..=100)
+                .map(|i| 0.4 + 1.6 * i as f64 / 100.0)
+                .map(|x| filter_scalar(x, m, 0.4, 2.0, 0.0).abs())
+                .fold(0.0, f64::max);
+            want / worst
+        };
+        let s5 = selectivity(5);
+        let s15 = selectivity(15);
+        assert!(s15 > 5.0 * s5, "degree-15 {s15} vs degree-5 {s5}");
+    }
+
+    #[test]
+    fn matrix_filter_matches_scalar_on_eigenvectors() {
+        let mut rng = Rng::new(1);
+        let evals: Vec<f64> = (0..16).map(|i| i as f64 / 8.0).collect(); // [0, 2)
+        let (a, q) = planted(16, &evals, &mut rng);
+        let m = 7;
+        let (cut, b, a0) = (0.6, 2.0, -0.01);
+        // filter each eigenvector: result must be rho(lambda) * eigenvector
+        for j in [0usize, 3, 9, 15] {
+            let vj = Mat::from_rows(16, 1, q.col(j));
+            let out = chebyshev_filter_via_spmm(&a, &vj, m, cut, b, a0);
+            let want = filter_scalar(evals[j], m, cut, b, a0);
+            let mut diff = vj.clone();
+            diff.scale(want);
+            assert!(out.max_abs_diff(&diff) < 1e-8, "j={j}");
+        }
+    }
+
+    #[test]
+    fn filtered_block_dominated_by_wanted_subspace() {
+        let mut rng = Rng::new(2);
+        let n = 48;
+        let mut evals: Vec<f64> = (0..8).map(|i| 0.02 * i as f64).collect();
+        evals.extend((8..n).map(|i| 0.8 + 1.2 * (i - 8) as f64 / (n - 9) as f64));
+        let (a, q) = planted(n, &evals, &mut rng);
+        let v = Mat::randn(n, 4, &mut rng);
+        let out = chebyshev_filter_via_spmm(&a, &v, 15, 0.5, 2.0, 0.0);
+        let qt = q.transpose();
+        let coef = matmul(&qt, &out);
+        let wanted: f64 = (0..8).map(|i| (0..4).map(|j| coef[(i, j)].powi(2)).sum::<f64>()).sum();
+        let unwanted: f64 = (8..n).map(|i| (0..4).map(|j| coef[(i, j)].powi(2)).sum::<f64>()).sum();
+        assert!(wanted > 100.0 * unwanted, "{wanted} vs {unwanted}");
+    }
+
+    #[test]
+    fn eigh_cross_check_laplacian() {
+        // filter a Laplacian block, verify Rayleigh quotients drop toward
+        // the bottom of the spectrum
+        let mut rng = Rng::new(3);
+        let n = 60;
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < 0.08 {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let lap = crate::sparse::normalized_laplacian(n, &edges);
+        let (evals, _) = eigh(&lap.to_dense());
+        let v = Mat::randn(n, 3, &mut rng);
+        let out = chebyshev_filter_via_spmm(&lap, &v, 11, 0.9, 2.0, 0.0);
+        let (qv, _) = qr_thin(&out);
+        let h = crate::linalg::atb(&qv, &lap.spmm(&qv));
+        // mean Rayleigh quotient of the filtered subspace must sit in the
+        // lower part of the spectrum
+        let mean_rq = (0..3).map(|j| h[(j, j)]).sum::<f64>() / 3.0;
+        let mid = (evals[0] + evals[n - 1]) / 2.0;
+        assert!(mean_rq < mid, "mean RQ {mean_rq} vs mid {mid}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Eigensolvers: the paper's Block Chebyshev-Davidson plus the baselines
+//! it is compared against (ARPACK-like thick-restart Lanczos, LOBPCG with
+//! optional AMG-lite preconditioning, power iteration for PIC).
+
+pub mod amg;
+pub mod bchdav;
+pub mod bounds;
+pub mod chebfilter;
+pub mod lanczos;
+pub mod lobpcg;
+pub mod op;
+pub mod power_iteration;
+
+pub use amg::AmgLite;
+pub use bchdav::{bchdav, BchdavOptions, BchdavResult};
+pub use bounds::{estimate_lanczos, SpectrumBounds};
+pub use chebfilter::{chebyshev_filter_via_spmm, filter_scalar};
+pub use lanczos::{lanczos_smallest, LanczosOptions, LanczosResult};
+pub use lobpcg::{lobpcg, LobpcgOptions, LobpcgResult};
+pub use op::SpmmOp;
+pub use power_iteration::{pic_embedding, PicOptions, PicResult};

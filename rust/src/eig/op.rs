@@ -1,0 +1,38 @@
+//! Operator abstraction: everything the eigensolvers need from A.
+//!
+//! Two implementations matter: `Csr` (native SpMM hot path) and the PJRT
+//! runtime's `PjrtOperator` (executes the AOT-compiled Pallas ELL kernel).
+//! Keeping solvers generic over `SpmmOp` is what lets the same Bchdav
+//! state machine drive either backend.
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+pub trait SpmmOp {
+    /// Problem dimension (A is n x n symmetric).
+    fn n(&self) -> usize;
+    /// Y = A X for a tall-skinny panel.
+    fn spmm(&self, x: &Mat) -> Mat;
+    /// Number of stored nonzeros (for flop accounting).
+    fn nnz(&self) -> usize;
+
+    /// Optional fused Chebyshev filter (Alg. 3). Backends that compiled a
+    /// fused degree-m artifact override this; the default runs the
+    /// three-term recurrence over `spmm`.
+    fn cheb_filter(&self, v: &Mat, m: usize, a: f64, b: f64, a0: f64) -> Mat {
+        crate::eig::chebfilter::chebyshev_filter_via_spmm(self, v, m, a, b, a0)
+    }
+}
+
+impl SpmmOp for Csr {
+    fn n(&self) -> usize {
+        debug_assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn spmm(&self, x: &Mat) -> Mat {
+        Csr::spmm(self, x)
+    }
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+}

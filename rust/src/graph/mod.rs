@@ -1,0 +1,72 @@
+//! Graph generators standing in for the paper's evaluation inputs
+//! (DESIGN.md §Substitutions): degree-corrected SBM for the Graph
+//! Challenge categories, RMAT for Graph500, preferential attachment for
+//! the MAWI traffic graph, plus streaming mutation for warm-start
+//! experiments.
+
+pub mod pa;
+pub mod rmat;
+pub mod sbm;
+pub mod streaming;
+
+pub use pa::PaParams;
+pub use rmat::RmatParams;
+pub use sbm::{Category, Overlap, SbmGraph, SbmParams, SizeVariation};
+
+use crate::sparse::{normalized_laplacian, Csr};
+
+/// A named test matrix: Laplacian + optional ground-truth labels.
+pub struct TestMatrix {
+    pub name: String,
+    pub lap: Csr,
+    pub labels: Option<Vec<u32>>,
+}
+
+/// Build the scaled-down version of one of the paper's Table 2 matrices.
+/// `scale` multiplies the default (laptop-sized) node counts.
+pub fn table2_matrix(name: &str, n: usize, seed: u64) -> TestMatrix {
+    match name {
+        "LBOLBSV" | "LBOHBSV" | "HBOLBSV" | "HBOHBSV" => {
+            let cat = Category::from_name(name).expect("category");
+            let g = sbm::generate(&SbmParams::graph_challenge(n, cat), seed);
+            TestMatrix {
+                name: name.to_string(),
+                lap: normalized_laplacian(g.n, &g.edges),
+                labels: Some(g.labels),
+            }
+        }
+        "MAWI" | "MAWI-Graph-1" => {
+            let edges = pa::generate(&PaParams::mawi_like(n), seed);
+            TestMatrix {
+                name: "MAWI-like".to_string(),
+                lap: normalized_laplacian(n, &edges),
+                labels: None,
+            }
+        }
+        "Graph500" | "Graph500-scale24-ef16" => {
+            let scale = (n as f64).log2().ceil() as u32;
+            let p = RmatParams::graph500(scale, 16);
+            let edges = rmat::generate(&p, seed);
+            TestMatrix {
+                name: format!("Graph500-scale{scale}-ef16"),
+                lap: normalized_laplacian(p.n(), &edges),
+                labels: None,
+            }
+        }
+        other => panic!("unknown table2 matrix {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matrices_build() {
+        for name in ["LBOLBSV", "HBOHBSV", "MAWI", "Graph500"] {
+            let m = table2_matrix(name, 1 << 10, 1);
+            assert!(m.lap.nrows >= 1 << 10);
+            assert!(m.lap.asymmetry() < 1e-12);
+        }
+    }
+}

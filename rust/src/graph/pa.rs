@@ -1,0 +1,108 @@
+//! Preferential-attachment generator — the stand-in for the MAWI traffic
+//! graph ("MAWI-Graph-1": 18M nodes, average degree 3.0, 2D load imbalance
+//! 8.8 in the paper's Table 2).
+//!
+//! What the scaling experiments need from this matrix is its *shape*: very
+//! sparse (avg degree ~3) with a heavy-tailed degree distribution that
+//! produces high 2D-partition load imbalance. Barabási–Albert-style
+//! attachment reproduces both.
+
+use crate::util::Rng;
+
+pub struct PaParams {
+    pub n: usize,
+    /// Edges added per new node (avg degree ≈ 2 * m_attach … small).
+    pub m_attach: usize,
+}
+
+impl PaParams {
+    /// MAWI-like: average degree ~3.
+    pub fn mawi_like(n: usize) -> PaParams {
+        PaParams { n, m_attach: 1 }
+    }
+}
+
+pub fn generate(params: &PaParams, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    let n = params.n;
+    let m = params.m_attach.max(1);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m);
+    // endpoint pool: each edge contributes both endpoints, so drawing
+    // uniformly from the pool = drawing proportionally to degree.
+    let mut pool: Vec<u32> = Vec::with_capacity(2 * n * m);
+    // seed clique of m+1 nodes
+    let seed_n = (m + 1).min(n);
+    for u in 0..seed_n as u32 {
+        for v in (u + 1)..seed_n as u32 {
+            edges.push((u, v));
+            pool.push(u);
+            pool.push(v);
+        }
+    }
+    for u in seed_n..n {
+        // 50/50 mix of preferential and uniform attachment: pure PA at
+        // m=1 yields a tree; mixing keeps avg degree ~3-ish shape with
+        // some clustering, closer to traffic graphs.
+        let mut added = 0usize;
+        let mut guard = 0;
+        while added < m && guard < 10 * m {
+            guard += 1;
+            let v = if !pool.is_empty() && rng.f64() < 0.8 {
+                pool[rng.below(pool.len())]
+            } else {
+                rng.below(u) as u32
+            };
+            if v as usize != u {
+                edges.push((u as u32, v));
+                pool.push(u as u32);
+                pool.push(v);
+                added += 1;
+            }
+        }
+        // plus an extra edge occasionally to push avg degree toward 3
+        if rng.f64() < 0.5 && u > 1 {
+            let v = pool[rng.below(pool.len())];
+            if v as usize != u {
+                edges.push((u as u32, v));
+                pool.push(u as u32);
+                pool.push(v);
+            }
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_degree_near_three() {
+        let p = PaParams::mawi_like(20_000);
+        let edges = generate(&p, 1);
+        let avg = 2.0 * edges.len() as f64 / p.n as f64;
+        assert!((2.2..4.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn heavy_tail() {
+        let p = PaParams::mawi_like(20_000);
+        let edges = generate(&p, 2);
+        let mut deg = vec![0usize; p.n];
+        for &(u, v) in &edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap() as f64;
+        let avg = deg.iter().sum::<usize>() as f64 / p.n as f64;
+        assert!(max / avg > 20.0, "max/avg {}", max / avg);
+    }
+
+    #[test]
+    fn edges_in_range_no_self_loops() {
+        let p = PaParams::mawi_like(500);
+        for &(u, v) in &generate(&p, 3) {
+            assert!(u != v && (u as usize) < p.n && (v as usize) < p.n);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! RMAT / Kronecker graph generator — the stand-in for Graph500 matrices
+//! ("Graph500-scale24-ef16" in the paper's Table 2).
+//!
+//! Standard Graph500 parameters (a, b, c, d) = (0.57, 0.19, 0.19, 0.05):
+//! each edge picks a quadrant per scale level, producing the power-law,
+//! highly-skewed structure whose 2D-partition load imbalance (~7) the
+//! paper reports.
+
+use crate::util::Rng;
+
+pub struct RmatParams {
+    pub scale: u32,
+    pub edge_factor: usize,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl RmatParams {
+    pub fn graph500(scale: u32, edge_factor: usize) -> RmatParams {
+        RmatParams {
+            scale,
+            edge_factor,
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        1usize << self.scale
+    }
+}
+
+pub fn generate(params: &RmatParams, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    let n_edges = params.n() * params.edge_factor;
+    let mut edges = Vec::with_capacity(n_edges);
+    let ab = params.a + params.b;
+    let abc = ab + params.c;
+    for _ in 0..n_edges {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..params.scale {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.f64();
+            if r < params.a {
+                // top-left
+            } else if r < ab {
+                v |= 1;
+            } else if r < abc {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_and_range() {
+        let p = RmatParams::graph500(10, 8);
+        let edges = generate(&p, 1);
+        assert!(edges.len() <= p.n() * p.edge_factor);
+        assert!(edges.len() > p.n() * p.edge_factor * 9 / 10);
+        for &(u, v) in &edges {
+            assert!((u as usize) < p.n() && (v as usize) < p.n());
+            assert_ne!(u, v);
+        }
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let p = RmatParams::graph500(12, 16);
+        let edges = generate(&p, 2);
+        let mut deg = vec![0usize; p.n()];
+        for &(u, v) in &edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap() as f64;
+        let avg = deg.iter().sum::<usize>() as f64 / p.n() as f64;
+        // Graph500 RMAT hubs are orders of magnitude above the mean.
+        assert!(max / avg > 10.0, "max/avg = {}", max / avg);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = RmatParams::graph500(8, 4);
+        assert_eq!(generate(&p, 5), generate(&p, 5));
+    }
+}

@@ -1,0 +1,310 @@
+//! Degree-corrected stochastic block model generator — the stand-in for
+//! the IEEE HPEC Graph Challenge static graphs (DESIGN.md §Substitutions).
+//!
+//! The Graph Challenge's generator is itself a degree-corrected SBM; its
+//! four categories are spanned by two knobs reproduced here:
+//!   * block-size variation: LBSV = equal block sizes, HBSV = power-law
+//!     block sizes;
+//!   * block overlap: LBO = strong diagonal (few inter-block edges),
+//!     HBO = weaker diagonal (many inter-block edges).
+//!
+//! Sampling is O(E): for each block pair the number of edges is Poisson
+//! with the pair's expected count, and endpoints are drawn from the
+//! degree-propensity distribution inside each block (fast SBM sampling).
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overlap {
+    Low,
+    High,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeVariation {
+    Low,
+    High,
+}
+
+/// One of the four Graph Challenge categories, e.g. "LBOLBSV".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Category {
+    pub overlap: Overlap,
+    pub size_variation: SizeVariation,
+}
+
+impl Category {
+    pub fn from_name(name: &str) -> Option<Category> {
+        let overlap = match &name[..3] {
+            "LBO" => Overlap::Low,
+            "HBO" => Overlap::High,
+            _ => return None,
+        };
+        let size_variation = match &name[3..] {
+            "LBSV" => SizeVariation::Low,
+            "HBSV" => SizeVariation::High,
+            _ => return None,
+        };
+        Some(Category {
+            overlap,
+            size_variation,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.overlap, self.size_variation) {
+            (Overlap::Low, SizeVariation::Low) => "LBOLBSV",
+            (Overlap::Low, SizeVariation::High) => "LBOHBSV",
+            (Overlap::High, SizeVariation::Low) => "HBOLBSV",
+            (Overlap::High, SizeVariation::High) => "HBOHBSV",
+        }
+    }
+}
+
+pub struct SbmParams {
+    pub n: usize,
+    pub blocks: usize,
+    pub avg_degree: f64,
+    pub category: Category,
+    /// Degree-correction power-law exponent (Graph Challenge uses a
+    /// heavy-tailed degree distribution within blocks).
+    pub degree_exponent: f64,
+}
+
+impl SbmParams {
+    pub fn graph_challenge(n: usize, category: Category) -> SbmParams {
+        SbmParams {
+            n,
+            // Graph Challenge block counts grow with graph size; ~n/2000
+            // blocks keeps cluster sizes in the realistic range at our
+            // scaled-down sizes, min 8 so tiny test graphs still cluster.
+            blocks: (n / 2000).max(8),
+            avg_degree: 20.0,
+            category,
+            degree_exponent: 2.5,
+        }
+    }
+}
+
+pub struct SbmGraph {
+    pub n: usize,
+    pub edges: Vec<(u32, u32)>,
+    /// Ground-truth block label per node (for ARI/NMI evaluation).
+    pub labels: Vec<u32>,
+}
+
+/// Sample block sizes: equal (LBSV) or power-law (HBSV), always summing
+/// to exactly n with every block non-empty.
+fn block_sizes(n: usize, blocks: usize, var: SizeVariation, rng: &mut Rng) -> Vec<usize> {
+    match var {
+        SizeVariation::Low => {
+            let base = n / blocks;
+            let extra = n % blocks;
+            (0..blocks)
+                .map(|b| base + usize::from(b < extra))
+                .collect()
+        }
+        SizeVariation::High => {
+            // Pareto-ish weights, renormalized; floor of 1 node per block.
+            let mut w: Vec<f64> = (0..blocks)
+                .map(|_| (1.0 - rng.f64()).powf(-0.6)) // alpha ~ 1/0.6
+                .collect();
+            let total: f64 = w.iter().sum();
+            for x in w.iter_mut() {
+                *x /= total;
+            }
+            let mut sizes: Vec<usize> = w
+                .iter()
+                .map(|x| ((x * n as f64).floor() as usize).max(1))
+                .collect();
+            // fix rounding drift onto the largest block
+            let sum: usize = sizes.iter().sum();
+            let argmax = (0..blocks).max_by_key(|&b| sizes[b]).unwrap();
+            if sum < n {
+                sizes[argmax] += n - sum;
+            } else {
+                let mut excess = sum - n;
+                while excess > 0 {
+                    let b = (0..blocks).max_by_key(|&b| sizes[b]).unwrap();
+                    let take = excess.min(sizes[b] - 1);
+                    sizes[b] -= take;
+                    excess -= take;
+                    if take == 0 {
+                        break;
+                    }
+                }
+            }
+            sizes
+        }
+    }
+}
+
+pub fn generate(params: &SbmParams, seed: u64) -> SbmGraph {
+    let mut rng = Rng::new(seed);
+    let b = params.blocks;
+    let sizes = block_sizes(params.n, b, params.category.size_variation, &mut rng);
+
+    // node -> block assignment through a random id permutation: the
+    // Graph Challenge generator emits *shuffled* vertex ids, which is
+    // what keeps its 2D-partition load imbalance near 1.2 (paper
+    // Table 2) — with community-contiguous ids the diagonal grid blocks
+    // would hold ~all intra-block edges and imbalance would explode.
+    let mut perm: Vec<u32> = (0..params.n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut labels = vec![0u32; params.n];
+    let mut block_nodes: Vec<Vec<u32>> = Vec::with_capacity(b);
+    let mut next = 0usize;
+    for (blk, &s) in sizes.iter().enumerate() {
+        let nodes: Vec<u32> = perm[next..next + s].to_vec();
+        for &u in &nodes {
+            labels[u as usize] = blk as u32;
+        }
+        next += s;
+        block_nodes.push(nodes);
+    }
+
+    // degree propensities (degree-corrected SBM): power-law weights
+    let theta: Vec<f64> = (0..params.n)
+        .map(|_| (1.0 - rng.f64()).powf(-1.0 / (params.degree_exponent - 1.0)))
+        .collect();
+    // cumulative propensity per block for weighted endpoint draws
+    let cum_theta: Vec<Vec<f64>> = block_nodes
+        .iter()
+        .map(|nodes| {
+            let mut c = Vec::with_capacity(nodes.len());
+            let mut s = 0.0;
+            for &u in nodes {
+                s += theta[u as usize];
+                c.push(s);
+            }
+            c
+        })
+        .collect();
+
+    // Block-pair edge budget: diagonal fraction set by the overlap knob.
+    // Paper-scale graphs have avg degree ~20-48; expected total edges:
+    let total_edges = (params.n as f64 * params.avg_degree / 2.0).round();
+    let diag_frac = match params.category.overlap {
+        Overlap::Low => 0.9,
+        Overlap::High => 0.55,
+    };
+    // expected edges for pair (r,s): proportional to size_r * size_s among
+    // off-diagonal pairs; proportional to size_r^2 among diagonal.
+    let fsz: Vec<f64> = sizes.iter().map(|&s| s as f64).collect();
+    let diag_weight: f64 = fsz.iter().map(|s| s * s).sum();
+    let offd_weight: f64 = {
+        let total: f64 = fsz.iter().sum::<f64>() * fsz.iter().sum::<f64>();
+        (total - diag_weight) / 2.0
+    };
+
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(total_edges as usize);
+    for r in 0..b {
+        for s in r..b {
+            let lam = if r == s {
+                total_edges * diag_frac * fsz[r] * fsz[r] / diag_weight
+            } else {
+                total_edges * (1.0 - diag_frac) * fsz[r] * fsz[s] / offd_weight
+            };
+            let count = rng.poisson(lam);
+            for _ in 0..count {
+                let u = block_nodes[r][rng.weighted(&cum_theta[r])];
+                let v = block_nodes[s][rng.weighted(&cum_theta[s])];
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+    }
+    SbmGraph {
+        n: params.n,
+        edges,
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_names_roundtrip() {
+        for name in ["LBOLBSV", "LBOHBSV", "HBOLBSV", "HBOHBSV"] {
+            assert_eq!(Category::from_name(name).unwrap().name(), name);
+        }
+        assert!(Category::from_name("XXOLBSV").is_none());
+    }
+
+    #[test]
+    fn sizes_sum_to_n() {
+        let mut rng = Rng::new(1);
+        for &var in &[SizeVariation::Low, SizeVariation::High] {
+            for &(n, b) in &[(100, 4), (1003, 17), (50, 50)] {
+                let sizes = block_sizes(n, b, var, &mut rng);
+                assert_eq!(sizes.iter().sum::<usize>(), n);
+                assert!(sizes.iter().all(|&s| s >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn high_variation_is_skewed() {
+        let mut rng = Rng::new(2);
+        let lo = block_sizes(10_000, 16, SizeVariation::Low, &mut rng);
+        let hi = block_sizes(10_000, 16, SizeVariation::High, &mut rng);
+        let spread = |v: &[usize]| {
+            *v.iter().max().unwrap() as f64 / *v.iter().min().unwrap() as f64
+        };
+        assert!(spread(&lo) < 1.01);
+        assert!(spread(&hi) > 2.0, "spread {}", spread(&hi));
+    }
+
+    #[test]
+    fn degree_and_assortativity() {
+        let p = SbmParams::graph_challenge(4000, Category::from_name("LBOLBSV").unwrap());
+        let g = generate(&p, 7);
+        assert_eq!(g.labels.len(), 4000);
+        let avg_deg = 2.0 * g.edges.len() as f64 / g.n as f64;
+        assert!(
+            (avg_deg - p.avg_degree).abs() < 0.15 * p.avg_degree,
+            "avg degree {avg_deg}"
+        );
+        // low overlap: most edges intra-block
+        let intra = g
+            .edges
+            .iter()
+            .filter(|&&(u, v)| g.labels[u as usize] == g.labels[v as usize])
+            .count();
+        let frac = intra as f64 / g.edges.len() as f64;
+        assert!(frac > 0.8, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn high_overlap_mixes_more() {
+        let n = 4000;
+        let lo = generate(
+            &SbmParams::graph_challenge(n, Category::from_name("LBOLBSV").unwrap()),
+            3,
+        );
+        let hi = generate(
+            &SbmParams::graph_challenge(n, Category::from_name("HBOLBSV").unwrap()),
+            3,
+        );
+        let intra_frac = |g: &SbmGraph| {
+            g.edges
+                .iter()
+                .filter(|&&(u, v)| g.labels[u as usize] == g.labels[v as usize])
+                .count() as f64
+                / g.edges.len() as f64
+        };
+        assert!(intra_frac(&lo) > intra_frac(&hi) + 0.15);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = SbmParams::graph_challenge(500, Category::from_name("HBOHBSV").unwrap());
+        let a = generate(&p, 11);
+        let b = generate(&p, 11);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.labels, b.labels);
+    }
+}

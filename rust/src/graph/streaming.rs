@@ -1,0 +1,92 @@
+//! Streaming-graph mutation: the paper's §1 motivation for progressive
+//! filtering — "when partitioning a streaming graph changing over time …
+//! eigenpairs computed for the previous graph are good initials".
+//!
+//! `evolve` perturbs an edge list by rewiring a small fraction of edges
+//! (preserving the block structure's ground truth), producing the graph
+//! sequence the streaming example feeds to Bchdav with warm starts.
+
+use crate::util::Rng;
+
+/// Rewire `fraction` of the edges: each selected edge is replaced by a new
+/// edge whose endpoints are sampled within the same ground-truth blocks
+/// with probability `same_block_prob` (keeping communities stable).
+pub fn evolve(
+    n: usize,
+    edges: &[(u32, u32)],
+    labels: &[u32],
+    fraction: f64,
+    same_block_prob: f64,
+    seed: u64,
+) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    let blocks = (labels.iter().copied().max().unwrap_or(0) + 1) as usize;
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); blocks];
+    for (i, &b) in labels.iter().enumerate() {
+        members[b as usize].push(i as u32);
+    }
+    let mut out = Vec::with_capacity(edges.len());
+    for &(u, v) in edges {
+        if rng.f64() >= fraction {
+            out.push((u, v));
+            continue;
+        }
+        // rewire: keep u, resample v
+        let nv = if rng.f64() < same_block_prob {
+            let blk = &members[labels[u as usize] as usize];
+            blk[rng.below(blk.len())]
+        } else {
+            rng.below(n) as u32
+        };
+        if nv != u {
+            out.push((u, nv));
+        } else {
+            out.push((u, v));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sbm::{generate, Category, SbmParams};
+
+    #[test]
+    fn zero_fraction_is_identity() {
+        let p = SbmParams::graph_challenge(1000, Category::from_name("LBOLBSV").unwrap());
+        let g = generate(&p, 1);
+        let e2 = evolve(g.n, &g.edges, &g.labels, 0.0, 0.9, 2);
+        assert_eq!(e2, g.edges);
+    }
+
+    #[test]
+    fn small_fraction_changes_few_edges() {
+        let p = SbmParams::graph_challenge(1000, Category::from_name("LBOLBSV").unwrap());
+        let g = generate(&p, 1);
+        let e2 = evolve(g.n, &g.edges, &g.labels, 0.05, 0.9, 2);
+        assert_eq!(e2.len(), g.edges.len());
+        let changed = g
+            .edges
+            .iter()
+            .zip(e2.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        let frac = changed as f64 / g.edges.len() as f64;
+        assert!((0.02..0.09).contains(&frac), "changed fraction {frac}");
+    }
+
+    #[test]
+    fn community_structure_mostly_preserved() {
+        let p = SbmParams::graph_challenge(2000, Category::from_name("LBOLBSV").unwrap());
+        let g = generate(&p, 3);
+        let e2 = evolve(g.n, &g.edges, &g.labels, 0.1, 0.95, 4);
+        let intra = |es: &[(u32, u32)]| {
+            es.iter()
+                .filter(|&&(u, v)| g.labels[u as usize] == g.labels[v as usize])
+                .count() as f64
+                / es.len() as f64
+        };
+        assert!(intra(&e2) > intra(&g.edges) - 0.05);
+    }
+}

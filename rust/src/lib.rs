@@ -1,0 +1,31 @@
+//! # dist-chebdav
+//!
+//! A distributed Block Chebyshev-Davidson eigensolver for parallel
+//! spectral clustering — a full reproduction of Pang & Yang (2022),
+//! built as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the Block Chebyshev-Davidson
+//!   algorithm (sequential and distributed), the simulated MPI process
+//!   grid with alpha-beta collectives, the A-Stationary 1.5D SpMM,
+//!   parallel TSQR, the clustering pipeline, baseline eigensolvers, and
+//!   the benchmark harnesses that regenerate every table/figure of the
+//!   paper.
+//! * **L2/L1 (python/, build-time only)** — JAX compute graphs over
+//!   Pallas kernels, AOT-lowered to HLO text.
+//! * **runtime** — loads the AOT artifacts through the PJRT C API and
+//!   executes them from the hot path; Python is never on the request
+//!   path.
+//!
+//! See DESIGN.md for the full system inventory and per-experiment index.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod eig;
+pub mod graph;
+pub mod linalg;
+pub mod mpi_sim;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

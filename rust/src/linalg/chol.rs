@@ -1,0 +1,146 @@
+//! Cholesky factorization + triangular solves.
+//!
+//! Used by LOBPCG's Rayleigh-Ritz (B-orthonormalization of the search
+//! block) and by the AMG-lite preconditioner's coarse solve.
+
+use super::Mat;
+
+/// Lower Cholesky factor of a symmetric positive-definite matrix.
+/// Returns None if the matrix is not (numerically) SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    assert_eq!(n, a.cols);
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L x = b with L lower-triangular (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for j in 0..i {
+            let lij = l[(i, j)];
+            x[i] -= lij * x[j];
+        }
+        x[i] /= l[(i, i)];
+    }
+    x
+}
+
+/// Solve L^T x = b with L lower-triangular (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        for j in i + 1..n {
+            let lji = l[(j, i)];
+            x[i] -= lji * x[j];
+        }
+        x[i] /= l[(i, i)];
+    }
+    x
+}
+
+/// Solve A X = B column-by-column given A's lower Cholesky factor.
+pub fn chol_solve(l: &Mat, b: &Mat) -> Mat {
+    let mut x = Mat::zeros(b.rows, b.cols);
+    for j in 0..b.cols {
+        let col = b.col(j);
+        let y = solve_lower(l, &col);
+        let z = solve_lower_t(l, &y);
+        x.set_col(j, &z);
+    }
+    x
+}
+
+/// X <- X * inv(R) for upper-triangular R (right-solve, used to
+/// B-orthonormalize a block from its Gram Cholesky factor R = L^T).
+pub fn right_solve_upper(x: &mut Mat, r: &Mat) {
+    let k = r.rows;
+    assert_eq!(x.cols, k);
+    for i in 0..x.rows {
+        // solve row * R = old_row  =>  row = old_row * inv(R)
+        let row = x.row_mut(i);
+        for j in 0..k {
+            let mut s = row[j];
+            for t in 0..j {
+                s -= row[t] * r[(t, j)];
+            }
+            row[j] = s / r[(j, j)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Mat};
+    use crate::util::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Mat {
+        let g = Mat::randn(n, n, rng);
+        let mut a = matmul(&g, &g.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &n in &[1, 2, 5, 20] {
+            let a = spd(n, &mut rng);
+            let l = cholesky(&a).expect("SPD");
+            let llt = matmul(&l, &l.transpose());
+            assert!(a.max_abs_diff(&llt) < 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn chol_solve_matches_direct() {
+        let mut rng = Rng::new(2);
+        let a = spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b = Mat::randn(8, 3, &mut rng);
+        let x = chol_solve(&l, &b);
+        let ax = matmul(&a, &x);
+        assert!(ax.max_abs_diff(&b) < 1e-8);
+    }
+
+    #[test]
+    fn right_solve_upper_inverts() {
+        let mut rng = Rng::new(3);
+        let a = spd(5, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let r = l.transpose();
+        let x0 = Mat::randn(12, 5, &mut rng);
+        let mut x = matmul(&x0, &r);
+        right_solve_upper(&mut x, &r);
+        assert!(x.max_abs_diff(&x0) < 1e-8);
+    }
+}

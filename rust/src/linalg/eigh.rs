@@ -1,0 +1,286 @@
+//! Dense symmetric eigensolver for the small Rayleigh-quotient matrices.
+//!
+//! H in the Bchdav iteration is at most act_max x act_max (<= ~100), and
+//! the paper computes its eigendecomposition *locally on every rank*
+//! (Alg. 4 step 9). Implementation: Householder tridiagonalization (tred2)
+//! followed by implicit-shift QL with eigenvector accumulation (tqli) —
+//! the classic O(n^3) pair, ample for these sizes.
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues
+/// ascending, eigenvectors as columns of a Mat).
+pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    assert_eq!(n, a.cols, "eigh needs a square matrix");
+    if n == 0 {
+        return (vec![], Mat::zeros(0, 0));
+    }
+    // Symmetrize defensively (H is symmetrized in the algorithm anyway).
+    let mut z = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            z[(i, j)] = 0.5 * (a[(i, j)] + a[(j, i)]);
+        }
+    }
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tqli(&mut d, &mut e, &mut z);
+
+    // Sort ascending, permuting eigenvector columns along.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        for i in 0..n {
+            vecs[(i, newj)] = z[(i, oldj)];
+        }
+    }
+    (vals, vecs)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// On output `z` holds the orthogonal transform Q (A = Q T Q^T),
+/// `d` the diagonal of T and `e[1..]` the sub-diagonal.
+fn tred2(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in j + 1..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let val = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= val;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let val = g * z[(k, i)];
+                    z[(k, j)] -= val;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL on a symmetric tridiagonal matrix, accumulating the
+/// rotations into `z` so its columns become the eigenvectors of the
+/// original matrix.
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Mat) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli: no convergence after 50 iterations");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::Rng;
+
+    fn check_eig(a: &Mat, tol: f64) {
+        let (vals, vecs) = eigh(a);
+        // ascending order
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        // A v = lambda v
+        let av = matmul(a, &vecs);
+        for j in 0..a.rows {
+            for i in 0..a.rows {
+                let want = vals[j] * vecs[(i, j)];
+                assert!(
+                    (av[(i, j)] - want).abs() < tol,
+                    "residual at ({i},{j}): {} vs {}",
+                    av[(i, j)],
+                    want
+                );
+            }
+        }
+        // orthonormal eigenvectors
+        assert!(crate::linalg::ortho_error(&vecs) < tol);
+    }
+
+    #[test]
+    fn random_symmetric() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 3, 5, 10, 30, 64] {
+            let b = Mat::randn(n, n, &mut rng);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = 0.5 * (b[(i, j)] + b[(j, i)]);
+                }
+            }
+            check_eig(&a, 1e-8);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, &v) in [3.0, -1.0, 2.0, 0.5].iter().enumerate() {
+            a[(i, i)] = v;
+        }
+        let (vals, _) = eigh(&a);
+        let want = [-1.0, 0.5, 2.0, 3.0];
+        for (got, want) in vals.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // I + rank-1: eigenvalues {1 (x3), 1 + ||v||^2}
+        let n = 4;
+        let v = [0.5, -0.5, 0.5, 0.5];
+        let mut a = Mat::eye(n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] += v[i] * v[j];
+            }
+        }
+        check_eig(&a, 1e-9);
+        let (vals, _) = eigh(&a);
+        assert!((vals[3] - 2.0).abs() < 1e-9);
+        for k in 0..3 {
+            assert!((vals[k] - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn planted_spectrum_recovered() {
+        let mut rng = Rng::new(7);
+        let n = 24;
+        let g = Mat::randn(n, n, &mut rng);
+        let (q, _) = crate::linalg::qr_thin(&g);
+        let planted: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 2.0).collect();
+        // A = Q diag(planted) Q^T
+        let mut qd = q.clone();
+        for i in 0..n {
+            for j in 0..n {
+                qd[(i, j)] *= planted[j];
+            }
+        }
+        let a = matmul(&qd, &q.transpose());
+        let (vals, _) = eigh(&a);
+        let mut sorted = planted.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (got, want) in vals.iter().zip(sorted.iter()) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Dense row-major f64 matrix used throughout the coordinator.
+//!
+//! Tall-skinny panels (N x k, k << N) are the dominant dense shape in the
+//! Block Chebyshev-Davidson method; row-major storage keeps a row's k
+//! entries contiguous, which is what the SpMM accumulation, TSQR row
+//! blocks, and row-wise feature normalization all want.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Standard-normal random matrix (for initial blocks and tests).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Copy of the column block [lo, hi).
+    pub fn cols_block(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Overwrite the column block starting at `lo` with `b`.
+    pub fn set_cols_block(&mut self, lo: usize, b: &Mat) {
+        assert_eq!(self.rows, b.rows);
+        assert!(lo + b.cols <= self.cols);
+        for i in 0..self.rows {
+            self.row_mut(i)[lo..lo + b.cols].copy_from_slice(b.row(i));
+        }
+    }
+
+    /// Copy of the row block [lo, hi).
+    pub fn rows_block(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_rows(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    pub fn set_rows_block(&mut self, lo: usize, b: &Mat) {
+        assert_eq!(self.cols, b.cols);
+        assert!(lo + b.rows <= self.rows);
+        self.data[lo * self.cols..(lo + b.rows) * self.cols].copy_from_slice(&b.data);
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn scale(&mut self, a: f64) {
+        for v in self.data.iter_mut() {
+            *v *= a;
+        }
+    }
+
+    /// self += a * other
+    pub fn axpy(&mut self, a: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += a * y;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum::<f64>().sqrt()
+    }
+
+    /// Vertical concatenation [self; other].
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_rows(self.rows + other.rows, self.cols, data)
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(7, 5, &mut rng);
+        let b = m.cols_block(1, 4);
+        assert_eq!((b.rows, b.cols), (7, 3));
+        let mut m2 = m.clone();
+        m2.set_cols_block(1, &b);
+        assert_eq!(m, m2);
+        let r = m.rows_block(2, 5);
+        let mut m3 = m.clone();
+        m3.set_rows_block(2, &r);
+        assert_eq!(m, m3);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(4, 6, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn vcat_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::eye(3);
+        let c = a.vcat(&b);
+        assert_eq!((c.rows, c.cols), (5, 3));
+        assert_eq!(c[(2, 0)], 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK in the offline image —
+//! everything the eigensolvers need is implemented here and tested against
+//! first-principles identities).
+
+pub mod chol;
+pub mod eigh;
+pub mod gemm;
+pub mod mat;
+pub mod qr;
+
+pub use chol::{chol_solve, cholesky, right_solve_upper, solve_lower, solve_lower_t};
+pub use eigh::eigh;
+pub use gemm::{atb, matmul, tall_times_small};
+pub use mat::Mat;
+pub use qr::{ortho_error, orthonormalize, qr_residual, qr_thin};

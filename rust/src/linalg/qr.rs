@@ -1,0 +1,167 @@
+//! Householder QR for tall-skinny panels.
+//!
+//! This is the local building block of the parallel TSQR (Alg. 6 of the
+//! paper): each simulated rank QR-factors its row block, then R factors are
+//! combined pairwise up a binary tree. Thin factorization only — Q is
+//! (n x k), R is (k x k) upper-triangular with non-negative diagonal
+//! (sign-normalized so factorizations are unique, which makes the TSQR
+//! tree-shape invariance testable exactly).
+
+use super::{matmul, Mat};
+
+/// Thin Householder QR: A (n x k, n >= k) -> (Q (n x k), R (k x k)).
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (n, k) = (a.rows, a.cols);
+    assert!(n >= k, "qr_thin expects a tall matrix, got {n}x{k}");
+    let mut r = a.clone(); // working copy, becomes R in the top k rows
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k); // Householder vectors
+
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut norm2 = 0.0;
+        for i in j..n {
+            norm2 += r[(i, j)] * r[(i, j)];
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; n - j];
+        if norm > 0.0 {
+            let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
+            v[0] = r[(j, j)] - alpha;
+            for i in j + 1..n {
+                v[i - j] = r[(i, j)];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 0.0 {
+                // Apply H = I - 2 v v^T / (v^T v) to the trailing block.
+                for c in j..k {
+                    let mut dot = 0.0;
+                    for i in j..n {
+                        dot += v[i - j] * r[(i, c)];
+                    }
+                    let s = 2.0 * dot / vnorm2;
+                    for i in j..n {
+                        r[(i, c)] -= s * v[i - j];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate thin Q by applying the reflectors to the first k columns
+    // of the identity, in reverse order.
+    let mut q = Mat::zeros(n, k);
+    for j in 0..k {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..n {
+                dot += v[i - j] * q[(i, c)];
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in j..n {
+                q[(i, c)] -= s * v[i - j];
+            }
+        }
+    }
+
+    // Extract R (top k x k, zero the sub-diagonal noise) and normalize
+    // signs so diag(R) >= 0.
+    let mut rr = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    for i in 0..k {
+        if rr[(i, i)] < 0.0 {
+            for j in i..k {
+                rr[(i, j)] = -rr[(i, j)];
+            }
+            for t in 0..n {
+                q[(t, i)] = -q[(t, i)];
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Orthonormalize the columns of `a` (returns Q only).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+/// Deviation of Q from orthonormality: ||Q^T Q - I||_max.
+pub fn ortho_error(q: &Mat) -> f64 {
+    let g = super::atb(q, q);
+    let mut err = 0.0f64;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            let want = if i == j { 1.0 } else { 0.0 };
+            err = err.max((g[(i, j)] - want).abs());
+        }
+    }
+    err
+}
+
+/// Residual ||A - Q R||_max of a thin QR factorization.
+pub fn qr_residual(a: &Mat, q: &Mat, r: &Mat) -> f64 {
+    let qr = matmul(q, r);
+    a.max_abs_diff(&qr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs_and_is_orthonormal() {
+        let mut rng = Rng::new(1);
+        for &(n, k) in &[(8, 3), (50, 7), (100, 1), (5, 5)] {
+            let a = Mat::randn(n, k, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert!(ortho_error(&q) < 1e-10, "n={n} k={k}");
+            assert!(qr_residual(&a, &q, &r) < 1e-10, "n={n} k={k}");
+            for i in 0..k {
+                assert!(r[(i, i)] >= 0.0);
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient_is_stable() {
+        // Duplicate columns: Q must still be finite, R upper-triangular.
+        let mut rng = Rng::new(2);
+        let mut a = Mat::randn(20, 4, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let (q, r) = qr_thin(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        assert!(qr_residual(&a, &q, &r) < 1e-9);
+    }
+
+    #[test]
+    fn qr_unique_with_positive_diagonal() {
+        // For full-rank A, thin QR with diag(R) > 0 is unique: two
+        // factorizations of the same matrix must agree.
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(30, 5, &mut rng);
+        let (q1, r1) = qr_thin(&a);
+        let mut a2 = a.clone();
+        a2.scale(1.0); // force a copy-path
+        let (q2, r2) = qr_thin(&a2);
+        assert!(q1.max_abs_diff(&q2) < 1e-12);
+        assert!(r1.max_abs_diff(&r2) < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! `chebdav` — leader entrypoint for the distributed Block
+//! Chebyshev-Davidson spectral clustering stack. See `chebdav help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dist_chebdav::coordinator::cli::main_with_args(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

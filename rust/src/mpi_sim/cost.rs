@@ -1,0 +1,179 @@
+//! Alpha-beta communication cost model for the simulated process grid.
+//!
+//! The paper's entire scalability analysis (§3, Table 1, eqs. 7-18) is an
+//! alpha-beta model: sending w words costs `alpha + beta * w`, and each
+//! collective has a closed-form cost under the standard tree /
+//! recursive-doubling / recursive-halving implementations (Chan et al.,
+//! ref. [52] of the paper). We charge exactly those formulas; the
+//! constants default to HDR-100 InfiniBand-like values (the paper's
+//! Zaratan testbed) and are configurable for calibration.
+
+/// One collective's charge: message count (latency terms), word count
+/// (bandwidth terms) and the resulting modeled wall-clock seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Charge {
+    pub messages: f64,
+    pub words: f64,
+    pub seconds: f64,
+}
+
+impl Charge {
+    pub fn zero() -> Charge {
+        Charge::default()
+    }
+    pub fn add(&mut self, other: Charge) {
+        self.messages += other.messages;
+        self.words += other.words;
+        self.seconds += other.seconds;
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Message setup latency, seconds (paper's alpha).
+    pub alpha: f64,
+    /// Per-word (f64 = 8 bytes) transfer time, seconds (paper's beta).
+    pub beta: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // HDR-100 InfiniBand: ~2 us MPI latency; 100 Gbit/s ~ 12.5 GB/s,
+        // i.e. ~0.64 ns per 8-byte word; 1 ns/word leaves headroom for
+        // protocol overhead. Only the *shape* of the curves depends on
+        // these; the benches print the constants they used.
+        CostModel {
+            alpha: 2.0e-6,
+            beta: 1.0e-9,
+        }
+    }
+}
+
+fn log2c(p: usize) -> f64 {
+    (p.max(1) as f64).log2().ceil().max(1.0)
+}
+
+impl CostModel {
+    /// Point-to-point send of `w` words.
+    pub fn send(&self, w: usize) -> Charge {
+        Charge {
+            messages: 1.0,
+            words: w as f64,
+            seconds: self.alpha + self.beta * w as f64,
+        }
+    }
+
+    /// MPI_Bcast of `w` words to `p` ranks (binomial tree):
+    /// O(alpha log p + beta w log p).
+    pub fn bcast(&self, w: usize, p: usize) -> Charge {
+        if p <= 1 {
+            return Charge::zero();
+        }
+        let l = log2c(p);
+        Charge {
+            messages: l,
+            words: w as f64 * l,
+            seconds: self.alpha * l + self.beta * w as f64 * l,
+        }
+    }
+
+    /// MPI_Reduce of `w` words from `p` ranks (tree): same cost as bcast.
+    pub fn reduce(&self, w: usize, p: usize) -> Charge {
+        self.bcast(w, p)
+    }
+
+    /// MPI_Allreduce of `w` words across `p` ranks
+    /// (reduce-scatter + allgather): O(alpha log p + beta w).
+    pub fn allreduce(&self, w: usize, p: usize) -> Charge {
+        if p <= 1 {
+            return Charge::zero();
+        }
+        let l = log2c(p);
+        let vol = 2.0 * w as f64 * (p as f64 - 1.0) / p as f64;
+        Charge {
+            messages: 2.0 * l,
+            words: vol,
+            seconds: self.alpha * 2.0 * l + self.beta * vol,
+        }
+    }
+
+    /// MPI_Allgather where each of `p` ranks contributes `w_each` words
+    /// (recursive doubling): O(alpha log p + beta w_each p).
+    pub fn allgather(&self, w_each: usize, p: usize) -> Charge {
+        if p <= 1 {
+            return Charge::zero();
+        }
+        let l = log2c(p);
+        let vol = w_each as f64 * (p as f64 - 1.0);
+        Charge {
+            messages: l,
+            words: vol,
+            seconds: self.alpha * l + self.beta * vol,
+        }
+    }
+
+    /// MPI_Reduce_scatter over vectors of `w_total` words across `p`
+    /// ranks (recursive halving): O(alpha log p + beta w_total).
+    pub fn reduce_scatter(&self, w_total: usize, p: usize) -> Charge {
+        if p <= 1 {
+            return Charge::zero();
+        }
+        let l = log2c(p);
+        let vol = w_total as f64 * (p as f64 - 1.0) / p as f64;
+        Charge {
+            messages: l,
+            words: vol,
+            seconds: self.alpha * l + self.beta * vol,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CostModel::default();
+        assert_eq!(m.bcast(100, 1), Charge::zero());
+        assert_eq!(m.allreduce(100, 1), Charge::zero());
+        assert_eq!(m.allgather(100, 1), Charge::zero());
+        assert_eq!(m.reduce_scatter(100, 1), Charge::zero());
+    }
+
+    #[test]
+    fn costs_scale_with_words() {
+        let m = CostModel::default();
+        for p in [2usize, 16, 1024] {
+            let a = m.allgather(10, p);
+            let b = m.allgather(1000, p);
+            assert!(b.seconds > a.seconds);
+            assert_eq!(a.messages, b.messages); // latency independent of w
+        }
+    }
+
+    #[test]
+    fn allgather_volume_matches_recursive_doubling() {
+        let m = CostModel { alpha: 0.0, beta: 1.0 };
+        // each rank contributes w, ends with w*p: receives w*(p-1)
+        let c = m.allgather(8, 4);
+        assert!((c.words - 24.0).abs() < 1e-12);
+        assert!((c.seconds - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_scatter_cheaper_than_allgather_of_total() {
+        let m = CostModel::default();
+        // the asymmetry the 1.5D algorithm exploits
+        let p = 64;
+        let total = 64 * 1024;
+        assert!(m.reduce_scatter(total, p).seconds < m.allgather(total, p).seconds);
+    }
+
+    #[test]
+    fn latency_grows_logarithmically() {
+        let m = CostModel { alpha: 1.0, beta: 0.0 };
+        assert!((m.bcast(1, 8).seconds - 3.0).abs() < 1e-12);
+        assert!((m.bcast(1, 1024).seconds - 10.0).abs() < 1e-12);
+    }
+}

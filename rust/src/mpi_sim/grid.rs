@@ -1,0 +1,141 @@
+//! The simulated sqrt(p) x sqrt(p) process grid.
+//!
+//! Rank numbering follows the paper: P(i, j) is process `j * q + i`
+//! (column-major), so P(i, :) is a row communicator and P(:, j) a column
+//! communicator. The grid also carries the nested 1D partition used by
+//! the 1.5D algorithm: N is first split into q column ranges (matching
+//! the 2D partition), each split again into q sub-blocks, so that dense
+//! block `j*q + l` is the l-th sub-block of column range j — exactly the
+//! alignment Fig. 1 of the paper assumes.
+
+use crate::sparse::split_ranges;
+
+#[derive(Clone, Debug)]
+pub struct Grid {
+    /// grid side; p = q * q
+    pub q: usize,
+    /// problem dimension
+    pub n: usize,
+    /// outer ranges (the 2D partition's row/col ranges)
+    pub outer: Vec<(usize, usize)>,
+    /// flat nested 1D partition: block b = outer b/q, inner b%q
+    pub flat: Vec<(usize, usize)>,
+}
+
+impl Grid {
+    pub fn new(n: usize, q: usize) -> Grid {
+        assert!(q >= 1);
+        let outer = split_ranges(n, q);
+        let mut flat = Vec::with_capacity(q * q);
+        for &(lo, hi) in &outer {
+            for (slo, shi) in split_ranges(hi - lo, q) {
+                flat.push((lo + slo, lo + shi));
+            }
+        }
+        Grid { q, n, outer, flat }
+    }
+
+    pub fn p(&self) -> usize {
+        self.q * self.q
+    }
+
+    /// Paper's rank id of P(i, j).
+    pub fn rank_of(&self, i: usize, j: usize) -> usize {
+        j * self.q + i
+    }
+
+    /// (i, j) coordinates of a rank id.
+    pub fn coords_of(&self, rank: usize) -> (usize, usize) {
+        (rank % self.q, rank / self.q)
+    }
+
+    /// The 1D dense block owned as V by P(i, j): index j*q + i
+    /// (the i-th sub-block of column range j).
+    pub fn v_block(&self, i: usize, j: usize) -> (usize, usize) {
+        self.flat[j * self.q + i]
+    }
+
+    /// The 1D dense block owned as U by P(i, j): index i*q + j
+    /// (the j-th sub-block of row range i).
+    pub fn u_block(&self, i: usize, j: usize) -> (usize, usize) {
+        self.flat[i * self.q + j]
+    }
+
+    /// Rows of the gathered V panel available to column communicator j
+    /// after the allgather: the whole column range j.
+    pub fn col_range(&self, j: usize) -> (usize, usize) {
+        self.outer[j]
+    }
+
+    /// Rows of U produced by row communicator i: the whole row range i.
+    pub fn row_range(&self, i: usize) -> (usize, usize) {
+        self.outer[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coords_roundtrip() {
+        let g = Grid::new(100, 4);
+        for r in 0..16 {
+            let (i, j) = g.coords_of(r);
+            assert_eq!(g.rank_of(i, j), r);
+        }
+    }
+
+    #[test]
+    fn nested_partition_covers_n() {
+        for &(n, q) in &[(100, 3), (17, 4), (64, 8), (5, 1)] {
+            let g = Grid::new(n, q);
+            assert_eq!(g.flat.len(), q * q);
+            assert_eq!(g.flat[0].0, 0);
+            assert_eq!(g.flat.last().unwrap().1, n);
+            for w in g.flat.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn v_blocks_of_column_j_tile_its_col_range() {
+        let g = Grid::new(103, 5);
+        for j in 0..5 {
+            let (lo, hi) = g.col_range(j);
+            let mut blocks: Vec<_> = (0..5).map(|i| g.v_block(i, j)).collect();
+            blocks.sort_unstable();
+            assert_eq!(blocks[0].0, lo);
+            assert_eq!(blocks.last().unwrap().1, hi);
+            for w in blocks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn u_blocks_of_row_i_tile_its_row_range() {
+        let g = Grid::new(77, 3);
+        for i in 0..3 {
+            let (lo, hi) = g.row_range(i);
+            let mut blocks: Vec<_> = (0..3).map(|j| g.u_block(i, j)).collect();
+            blocks.sort_unstable();
+            assert_eq!(blocks[0].0, lo);
+            assert_eq!(blocks.last().unwrap().1, hi);
+        }
+    }
+
+    #[test]
+    fn transposed_ownership_differs_unless_diagonal() {
+        let g = Grid::new(64, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert_eq!(g.v_block(i, j), g.u_block(i, j));
+                }
+            }
+        }
+        assert_ne!(g.v_block(0, 1), g.u_block(0, 1));
+    }
+}

@@ -1,0 +1,179 @@
+//! Per-component time ledger of a simulated distributed run.
+//!
+//! Two clocks:
+//!   * **compute** — real, measured: each superstep executes every rank's
+//!     local work sequentially and records the *maximum* per-rank wall
+//!     time (that is what a lockstep SPMD step costs in the field);
+//!   * **comm** — modeled: the alpha-beta charges from cost.rs.
+//!
+//! Components use the paper's Fig. 7/8 vocabulary: "filter", "spmm",
+//! "orth", "rayleigh", "residual", "other", so the figure benches can
+//! read the breakdown straight out of the ledger.
+
+use super::cost::Charge;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    /// measured local compute per component (sum over supersteps of
+    /// max-over-ranks time)
+    pub compute: BTreeMap<&'static str, f64>,
+    /// modeled communication seconds per component
+    pub comm: BTreeMap<&'static str, f64>,
+    /// latency-term message counts per component (Table 1 cross-check)
+    pub messages: BTreeMap<&'static str, f64>,
+    /// bandwidth-term word counts per component (Table 1 cross-check)
+    pub words: BTreeMap<&'static str, f64>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    /// Execute one lockstep superstep: run `body(rank)` for every rank,
+    /// time each, and charge the max to `component`. Returns all outputs.
+    pub fn superstep<T>(
+        &mut self,
+        component: &'static str,
+        ranks: usize,
+        mut body: impl FnMut(usize) -> T,
+    ) -> Vec<T> {
+        let mut out = Vec::with_capacity(ranks);
+        let mut max_dt = 0.0f64;
+        for r in 0..ranks {
+            let t0 = Instant::now();
+            out.push(body(r));
+            max_dt = max_dt.max(t0.elapsed().as_secs_f64());
+        }
+        *self.compute.entry(component).or_insert(0.0) += max_dt;
+        out
+    }
+
+    /// Directly add measured compute seconds (when the caller did its own
+    /// per-rank timing, e.g. nested loops).
+    pub fn add_compute(&mut self, component: &'static str, seconds: f64) {
+        *self.compute.entry(component).or_insert(0.0) += seconds;
+    }
+
+    /// Work-weighted superstep: run all ranks' local work, time the
+    /// *whole* loop once, and charge `T_total * max(w) / sum(w)` — the
+    /// deterministic, noise-robust estimate of the slowest rank under
+    /// the known per-rank work distribution (e.g. block nnz). This is
+    /// how load imbalance (paper Table 2) enters the reported times
+    /// without per-rank timer jitter swamping microsecond-scale blocks.
+    pub fn superstep_weighted<T>(
+        &mut self,
+        component: &'static str,
+        weights: &[f64],
+        mut body: impl FnMut(usize) -> T,
+    ) -> Vec<T> {
+        let t0 = Instant::now();
+        let out: Vec<T> = (0..weights.len()).map(&mut body).collect();
+        let total_t = t0.elapsed().as_secs_f64();
+        let sum: f64 = weights.iter().sum();
+        let max = weights.iter().copied().fold(0.0, f64::max);
+        let frac = if sum > 0.0 { max / sum } else { 1.0 / weights.len().max(1) as f64 };
+        *self.compute.entry(component).or_insert(0.0) += total_t * frac;
+        out
+    }
+
+    /// Charge a modeled collective to a component.
+    pub fn charge(&mut self, component: &'static str, c: Charge) {
+        *self.comm.entry(component).or_insert(0.0) += c.seconds;
+        *self.messages.entry(component).or_insert(0.0) += c.messages;
+        *self.words.entry(component).or_insert(0.0) += c.words;
+    }
+
+    pub fn compute_of(&self, component: &str) -> f64 {
+        self.compute.get(component).copied().unwrap_or(0.0)
+    }
+
+    pub fn comm_of(&self, component: &str) -> f64 {
+        self.comm.get(component).copied().unwrap_or(0.0)
+    }
+
+    /// Total modeled wall time of a component (compute + comm).
+    pub fn time_of(&self, component: &str) -> f64 {
+        self.compute_of(component) + self.comm_of(component)
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.compute.values().sum()
+    }
+
+    pub fn total_comm(&self) -> f64 {
+        self.comm.values().sum()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.total_compute() + self.total_comm()
+    }
+
+    pub fn components(&self) -> Vec<&'static str> {
+        let mut keys: Vec<&'static str> = self
+            .compute
+            .keys()
+            .chain(self.comm.keys())
+            .copied()
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        for (k, v) in &other.compute {
+            *self.compute.entry(k).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.comm {
+            *self.comm.entry(k).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.messages {
+            *self.messages.entry(k).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.words {
+            *self.words.entry(k).or_insert(0.0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_sim::cost::CostModel;
+
+    #[test]
+    fn superstep_returns_all_outputs() {
+        let mut l = Ledger::new();
+        let out = l.superstep("spmm", 5, |r| r * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+        assert!(l.compute_of("spmm") >= 0.0);
+    }
+
+    #[test]
+    fn charges_accumulate_per_component() {
+        let m = CostModel::default();
+        let mut l = Ledger::new();
+        l.charge("filter", m.allgather(1000, 16));
+        l.charge("filter", m.reduce_scatter(1000, 16));
+        l.charge("orth", m.allreduce(64, 16));
+        assert!(l.comm_of("filter") > l.comm_of("orth"));
+        assert_eq!(l.components(), vec!["filter", "orth"]);
+        assert!((l.total_comm() - (l.comm_of("filter") + l.comm_of("orth"))).abs() < 1e-18);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let m = CostModel::default();
+        let mut a = Ledger::new();
+        a.charge("x", m.send(10));
+        let mut b = Ledger::new();
+        b.charge("x", m.send(10));
+        b.add_compute("x", 1.0);
+        a.merge(&b);
+        assert!((a.comm_of("x") - 2.0 * m.send(10).seconds).abs() < 1e-15);
+        assert_eq!(a.compute_of("x"), 1.0);
+    }
+}

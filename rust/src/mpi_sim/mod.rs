@@ -1,0 +1,23 @@
+//! Simulated distributed-memory runtime (DESIGN.md §Substitutions).
+//!
+//! The paper ran on an MPI cluster with up to ~1000 cores; this module
+//! reproduces the *behaviour* of that environment on one machine:
+//!
+//! * every rank's local computation is actually executed (sequentially,
+//!   in lockstep supersteps) and its wall time measured — the maximum
+//!   over ranks is what a real lockstep step would cost;
+//! * every collective moves real data between rank states but is charged
+//!   through the alpha-beta tree cost model of cost.rs — the same model
+//!   the paper's §3 complexity analysis uses (Table 1, eqs. 7-18).
+//!
+//! The reported "parallel time" of a run is measured-compute +
+//! modeled-comm per component, accumulated in the Ledger. The scalability
+//! figures (Figs. 5-9) read these ledgers.
+
+pub mod cost;
+pub mod grid;
+pub mod ledger;
+
+pub use cost::{Charge, CostModel};
+pub use grid::Grid;
+pub use ledger::Ledger;

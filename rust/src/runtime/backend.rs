@@ -1,0 +1,314 @@
+//! The PJRT-backed operator: `SpmmOp` whose SpMM (and, when the shapes
+//! and degree allow, whole Chebyshev filter) runs through the compiled
+//! Pallas artifacts.
+//!
+//! A is converted to ELL/HYB once, padded to the chosen shape bucket, and
+//! the value/column planes are uploaded to the device *once* — the
+//! "A-Stationary" discipline at the runtime level. Per call, only the
+//! dense panel crosses the host/device boundary. Rows beyond the real N
+//! are zero (they produce zero output rows, sliced off); panel columns
+//! beyond the real k are zero (harmless). Shapes that fit no bucket fall
+//! back to the native Rust kernel and are *counted* in RuntimeStats.
+//!
+//! Precision note: artifacts compute in f32 while the coordinator is
+//! f64. For spectral clustering tolerances (.1/.01 in the paper, 1e-3 in
+//! its scaling runs) this is ample; the pipeline tests pin it down.
+
+use super::client::PjrtRuntime;
+use super::manifest::ManifestEntry;
+use crate::eig::SpmmOp;
+use crate::linalg::Mat;
+use crate::sparse::{Csr, EllHyb};
+use anyhow::{Context, Result};
+
+pub struct PjrtOperator<'r> {
+    rt: &'r PjrtRuntime,
+    /// original matrix (native fallback + residual checks)
+    csr: Csr,
+    ell: EllHyb,
+    /// chosen spmm bucket (None -> always native)
+    spmm_bucket: Option<ManifestEntry>,
+    /// uploaded padded planes for the spmm bucket
+    planes: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// fused-filter buckets by degree m, with their own uploaded planes
+    /// (bucket shapes can differ from the spmm bucket's)
+    filter_planes: Vec<(ManifestEntry, xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+fn pad_planes(ell: &EllHyb, nb: usize, wb: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut vals = vec![0.0f32; nb * wb];
+    let mut cols = vec![0i32; nb * wb];
+    for i in 0..ell.nrows {
+        for s in 0..ell.width.min(wb) {
+            vals[i * wb + s] = ell.values[i * ell.width + s];
+            cols[i * wb + s] = ell.cols[i * ell.width + s];
+        }
+    }
+    (vals, cols)
+}
+
+impl<'r> PjrtOperator<'r> {
+    /// Wrap a symmetric CSR. `k_hint` is the panel width the solver will
+    /// use (k_b); it picks the column bucket.
+    pub fn new(rt: &'r PjrtRuntime, a: &Csr, k_hint: usize) -> Result<PjrtOperator<'r>> {
+        let n = a.nrows;
+        // ELL width: full coverage if max degree fits the widest bucket,
+        // else cap at the widest bucket and spill to the COO tail.
+        let w_cap = rt
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == "spmm")
+            .map(|e| e.w)
+            .max()
+            .unwrap_or(32);
+        let width = a.max_row_nnz().clamp(1, w_cap);
+        let ell = EllHyb::from_csr(a, width);
+
+        let spmm_bucket = rt
+            .manifest
+            .find_bucket("spmm", n, width, k_hint, None)
+            .cloned();
+        let planes = match &spmm_bucket {
+            Some(b) => {
+                let (vals, cols) = pad_planes(&ell, b.n, b.w);
+                Some((
+                    rt.upload_f32(&vals, &[b.n, b.w]).context("vals upload")?,
+                    rt.upload_i32(&cols, &[b.n, b.w]).context("cols upload")?,
+                ))
+            }
+            None => None,
+        };
+
+        // fused filter buckets: only usable when the ELL tail is empty
+        // (the in-artifact recurrence can't see the tail).
+        let mut filter_planes = Vec::new();
+        if ell.tail.is_empty() {
+            let degrees: Vec<usize> = rt
+                .manifest
+                .entries
+                .iter()
+                .filter(|e| e.kind == "cheb_filter")
+                .filter_map(|e| e.m)
+                .collect::<std::collections::BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            for m in degrees {
+                if let Some(b) = rt.manifest.find_bucket("cheb_filter", n, width, k_hint, Some(m))
+                {
+                    let (vals, cols) = pad_planes(&ell, b.n, b.w);
+                    filter_planes.push((
+                        b.clone(),
+                        rt.upload_f32(&vals, &[b.n, b.w])?,
+                        rt.upload_i32(&cols, &[b.n, b.w])?,
+                    ));
+                }
+            }
+        }
+
+        Ok(PjrtOperator {
+            rt,
+            csr: a.clone(),
+            ell,
+            spmm_bucket,
+            planes,
+            filter_planes,
+        })
+    }
+
+    pub fn has_pjrt_spmm(&self) -> bool {
+        self.spmm_bucket.is_some()
+    }
+
+    pub fn has_fused_filter(&self, m: usize) -> bool {
+        self.filter_planes.iter().any(|(b, _, _)| b.m == Some(m))
+    }
+
+    fn pad_panel(&self, x: &Mat, nb: usize, kb: usize) -> Vec<f32> {
+        let mut panel = vec![0.0f32; nb * kb];
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                panel[i * kb + j] = x[(i, j)] as f32;
+            }
+        }
+        panel
+    }
+
+    fn unpad(&self, data: &[f32], nb: usize, kb: usize, rows: usize, cols: usize) -> Mat {
+        let mut out = Mat::zeros(rows, cols);
+        let _ = nb;
+        for i in 0..rows {
+            for j in 0..cols {
+                out[(i, j)] = data[i * kb + j] as f64;
+            }
+        }
+        out
+    }
+
+    fn spmm_pjrt(&self, x: &Mat) -> Result<Mat> {
+        let b = self.spmm_bucket.as_ref().context("no bucket")?;
+        if x.cols > b.k {
+            anyhow::bail!("panel wider than bucket");
+        }
+        let (vals_buf, cols_buf) = self.planes.as_ref().context("no planes")?;
+        let exe = self.rt.executable(b)?;
+        let panel = self.pad_panel(x, b.n, b.k);
+        let xbuf = self.rt.upload_f32(&panel, &[b.n, b.k])?;
+        let y = self.rt.run_b(&exe, &[vals_buf, cols_buf, &xbuf])?;
+        let mut out = self.unpad(&y, b.n, b.k, x.rows, x.cols);
+        // HYB tail (rows whose degree exceeded the ELL width)
+        self.ell.apply_tail(x, &mut out);
+        let mut stats = self.rt.stats.borrow_mut();
+        stats.pjrt_calls += 1;
+        stats.pad_ratio_sum += (b.n * b.k) as f64 / (x.rows * x.cols) as f64;
+        stats.pad_ratio_count += 1;
+        Ok(out)
+    }
+
+    fn filter_pjrt(&self, v: &Mat, m: usize, a: f64, bb: f64, a0: f64) -> Result<Mat> {
+        let (bucket, vals_buf, cols_buf) = self
+            .filter_planes
+            .iter()
+            .find(|(b, _, _)| b.m == Some(m) && b.k >= v.cols)
+            .context("no filter bucket")?;
+        let exe = self.rt.executable(bucket)?;
+        let panel = self.pad_panel(v, bucket.n, bucket.k);
+        let vbuf = self.rt.upload_f32(&panel, &[bucket.n, bucket.k])?;
+        let bounds = [a as f32, bb as f32, a0 as f32];
+        let bbuf = self.rt.upload_f32(&bounds, &[3])?;
+        let y = self.rt.run_b(&exe, &[vals_buf, cols_buf, &vbuf, &bbuf])?;
+        let out = self.unpad(&y, bucket.n, bucket.k, v.rows, v.cols);
+        let mut stats = self.rt.stats.borrow_mut();
+        stats.pjrt_calls += 1;
+        stats.pad_ratio_sum += (bucket.n * bucket.k) as f64 / (v.rows * v.cols) as f64;
+        stats.pad_ratio_count += 1;
+        Ok(out)
+    }
+}
+
+impl SpmmOp for PjrtOperator<'_> {
+    fn n(&self) -> usize {
+        self.csr.nrows
+    }
+
+    fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    fn spmm(&self, x: &Mat) -> Mat {
+        match self.spmm_pjrt(x) {
+            Ok(y) => y,
+            Err(_) => {
+                self.rt.stats.borrow_mut().native_fallbacks += 1;
+                self.csr.spmm(x)
+            }
+        }
+    }
+
+    fn cheb_filter(&self, v: &Mat, m: usize, a: f64, b: f64, a0: f64) -> Mat {
+        match self.filter_pjrt(v, m, a, b, a0) {
+            Ok(y) => y,
+            Err(_) => {
+                // per-degree path: each spmm() call still goes through
+                // PJRT when a bucket exists, and handles the HYB tail
+                crate::eig::chebyshev_filter_via_spmm(self, v, m, a, b, a0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PjrtRuntime::artifacts_dir();
+        if dir.join("manifest.tsv").exists() {
+            Some(PjrtRuntime::load(&dir).expect("runtime load"))
+        } else {
+            None // artifacts not built in this environment
+        }
+    }
+
+    fn lap(n: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < density {
+                    edges.push((u, v));
+                }
+            }
+        }
+        normalized_laplacian(n, &edges)
+    }
+
+    #[test]
+    fn pjrt_spmm_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let a = lap(500, 0.02, 1);
+        let op = PjrtOperator::new(&rt, &a, 8).unwrap();
+        assert!(op.has_pjrt_spmm());
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(500, 8, &mut rng);
+        let got = op.spmm(&x);
+        let want = a.spmm(&x);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "diff {}",
+            got.max_abs_diff(&want)
+        );
+        assert!(rt.stats.borrow().pjrt_calls >= 1);
+        assert_eq!(rt.stats.borrow().native_fallbacks, 0);
+    }
+
+    #[test]
+    fn fused_filter_matches_native_filter() {
+        let Some(rt) = runtime() else { return };
+        let a = lap(300, 0.03, 3);
+        let op = PjrtOperator::new(&rt, &a, 8).unwrap();
+        let mut rng = Rng::new(4);
+        let v = Mat::randn(300, 8, &mut rng);
+        for m in [11usize, 15] {
+            if !op.has_fused_filter(m) {
+                continue;
+            }
+            let got = op.cheb_filter(&v, m, 0.3, 2.0, 0.0);
+            let want = crate::eig::chebyshev_filter_via_spmm(&a, &v, m, 0.3, 2.0, 0.0);
+            // f32 recurrence over m degrees: losser tolerance
+            let rel = got.max_abs_diff(&want) / want.frob_norm().max(1e-12);
+            assert!(rel < 1e-2, "m={m} rel diff {rel}");
+        }
+    }
+
+    #[test]
+    fn oversized_shapes_fall_back_loudly() {
+        let Some(rt) = runtime() else { return };
+        let a = lap(200, 0.05, 5);
+        let op = PjrtOperator::new(&rt, &a, 8).unwrap();
+        let mut rng = Rng::new(6);
+        // panel wider than any bucket -> native fallback, counted
+        let x = Mat::randn(200, 33, &mut rng);
+        let got = op.spmm(&x);
+        assert!(got.max_abs_diff(&a.spmm(&x)) < 1e-12);
+        assert!(rt.stats.borrow().native_fallbacks >= 1);
+    }
+
+    #[test]
+    fn bchdav_over_pjrt_operator_converges() {
+        let Some(rt) = runtime() else { return };
+        let a = lap(400, 0.025, 7);
+        let op = PjrtOperator::new(&rt, &a, 4).unwrap();
+        let opts = crate::eig::BchdavOptions::for_laplacian(4, 4, 11, 1e-4);
+        let res = crate::eig::bchdav(&op, &opts, None);
+        assert!(res.converged);
+        // cross-check eigenvalues against the pure-native run
+        let res_native = crate::eig::bchdav(&a, &opts, None);
+        for (p, n_) in res.eigenvalues.iter().zip(res_native.eigenvalues.iter()) {
+            assert!((p - n_).abs() < 1e-3, "{p} vs {n_}");
+        }
+        assert!(rt.stats.borrow().pjrt_calls > 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the only place the stack touches XLA at
+//! run time — Python is long gone by now (build-time only).
+//!
+//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md:
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos; the text
+//! parser reassigns ids). Executables compile lazily on first use and
+//! are cached by artifact name.
+
+use super::manifest::{Manifest, ManifestEntry};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    /// executions through compiled PJRT artifacts
+    pub pjrt_calls: usize,
+    /// calls that fell back to the native Rust kernel (no bucket fit) —
+    /// surfaced, never silent
+    pub native_fallbacks: usize,
+    /// artifact compilations (first-use)
+    pub compilations: usize,
+    /// total padding overhead ratio accumulated (padded elems / real)
+    pub pad_ratio_sum: f64,
+    pub pad_ratio_count: usize,
+}
+
+impl RuntimeStats {
+    pub fn mean_pad_ratio(&self) -> f64 {
+        if self.pad_ratio_count == 0 {
+            1.0
+        } else {
+            self.pad_ratio_sum / self.pad_ratio_count as f64
+        }
+    }
+}
+
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtRuntime {
+    /// Load the runtime from an artifacts directory (default:
+    /// `<repo>/artifacts`).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("CHEBDAV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Lazily compile + cache an artifact by manifest entry.
+    pub fn executable(&self, entry: &ManifestEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.execs.borrow().get(&entry.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", entry.name))?;
+        let exe = Rc::new(exe);
+        self.execs
+            .borrow_mut()
+            .insert(entry.name.clone(), exe.clone());
+        self.stats.borrow_mut().compilations += 1;
+        Ok(exe)
+    }
+
+    /// Upload a host f32 buffer as a device-resident PjRtBuffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Execute over device buffers, unwrap the 1-tuple, return f32 data.
+    pub fn run_b(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<f32>> {
+        let out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let inner = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        inner
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Same but reading an i32 output (kmeans assignment artifact).
+    pub fn run_b_i32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<i32>> {
+        let out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let inner = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        inner
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}

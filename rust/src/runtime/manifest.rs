@@ -1,0 +1,138 @@
+//! Artifact manifest: the index of AOT-compiled HLO modules emitted by
+//! `python/compile/aot.py` (one line per artifact in manifest.tsv,
+//! tab-separated key=value pairs — kept trivially parseable on purpose;
+//! the offline crate set has no serde).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// rows bucket
+    pub n: usize,
+    /// ELL width bucket (sparse kinds)
+    pub w: usize,
+    /// panel-columns bucket
+    pub k: usize,
+    /// filter degree (cheb_filter kind)
+    pub m: Option<usize>,
+    /// centroid count (kmeans kind)
+    pub kc: Option<usize>,
+    /// feature dim (kmeans kind)
+    pub d: Option<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut name = None;
+            let mut file = None;
+            let mut kind = None;
+            let (mut n, mut w, mut k) = (0usize, 0usize, 0usize);
+            let (mut m, mut kc, mut d) = (None, None, None);
+            for field in line.split('\t') {
+                let Some((key, val)) = field.split_once('=') else {
+                    bail!("manifest line {}: bad field {field:?}", lineno + 1);
+                };
+                match key {
+                    "name" => name = Some(val.to_string()),
+                    "file" => file = Some(val.to_string()),
+                    "kind" => kind = Some(val.to_string()),
+                    "n" => n = val.parse().context("n")?,
+                    "w" => w = val.parse().context("w")?,
+                    "k" => k = val.parse().context("k")?,
+                    "m" => m = Some(val.parse().context("m")?),
+                    "kc" => kc = Some(val.parse().context("kc")?),
+                    "d" => d = Some(val.parse().context("d")?),
+                    "inputs" => {} // informational
+                    other => bail!("manifest line {}: unknown key {other}", lineno + 1),
+                }
+            }
+            entries.push(ManifestEntry {
+                name: name.context("name")?,
+                file: file.context("file")?,
+                kind: kind.context("kind")?,
+                n,
+                w,
+                k,
+                m,
+                kc,
+                d,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Smallest bucket of `kind` fitting (n, w, k) and, if given, exactly
+    /// matching degree m. Returns None when nothing fits (the caller
+    /// falls back to the native kernel and counts it).
+    pub fn find_bucket(
+        &self,
+        kind: &str,
+        n: usize,
+        w: usize,
+        k: usize,
+        m: Option<usize>,
+    ) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.n >= n && e.w >= w && e.k >= k && e.m == m)
+            .min_by_key(|e| (e.n, e.w, e.k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name=spmm_n1024_w16_k8\tfile=spmm_n1024_w16_k8.hlo.txt\tinputs=1024x16:f32;1024x16:i32;1024x8:f32\tkind=spmm\tn=1024\tw=16\tk=8\nname=filter_n4096_w32_k8_m11\tfile=f.hlo.txt\tinputs=x\tkind=cheb_filter\tn=4096\tw=32\tk=8\tm=11\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].kind, "spmm");
+        assert_eq!(m.entries[1].m, Some(11));
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let text = "name=a\tfile=a\tkind=spmm\tn=1024\tw=16\tk=8\nname=b\tfile=b\tkind=spmm\tn=4096\tw=16\tk=8\nname=c\tfile=c\tkind=spmm\tn=4096\tw=32\tk=16\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.find_bucket("spmm", 1000, 10, 8, None).unwrap().name, "a");
+        assert_eq!(m.find_bucket("spmm", 2000, 10, 8, None).unwrap().name, "b");
+        assert_eq!(m.find_bucket("spmm", 2000, 20, 10, None).unwrap().name, "c");
+        assert!(m.find_bucket("spmm", 9000, 10, 8, None).is_none());
+        assert!(m.find_bucket("spmm", 100, 64, 8, None).is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // soft test: only runs when `make artifacts` has produced one
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.len() >= 70);
+            assert!(m.find_bucket("cheb_filter", 1000, 16, 8, Some(11)).is_some());
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper + artifact registry + the
+//! PJRT-backed `SpmmOp`. Loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! python/compile/aot.py) and executes them from the coordinator's hot
+//! path — Python never runs at serve time.
+
+pub mod backend;
+pub mod client;
+pub mod manifest;
+
+pub use backend::PjrtOperator;
+pub use client::{PjrtRuntime, RuntimeStats};
+pub use manifest::{Manifest, ManifestEntry};

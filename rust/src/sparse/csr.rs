@@ -1,0 +1,312 @@
+//! CSR sparse matrix: the coordinator-side storage for graph Laplacians.
+//!
+//! The paper's matrices are symmetric normalized Laplacians of undirected
+//! graphs — sparse, symmetric, spectrum in [0, 2]. CSR is the native-SpMM
+//! format; ELL (ell.rs) is the PJRT-artifact format.
+
+use crate::linalg::Mat;
+use crate::util::parallel_for_chunks;
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Build from unsorted COO triplets; duplicates are summed.
+    pub fn from_coo(
+        nrows: usize,
+        ncols: usize,
+        mut triplets: Vec<(u32, u32, f64)>,
+    ) -> Csr {
+        triplets.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut indptr = vec![0usize; nrows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        for (r, c, v) in triplets {
+            debug_assert!((r as usize) < nrows && (c as usize) < ncols);
+            if let (Some(&lc), true) = (indices.last(), indptr[r as usize + 1] > 0) {
+                // same row (indptr not yet finalized: we track counts below)
+                if lc == c && indptr[r as usize + 1] == indices.len() {
+                    // duplicate within the current row: sum
+                    *values.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            // row change bookkeeping: counts finalized afterwards
+            indices.push(c);
+            values.push(v);
+            indptr[r as usize + 1] = indices.len();
+        }
+        // indptr currently holds "end offset of row r" in slot r+1 for rows
+        // that have entries; fill gaps with running maximum.
+        for i in 1..=nrows {
+            if indptr[i] < indptr[i - 1] {
+                indptr[i] = indptr[i - 1];
+            }
+        }
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn from_dense(d: &Mat) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..d.rows {
+            for j in 0..d.cols {
+                if d[(i, j)] != 0.0 {
+                    trips.push((i as u32, j as u32, d[(i, j)]));
+                }
+            }
+        }
+        Csr::from_coo(d.rows, d.cols, trips)
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[idx] as usize)] += self.values[idx];
+            }
+        }
+        m
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// y = A x (single vector).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let mut s = 0.0;
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                s += self.values[idx] * x[self.indices[idx] as usize];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Y = A X for a tall-skinny row-major panel — the native hot path.
+    /// Row-parallel; per-row value/index slices avoid bounds checks and
+    /// the inner k-loop is specialized for the common small panel widths
+    /// so it unrolls into straight-line FMAs (see EXPERIMENTS.md §Perf).
+    pub fn spmm(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.ncols);
+        let k = x.cols;
+        let mut y = Mat::zeros(self.nrows, k);
+        let threads = if self.nnz() * k > 1 << 16 {
+            crate::util::hardware_threads().min(8)
+        } else {
+            1
+        };
+        let yptr = SendPtr(y.data.as_mut_ptr());
+        parallel_for_chunks(self.nrows, threads, |lo, hi| {
+            let yptr = &yptr;
+            match k {
+                4 => self.spmm_rows_fixed::<4>(x, yptr.0, lo, hi),
+                8 => self.spmm_rows_fixed::<8>(x, yptr.0, lo, hi),
+                16 => self.spmm_rows_fixed::<16>(x, yptr.0, lo, hi),
+                _ => self.spmm_rows_dyn(x, yptr.0, lo, hi, k),
+            }
+        });
+        y
+    }
+
+    /// Panel width known at compile time: the accumulator lives in
+    /// registers across a row's nonzeros instead of round-tripping
+    /// through memory per entry.
+    fn spmm_rows_fixed<const K: usize>(&self, x: &Mat, yptr: *mut f64, lo: usize, hi: usize) {
+        let xd = &x.data;
+        for i in lo..hi {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            let vals = &self.values[s..e];
+            let idxs = &self.indices[s..e];
+            let mut acc = [0.0f64; K];
+            for (v, &c) in vals.iter().zip(idxs.iter()) {
+                let xrow = &xd[c as usize * K..c as usize * K + K];
+                for t in 0..K {
+                    acc[t] += v * xrow[t];
+                }
+            }
+            // Safety: row chunks are disjoint across threads.
+            let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * K), K) };
+            yrow.copy_from_slice(&acc);
+        }
+    }
+
+    fn spmm_rows_dyn(&self, x: &Mat, yptr: *mut f64, lo: usize, hi: usize, k: usize) {
+        for i in lo..hi {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            let vals = &self.values[s..e];
+            let idxs = &self.indices[s..e];
+            // Safety: row chunks are disjoint across threads.
+            let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * k), k) };
+            for (v, &c) in vals.iter().zip(idxs.iter()) {
+                let xrow = x.row(c as usize);
+                for (yv, &xv) in yrow.iter_mut().zip(xrow.iter()) {
+                    *yv += v * xv;
+                }
+            }
+        }
+    }
+
+    /// Restrict to a row block [r0, r1) and column block [c0, c1)
+    /// (local indices in the block) — used by the 2D partitioner.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        let mut trips = Vec::new();
+        for i in r0..r1 {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let j = self.indices[idx] as usize;
+                if j >= c0 && j < c1 {
+                    trips.push(((i - r0) as u32, (j - c0) as u32, self.values[idx]));
+                }
+            }
+        }
+        Csr::from_coo(r1 - r0, c1 - c0, trips)
+    }
+
+    /// Transpose (exact, sorts by column).
+    pub fn transpose(&self) -> Csr {
+        let mut trips = Vec::with_capacity(self.nnz());
+        for i in 0..self.nrows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                trips.push((self.indices[idx], i as u32, self.values[idx]));
+            }
+        }
+        Csr::from_coo(self.ncols, self.nrows, trips)
+    }
+
+    /// Max |A - A^T| — symmetry check used by tests and input validation.
+    pub fn asymmetry(&self) -> f64 {
+        let t = self.transpose();
+        let mut err = 0.0f64;
+        for i in 0..self.nrows {
+            let ra = self.indptr[i]..self.indptr[i + 1];
+            let rb = t.indptr[i]..t.indptr[i + 1];
+            let a: std::collections::BTreeMap<u32, f64> = ra
+                .map(|idx| (self.indices[idx], self.values[idx]))
+                .collect();
+            let b: std::collections::BTreeMap<u32, f64> =
+                rb.map(|idx| (t.indices[idx], t.values[idx])).collect();
+            for (k, va) in &a {
+                err = err.max((va - b.get(k).copied().unwrap_or(0.0)).abs());
+            }
+            for (k, vb) in &b {
+                err = err.max((vb - a.get(k).copied().unwrap_or(0.0)).abs());
+            }
+        }
+        err
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_sparse(n: usize, m: usize, density: f64, rng: &mut Rng) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..m {
+                if rng.f64() < density {
+                    trips.push((i as u32, j as u32, rng.normal()));
+                }
+            }
+        }
+        Csr::from_coo(n, m, trips)
+    }
+
+    #[test]
+    fn coo_roundtrip_dense() {
+        let mut rng = Rng::new(1);
+        let a = random_sparse(13, 9, 0.3, &mut rng);
+        let d = a.to_dense();
+        let b = Csr::from_dense(&d);
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a = Csr::from_coo(2, 2, vec![(0, 1, 1.0), (0, 1, 2.0), (1, 0, -1.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.to_dense()[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        let a = random_sparse(40, 25, 0.15, &mut rng);
+        let x = Mat::randn(25, 7, &mut rng);
+        let got = a.spmm(&x);
+        let want = crate::linalg::matmul(&a.to_dense(), &x);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn spmv_matches_spmm() {
+        let mut rng = Rng::new(3);
+        let a = random_sparse(20, 20, 0.2, &mut rng);
+        let x: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 20];
+        a.spmv(&x, &mut y);
+        let xm = Mat::from_rows(20, 1, x);
+        let ym = a.spmm(&xm);
+        for i in 0..20 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_extraction() {
+        let mut rng = Rng::new(4);
+        let a = random_sparse(12, 12, 0.4, &mut rng);
+        let b = a.block(3, 9, 6, 12);
+        let d = a.to_dense();
+        let bd = b.to_dense();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(bd[(i, j)], d[(i + 3, j + 6)]);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(5);
+        let a = random_sparse(10, 14, 0.3, &mut rng);
+        assert_eq!(a.transpose().transpose().to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = Csr::from_coo(5, 5, vec![(4, 0, 1.0)]);
+        assert_eq!(a.row_nnz(0), 0);
+        assert_eq!(a.row_nnz(4), 1);
+        let x = Mat::eye(5);
+        let y = a.spmm(&x);
+        assert_eq!(y[(4, 0)], 1.0);
+        assert_eq!(y[(0, 0)], 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Symmetric normalized Laplacian construction (paper eq. 1):
+//!
+//! ```text
+//! A = I - D^{-1/2} S D^{-1/2}
+//! ```
+//!
+//! S is the 0/1 adjacency of an undirected graph, D the degree matrix.
+//! The spectrum of A lies in [0, 2] *analytically* — the fact the whole
+//! paper leans on: the Chebyshev filter needs no Lanczos bound estimation.
+
+use super::Csr;
+
+/// Build the symmetric normalized Laplacian from an undirected edge list.
+/// Self-loops are ignored; duplicate edges collapse. Isolated vertices get
+/// a diagonal 1 (their Laplacian row is just I's row).
+pub fn normalized_laplacian(n: usize, edges: &[(u32, u32)]) -> Csr {
+    let mut degree = vec![0u64; n];
+    // dedupe edges via sort
+    let mut es: Vec<(u32, u32)> = edges
+        .iter()
+        .filter(|&&(u, v)| u != v)
+        .map(|&(u, v)| if u < v { (u, v) } else { (v, u) })
+        .collect();
+    es.sort_unstable();
+    es.dedup();
+    for &(u, v) in &es {
+        degree[u as usize] += 1;
+        degree[v as usize] += 1;
+    }
+    let dinv_sqrt: Vec<f64> = degree
+        .iter()
+        .map(|&d| if d == 0 { 0.0 } else { 1.0 / (d as f64).sqrt() })
+        .collect();
+    let mut trips: Vec<(u32, u32, f64)> = Vec::with_capacity(2 * es.len() + n);
+    for i in 0..n {
+        trips.push((i as u32, i as u32, 1.0));
+    }
+    for &(u, v) in &es {
+        let w = -dinv_sqrt[u as usize] * dinv_sqrt[v as usize];
+        trips.push((u, v, w));
+        trips.push((v, u, w));
+    }
+    Csr::from_coo(n, n, trips)
+}
+
+/// Average degree of the *graph* (2 |E| / n) given its Laplacian
+/// (off-diagonal nnz per row). Used for the Table 2 report.
+pub fn avg_degree(lap: &Csr) -> f64 {
+    let offdiag = lap.nnz().saturating_sub(lap.nrows);
+    offdiag as f64 / lap.nrows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+
+    #[test]
+    fn path_graph_spectrum() {
+        // P3: 0-1-2. Normalized Laplacian eigenvalues are {0, 1, 2}.
+        let lap = normalized_laplacian(3, &[(0, 1), (1, 2)]);
+        let (vals, _) = eigh(&lap.to_dense());
+        let want = [0.0, 1.0, 2.0];
+        for (v, w) in vals.iter().zip(want.iter()) {
+            assert!((v - w).abs() < 1e-12, "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn spectrum_in_0_2_and_symmetric() {
+        let mut rng = crate::util::Rng::new(9);
+        let n = 40;
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < 0.1 {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let lap = normalized_laplacian(n, &edges);
+        assert!(lap.asymmetry() < 1e-15);
+        let (vals, _) = eigh(&lap.to_dense());
+        for v in &vals {
+            assert!(*v >= -1e-10 && *v <= 2.0 + 1e-10, "eigenvalue {v}");
+        }
+        // smallest eigenvalue of a graph with >= 1 edge-connected comp is 0
+        assert!(vals[0].abs() < 1e-10);
+    }
+
+    #[test]
+    fn zero_eigenvalue_multiplicity_counts_components() {
+        // two disjoint triangles -> two zero eigenvalues
+        let edges = [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)];
+        let lap = normalized_laplacian(6, &edges);
+        let (vals, _) = eigh(&lap.to_dense());
+        assert!(vals[0].abs() < 1e-12 && vals[1].abs() < 1e-12);
+        assert!(vals[2] > 0.1);
+    }
+
+    #[test]
+    fn self_loops_and_duplicates_ignored() {
+        let a = normalized_laplacian(3, &[(0, 1), (1, 0), (2, 2), (1, 2)]);
+        let b = normalized_laplacian(3, &[(0, 1), (1, 2)]);
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    fn isolated_vertex_row_is_identity() {
+        let lap = normalized_laplacian(3, &[(0, 1)]);
+        let d = lap.to_dense();
+        assert_eq!(d[(2, 2)], 1.0);
+        assert_eq!(d[(2, 0)], 0.0);
+        assert_eq!(d[(2, 1)], 0.0);
+    }
+}

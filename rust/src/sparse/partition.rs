@@ -1,0 +1,252 @@
+//! Matrix partitioning for the simulated process grid.
+//!
+//! The A-Stationary 1.5D algorithm (paper §3.1, Fig. 1) partitions the
+//! sparse A in 2D over a sqrt(p) x sqrt(p) grid while the tall-skinny
+//! dense matrices are partitioned in 1D row blocks — with the *transposed*
+//! ownership convention: process P(i,j) owns A[i,j], V[j*sqrt(p)+i] and
+//! U[i*sqrt(p)+j]. This module produces the block ranges, the per-process
+//! sub-matrices, and the load-imbalance statistic of Table 2 (eq. 19).
+
+use super::Csr;
+
+/// Split `n` into `parts` contiguous ranges as evenly as possible
+/// (first `n % parts` ranges get one extra row).
+pub fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for r in 0..parts {
+        let len = base + usize::from(r < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+/// 2D block partition of a square sparse matrix over a q x q grid.
+#[derive(Clone)]
+pub struct Partition2D {
+    pub q: usize,
+    pub n: usize,
+    pub row_ranges: Vec<(usize, usize)>,
+    pub col_ranges: Vec<(usize, usize)>,
+    /// blocks[i][j] = A[i, j] (local indices).
+    pub blocks: Vec<Vec<Csr>>,
+}
+
+impl Partition2D {
+    pub fn new(a: &Csr, q: usize) -> Partition2D {
+        assert_eq!(a.nrows, a.ncols, "2D partition expects a square matrix");
+        let row_ranges = split_ranges(a.nrows, q);
+        let col_ranges = split_ranges(a.ncols, q);
+        let blocks = (0..q)
+            .map(|i| {
+                (0..q)
+                    .map(|j| {
+                        let (r0, r1) = row_ranges[i];
+                        let (c0, c1) = col_ranges[j];
+                        a.block(r0, r1, c0, c1)
+                    })
+                    .collect()
+            })
+            .collect();
+        Partition2D {
+            q,
+            n: a.nrows,
+            row_ranges,
+            col_ranges,
+            blocks,
+        }
+    }
+
+    /// Load imbalance (paper eq. 19): p * max_ij nnz(A[i,j]) / nnz(A).
+    pub fn load_imbalance(&self) -> f64 {
+        let p = self.q * self.q;
+        let total: usize = self
+            .blocks
+            .iter()
+            .flat_map(|row| row.iter().map(|b| b.nnz()))
+            .sum();
+        let max = self
+            .blocks
+            .iter()
+            .flat_map(|row| row.iter().map(|b| b.nnz()))
+            .max()
+            .unwrap_or(0);
+        if total == 0 {
+            1.0
+        } else {
+            p as f64 * max as f64 / total as f64
+        }
+    }
+
+    /// Total nonzeros across blocks (must equal nnz(A); tested).
+    pub fn total_nnz(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|row| row.iter().map(|b| b.nnz()))
+            .sum()
+    }
+}
+
+/// 1D row-block partition (PARSEC-style layout and the dense panels).
+#[derive(Clone)]
+pub struct Partition1D {
+    pub parts: usize,
+    pub n: usize,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Partition1D {
+    pub fn new(n: usize, parts: usize) -> Partition1D {
+        Partition1D {
+            parts,
+            n,
+            ranges: split_ranges(n, parts),
+        }
+    }
+
+    pub fn len_of(&self, r: usize) -> usize {
+        let (lo, hi) = self.ranges[r];
+        hi - lo
+    }
+
+    pub fn owner_of_row(&self, row: usize) -> usize {
+        // ranges are contiguous ascending — binary search the starts
+        match self.ranges.binary_search_by(|&(lo, hi)| {
+            if row < lo {
+                std::cmp::Ordering::Greater
+            } else if row >= hi {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(r) => r,
+            Err(_) => panic!("row {row} outside partition of {}", self.n),
+        }
+    }
+}
+
+/// 1.5D ownership map (paper Fig. 1): on a q x q grid,
+/// P(i,j) owns V-block index j*q + i and U-block index i*q + j,
+/// where dense blocks come from a 1D partition into p = q*q row blocks.
+pub fn v_block_of(i: usize, j: usize, q: usize) -> usize {
+    j * q + i
+}
+pub fn u_block_of(i: usize, j: usize, q: usize) -> usize {
+    i * q + j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_csr(n: usize, density: f64, rng: &mut Rng) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                if rng.f64() < density {
+                    trips.push((i as u32, j as u32, rng.normal()));
+                }
+            }
+        }
+        Csr::from_coo(n, n, trips)
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for &(n, p) in &[(10, 3), (7, 7), (100, 11), (5, 8)] {
+            let rs = split_ranges(n, p);
+            assert_eq!(rs.len(), p);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs.last().unwrap().1, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            let max = rs.iter().map(|(a, b)| b - a).max().unwrap();
+            let min = rs.iter().map(|(a, b)| b - a).min().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn partition2d_preserves_nnz_and_values() {
+        let mut rng = Rng::new(1);
+        let a = random_csr(23, 0.2, &mut rng);
+        let p = Partition2D::new(&a, 3);
+        assert_eq!(p.total_nnz(), a.nnz());
+        // reconstruct and compare
+        let d = a.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                let bd = p.blocks[i][j].to_dense();
+                let (r0, _) = p.row_ranges[i];
+                let (c0, _) = p.col_ranges[j];
+                for r in 0..bd.rows {
+                    for c in 0..bd.cols {
+                        assert_eq!(bd[(r, c)], d[(r + r0, c + c0)]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_imbalance_uniform_is_near_one() {
+        // A dense-pattern matrix has perfectly balanced blocks.
+        let n = 24;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                trips.push((i as u32, j as u32, 1.0));
+            }
+        }
+        let a = Csr::from_coo(n, n, trips);
+        let p = Partition2D::new(&a, 4);
+        assert!((p.load_imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_imbalance_skewed_is_large() {
+        // all nnz in one block
+        let n = 20;
+        let mut trips = Vec::new();
+        for i in 0..5 {
+            for j in 0..5 {
+                trips.push((i as u32, j as u32, 1.0));
+            }
+        }
+        let a = Csr::from_coo(n, n, trips);
+        let p = Partition2D::new(&a, 4);
+        assert!((p.load_imbalance() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owner_of_row_consistent() {
+        let p = Partition1D::new(17, 4);
+        for row in 0..17 {
+            let r = p.owner_of_row(row);
+            let (lo, hi) = p.ranges[r];
+            assert!(row >= lo && row < hi);
+        }
+    }
+
+    #[test]
+    fn ownership_maps_are_bijections() {
+        let q = 5;
+        let mut seen_v = vec![false; q * q];
+        let mut seen_u = vec![false; q * q];
+        for i in 0..q {
+            for j in 0..q {
+                seen_v[v_block_of(i, j, q)] = true;
+                seen_u[u_block_of(i, j, q)] = true;
+            }
+        }
+        assert!(seen_v.iter().all(|&x| x) && seen_u.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: PRNG, timing, JSON writing, scoped thread pool.
+
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use threadpool::{hardware_threads, parallel_for_chunks, parallel_map};
+pub use timer::{bench, time_it, BenchStat, ComponentTimers};

@@ -1,0 +1,212 @@
+//! Deterministic PRNG substrate: splitmix64 seeding + xoshiro256**.
+//!
+//! The offline crate set has no `rand` facade, so the repository carries its
+//! own generator. Everything that samples (graph generators, initial blocks,
+//! k-means++) takes an explicit seed so experiments are reproducible
+//! bit-for-bit across runs and process counts.
+
+/// splitmix64: used to expand a single u64 seed into xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (e.g. one per simulated rank).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // the bias of the simple reduction is < 2^-53 for our n.
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box-Muller (cached spare).
+    pub fn normal(&mut self) -> f64 {
+        // Marsaglia polar method
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Poisson sample (Knuth for small lambda, normal approx for large).
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 64.0 {
+            let x = lambda + lambda.sqrt() * self.normal();
+            return x.max(0.0).round() as usize;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample an index proportionally to `weights` (cumulative scan).
+    pub fn weighted(&mut self, cumweights: &[f64]) -> usize {
+        let total = *cumweights.last().expect("non-empty weights");
+        let x = self.f64() * total;
+        match cumweights.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cumweights.len() - 1),
+            Err(i) => i.min(cumweights.len() - 1),
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(4);
+        for &lam in &[0.5, 3.0, 20.0, 100.0] {
+            let n = 20_000;
+            let mut s = 0.0;
+            for _ in 0..n {
+                s += r.poisson(lam) as f64;
+            }
+            let mean = s / n as f64;
+            assert!(
+                (mean - lam).abs() < 0.05 * lam + 0.1,
+                "lambda {lam} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Rng::new(5);
+        let cum = [1.0, 1.0, 4.0]; // weights 1, 0, 3
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[r.weighted(&cum)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut r = Rng::new(6);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny scoped parallel-for substrate (no rayon in the offline crate set).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and
+//! runs them on `std::thread::scope` threads. Used by the native SpMM /
+//! GEMM hot paths; the simulated *distributed* runtime does NOT use this —
+//! rank-local work there is executed sequentially per rank and timed, by
+//! design (see mpi_sim).
+
+/// Number of worker threads to use for data-parallel kernels.
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(chunk_start, chunk_end)` over disjoint chunks of `0..n` on up
+/// to `threads` scoped threads. `body` must be Sync; chunks are disjoint so
+/// callers can hand out `&mut` slices via raw pointers or interior splits.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        body(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel writing into the returned Vec.
+pub fn parallel_map<T: Send + Clone + Default, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, threads, |lo, hi| {
+        let ptr = &ptr;
+        for i in lo..hi {
+            // Safety: chunks are disjoint, each index written exactly once.
+            unsafe { *ptr.0.add(i) = f(i) };
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(1000, 8, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(257, 4, |i| i * i);
+        let want: Vec<usize> = (0..257).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        // n = 0: the body may be invoked with an empty range but must not
+        // receive any index.
+        parallel_for_chunks(0, 4, |lo, hi| assert_eq!(lo, hi));
+        let got = parallel_map(1, 8, |i| i + 1);
+        assert_eq!(got, vec![1]);
+    }
+}

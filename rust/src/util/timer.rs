@@ -1,0 +1,132 @@
+//! Wall-clock timing + simple accumulating component timers.
+//!
+//! The distributed simulator reports two kinds of time: *measured* local
+//! compute (these timers) and *modeled* communication (mpi_sim::cost). The
+//! benches that regenerate the paper's figures combine both.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Measure the wall time of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run a closure `reps` times after `warmup` runs; return the minimum time.
+/// (Minimum, not mean: the classic way to strip scheduler noise on a
+/// shared machine; the benches report it alongside the mean.)
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchStat {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStat::from_times(&times)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStat {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+impl BenchStat {
+    pub fn from_times(times: &[f64]) -> Self {
+        let mut min = f64::INFINITY;
+        let mut max = 0.0f64;
+        let mut sum = 0.0;
+        for &t in times {
+            min = min.min(t);
+            max = max.max(t);
+            sum += t;
+        }
+        BenchStat {
+            min,
+            mean: sum / times.len().max(1) as f64,
+            max,
+            reps: times.len(),
+        }
+    }
+}
+
+/// Named accumulating timers, used to produce the Fig. 8 style breakdown
+/// ("percentage of CPU time per component").
+#[derive(Default, Debug, Clone)]
+pub struct ComponentTimers {
+    acc: BTreeMap<&'static str, f64>,
+}
+
+impl ComponentTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &'static str, secs: f64) {
+        *self.acc.entry(name).or_insert(0.0) += secs;
+    }
+
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.add(name, dt);
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.acc.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    /// (name, seconds, percent) rows sorted by descending time.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().max(1e-30);
+        let mut rows: Vec<_> = self
+            .acc
+            .iter()
+            .map(|(&k, &v)| (k, v, 100.0 * v / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    pub fn merge(&mut self, other: &ComponentTimers) {
+        for (&k, &v) in &other.acc {
+            self.add(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn component_timers_accumulate() {
+        let mut t = ComponentTimers::new();
+        t.add("a", 1.0);
+        t.add("a", 2.0);
+        t.add("b", 1.0);
+        assert_eq!(t.get("a"), 3.0);
+        assert_eq!(t.total(), 4.0);
+        let rows = t.breakdown();
+        assert_eq!(rows[0].0, "a");
+        assert!((rows[0].2 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench(1, 5, || (0..1000).sum::<usize>());
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert_eq!(s.reps, 5);
+    }
+}

@@ -1,0 +1,127 @@
+//! Ablation tests for the design choices DESIGN.md calls out.
+//!
+//! 1. Analytic [0,2] bounds vs Lanczos-estimated bounds — the paper's
+//!    first contribution: for normalized Laplacians the bound-estimation
+//!    matvecs are pure overhead and the analytic bounds converge at
+//!    least as tightly.
+//! 2. Inner-outer restart vs plain outer restart (act_max = dim_max).
+//! 3. Progressive filtering (warm starts) vs ignoring initial vectors.
+//! 4. Filter degree trade-off: higher m -> fewer iterations.
+
+use dist_chebdav::eig::{bchdav, estimate_lanczos, BchdavOptions, SpectrumBounds, SpmmOp};
+use dist_chebdav::graph::sbm::{generate, Category, SbmParams};
+use dist_chebdav::sparse::normalized_laplacian;
+
+fn lap(n: usize, seed: u64) -> dist_chebdav::sparse::Csr {
+    let mut p = SbmParams::graph_challenge(n, Category::from_name("LBOLBSV").unwrap());
+    p.blocks = 8;
+    let g = generate(&p, seed);
+    normalized_laplacian(g.n, &g.edges)
+}
+
+#[test]
+fn ablation_analytic_bounds_vs_lanczos_estimate() {
+    let a = lap(1500, 1);
+    let k = 8;
+    let base = BchdavOptions::for_laplacian(k, 4, 11, 1e-6);
+
+    // analytic: no extra matvecs
+    let res_analytic = bchdav(&a, &base, None);
+    assert!(res_analytic.converged);
+
+    // estimated: pay ~10 matvecs up front, bounds slightly loose
+    let est = estimate_lanczos(&a, 10, 3);
+    assert!(est.lower <= 1e-6 && est.upper >= 2.0 - 0.2);
+    let opts_est = BchdavOptions {
+        bounds: est,
+        ..base.clone()
+    };
+    let res_est = bchdav(&a, &opts_est, None);
+    assert!(res_est.converged);
+
+    // same eigenvalues either way…
+    for (x, y) in res_analytic
+        .eigenvalues
+        .iter()
+        .zip(res_est.eigenvalues.iter())
+    {
+        assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+    }
+    // …but the analytic run does no worse in SpMM applications, and the
+    // estimated run pays the extra estimation matvecs on top.
+    let est_total = res_est.spmm_count + 10;
+    assert!(
+        res_analytic.spmm_count <= est_total,
+        "analytic {} vs estimated {est_total}",
+        res_analytic.spmm_count
+    );
+}
+
+#[test]
+fn ablation_inner_outer_restart_bounds_rr_cost() {
+    let a = lap(1200, 2);
+    let k = 12;
+    // paper defaults: act_max = max(5 k_b, 30) << dim_max
+    let with_inner = BchdavOptions::for_laplacian(k, 4, 11, 1e-6);
+    // no inner restart: active space as large as the basis
+    let mut no_inner = with_inner.clone();
+    no_inner.act_max = no_inner.dim_max;
+
+    let r_with = bchdav(&a, &with_inner, None);
+    let r_without = bchdav(&a, &no_inner, None);
+    assert!(r_with.converged && r_without.converged);
+    for (x, y) in r_with.eigenvalues.iter().zip(r_without.eigenvalues.iter()) {
+        assert!((x - y).abs() < 1e-4);
+    }
+    // the Rayleigh-Ritz + orth time per iteration must not blow up with
+    // the inner restart enabled (that is its purpose)
+    let rr_with = r_with.timers.get("rayleigh") / r_with.iterations.max(1) as f64;
+    let rr_without = r_without.timers.get("rayleigh") / r_without.iterations.max(1) as f64;
+    assert!(
+        rr_with <= rr_without * 1.5 + 1e-4,
+        "inner restart failed to bound RR cost: {rr_with} vs {rr_without}"
+    );
+}
+
+#[test]
+fn ablation_progressive_filtering_uses_initials() {
+    let a = lap(1500, 3);
+    let opts = BchdavOptions::for_laplacian(8, 4, 11, 1e-7);
+    let cold = bchdav(&a, &opts, None);
+    assert!(cold.converged);
+    // exact eigenvectors as initials: progressive filtering should
+    // converge in at most as many iterations
+    let warm = bchdav(&a, &opts, Some(&cold.eigenvectors));
+    assert!(warm.converged);
+    assert!(
+        warm.iterations <= cold.iterations,
+        "warm {} vs cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    // junk initials must not break convergence (robustness)
+    let mut rng = dist_chebdav::util::Rng::new(9);
+    let junk = dist_chebdav::linalg::Mat::randn(a.n(), 8, &mut rng);
+    let res_junk = bchdav(&a, &opts, Some(&junk));
+    assert!(res_junk.converged);
+}
+
+#[test]
+fn ablation_filter_degree_tradeoff() {
+    let a = lap(1500, 4);
+    let mut iters = Vec::new();
+    for m in [5usize, 11, 17] {
+        let opts = BchdavOptions::for_laplacian(8, 4, m, 1e-6);
+        let res = bchdav(&a, &opts, None);
+        assert!(res.converged, "m={m}");
+        iters.push(res.iterations);
+    }
+    // higher degree -> fewer (or equal) outer iterations (paper §2: "a
+    // higher ratio results in faster convergence")
+    assert!(
+        iters[2] <= iters[0],
+        "degree 17 {} should need <= iterations than degree 5 {}",
+        iters[2],
+        iters[0]
+    );
+}

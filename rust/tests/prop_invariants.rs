@@ -1,0 +1,229 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is not in the offline crate set, so these are hand-rolled
+//! property sweeps: each property is checked over a few dozen randomized
+//! cases drawn from a seeded generator (failures print the case seed, so
+//! they replay deterministically).
+
+use dist_chebdav::cluster::{adjusted_rand_index, normalized_mutual_information};
+use dist_chebdav::dist::{spmm_1p5d, tsqr, DistMatrix};
+use dist_chebdav::eig::filter_scalar;
+use dist_chebdav::linalg::{ortho_error, qr_residual, qr_thin, Mat};
+use dist_chebdav::mpi_sim::{CostModel, Grid, Ledger};
+use dist_chebdav::sparse::{normalized_laplacian, split_ranges, Csr, EllHyb};
+use dist_chebdav::util::Rng;
+
+fn random_laplacian(rng: &mut Rng, n: usize, density: f64) -> Csr {
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.f64() < density {
+                edges.push((u, v));
+            }
+        }
+    }
+    normalized_laplacian(n, &edges)
+}
+
+#[test]
+fn prop_split_ranges_partition() {
+    let mut rng = Rng::new(101);
+    for case in 0..100 {
+        let n = 1 + rng.below(500);
+        let p = 1 + rng.below(40);
+        let rs = split_ranges(n, p);
+        assert_eq!(rs.len(), p, "case {case}: seed state");
+        assert_eq!(rs[0].0, 0);
+        assert_eq!(rs.last().unwrap().1, n);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous, case {case}");
+        }
+        let sizes: Vec<usize> = rs.iter().map(|(a, b)| b - a).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "balanced, case {case}");
+    }
+}
+
+#[test]
+fn prop_hyb_spmm_equals_csr_spmm() {
+    let mut rng = Rng::new(202);
+    for case in 0..25 {
+        let n = 10 + rng.below(80);
+        let density = 0.05 + rng.f64() * 0.3;
+        let a = random_laplacian(&mut rng, n, density);
+        let k = 1 + rng.below(8);
+        let x = Mat::randn(n, k, &mut rng);
+        let want = a.spmm(&x);
+        let width = 1 + rng.below(a.max_row_nnz().max(1) + 3);
+        let hyb = EllHyb::from_csr(&a, width);
+        let got = hyb.spmm_native(&x);
+        // ELL planes store f32 (the PJRT artifact dtype) -> f32 accuracy
+        assert!(
+            got.max_abs_diff(&want) < 1e-5,
+            "case {case}: width {width} diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prop_1p5d_spmm_equals_serial_any_grid() {
+    let mut rng = Rng::new(303);
+    let cost = CostModel::default();
+    for case in 0..20 {
+        let n = 20 + rng.below(100);
+        let a = random_laplacian(&mut rng, n, 0.1);
+        let q = 1 + rng.below(5);
+        let k = 1 + rng.below(6);
+        let x = Mat::randn(n, k, &mut rng);
+        let want = a.spmm(&x);
+        let dm = DistMatrix::new(&a, q);
+        let mut led = Ledger::new();
+        for transposed in [false, true] {
+            let got = spmm_1p5d(&dm, &x, transposed, &cost, &mut led, "spmm");
+            assert!(
+                got.max_abs_diff(&want) < 1e-9,
+                "case {case}: q={q} k={k} transposed={transposed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tsqr_equals_householder_qr() {
+    let mut rng = Rng::new(404);
+    let cost = CostModel::default();
+    for case in 0..25 {
+        let k = 1 + rng.below(7);
+        let n = k * (2 + rng.below(30));
+        let p = 1 + rng.below(17);
+        let v = Mat::randn(n, k, &mut rng);
+        let mut led = Ledger::new();
+        let (q, r) = tsqr(&v, p, &cost, &mut led, "orth");
+        assert!(ortho_error(&q) < 1e-8, "case {case}: n={n} k={k} p={p}");
+        assert!(qr_residual(&v, &q, &r) < 1e-8, "case {case}");
+        let (qs, rs) = qr_thin(&v);
+        assert!(
+            q.max_abs_diff(&qs) < 1e-7 && r.max_abs_diff(&rs) < 1e-7,
+            "case {case}: TSQR must equal sign-normalized QR (n={n} k={k} p={p})"
+        );
+    }
+}
+
+#[test]
+fn prop_grid_ownership_bijective() {
+    let mut rng = Rng::new(505);
+    for _case in 0..30 {
+        let q = 1 + rng.below(12);
+        let n = q * q + rng.below(300);
+        let g = Grid::new(n, q);
+        // every flat block owned exactly once as V and once as U
+        let mut v_seen = vec![false; q * q];
+        let mut u_seen = vec![false; q * q];
+        for i in 0..q {
+            for j in 0..q {
+                let vb = g.v_block(i, j);
+                let ub = g.u_block(i, j);
+                let vidx = g.flat.iter().position(|&r| r == vb).unwrap();
+                let uidx = g.flat.iter().position(|&r| r == ub).unwrap();
+                assert!(!v_seen[vidx] && !u_seen[uidx]);
+                v_seen[vidx] = true;
+                u_seen[uidx] = true;
+            }
+        }
+        assert!(v_seen.iter().all(|&x| x));
+        assert!(u_seen.iter().all(|&x| x));
+    }
+}
+
+#[test]
+fn prop_collective_costs_monotone() {
+    let mut rng = Rng::new(606);
+    let m = CostModel::default();
+    for _case in 0..50 {
+        let w = 1 + rng.below(1 << 20);
+        let p = 2 + rng.below(2000);
+        // more words cost more
+        assert!(m.allgather(w + 1, p).seconds >= m.allgather(w, p).seconds);
+        assert!(m.allreduce(w + 1, p).seconds >= m.allreduce(w, p).seconds);
+        // reduce_scatter of w_total <= allgather contributing w_total/p each
+        assert!(m.reduce_scatter(w, p).seconds <= m.allgather(w, p).seconds + 1e-12);
+        // all costs positive for p > 1
+        assert!(m.bcast(w, p).seconds > 0.0);
+    }
+}
+
+#[test]
+fn prop_filter_bounded_on_dampened_interval() {
+    let mut rng = Rng::new(707);
+    for case in 0..60 {
+        let a0 = 0.0;
+        let b = 2.0;
+        let cut = 0.05 + rng.f64() * 1.5;
+        let m = 1 + rng.below(20);
+        // rho(a0) == 1 always
+        let at_bottom = filter_scalar(a0, m, cut, b, a0);
+        assert!(
+            (at_bottom - 1.0).abs() < 1e-8,
+            "case {case}: rho(a0)={at_bottom} m={m} cut={cut}"
+        );
+        // |rho| <= 1 + eps on [cut, b]
+        for t in 0..20 {
+            let x = cut + (b - cut) * t as f64 / 19.0;
+            let v = filter_scalar(x, m, cut, b, a0).abs();
+            assert!(v <= 1.0 + 1e-6, "case {case}: rho({x})={v} m={m} cut={cut}");
+        }
+    }
+}
+
+#[test]
+fn prop_metrics_bounds_and_permutation_invariance() {
+    let mut rng = Rng::new(808);
+    for case in 0..40 {
+        let n = 10 + rng.below(300);
+        let ka = 1 + rng.below(8);
+        let kb = 1 + rng.below(8);
+        let a: Vec<u32> = (0..n).map(|_| rng.below(ka) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.below(kb) as u32).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        let nmi = normalized_mutual_information(&a, &b);
+        assert!((-1.0..=1.0).contains(&ari), "case {case}: ARI {ari}");
+        assert!((0.0..=1.0).contains(&nmi), "case {case}: NMI {nmi}");
+        // permuting labels changes nothing
+        let shift: Vec<u32> = a.iter().map(|&x| (x + 7) % (ka as u32 + 9)).collect();
+        assert!((adjusted_rand_index(&shift, &b) - ari).abs() < 1e-12);
+        assert!((normalized_mutual_information(&shift, &b) - nmi).abs() < 1e-12);
+        // self-agreement
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_laplacian_spectrum_in_0_2() {
+    let mut rng = Rng::new(909);
+    for _case in 0..10 {
+        let n = 20 + rng.below(60);
+        let density = 0.05 + rng.f64() * 0.2;
+        let lap = random_laplacian(&mut rng, n, density);
+        let (vals, _) = dist_chebdav::linalg::eigh(&lap.to_dense());
+        assert!(vals[0] >= -1e-9 && vals[n - 1] <= 2.0 + 1e-9);
+    }
+}
+
+#[test]
+fn prop_partition2d_preserves_matrix() {
+    let mut rng = Rng::new(1010);
+    for case in 0..15 {
+        let n = 15 + rng.below(80);
+        let a = random_laplacian(&mut rng, n, 0.15);
+        let q = 1 + rng.below(6);
+        let dm = DistMatrix::new(&a, q);
+        let total: usize = (0..q)
+            .flat_map(|i| (0..q).map(move |j| (i, j)))
+            .map(|(i, j)| dm.block(i, j).nnz())
+            .sum();
+        assert_eq!(total, a.nnz(), "case {case}: nnz conserved q={q}");
+        assert!(dm.load_imbalance() >= 1.0 - 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Integration over the PJRT runtime: artifacts -> compile -> execute,
+//! cross-checked against the native kernels. Skips cleanly (with a
+//! visible marker) when `make artifacts` has not run.
+
+use dist_chebdav::cluster::{kmeans, row_normalize, KmeansOptions};
+use dist_chebdav::eig::{bchdav, BchdavOptions, SpmmOp};
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::linalg::Mat;
+use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
+use dist_chebdav::util::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(PjrtRuntime::load(&dir).expect("runtime load"))
+    } else {
+        eprintln!("[skip] artifacts not built — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn spmm_artifact_bucket_sweep() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    // sweep graph sizes across bucket boundaries
+    for n in [700usize, 1024, 1100, 4096, 5000] {
+        let mat = table2_matrix("LBOLBSV", n, 2);
+        let op = PjrtOperator::new(&rt, &mat.lap, 8).unwrap();
+        for k in [3usize, 8, 16] {
+            let x = Mat::randn(mat.lap.nrows, k, &mut rng);
+            let got = op.spmm(&x);
+            let want = mat.lap.spmm(&x);
+            let rel = got.max_abs_diff(&want) / want.frob_norm().max(1e-12);
+            assert!(rel < 1e-4, "n={n} k={k} rel={rel}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_pipeline_end_to_end_quality() {
+    let Some(rt) = runtime() else { return };
+    let mat = table2_matrix("LBOLBSV", 4096, 3);
+    let truth = mat.labels.clone().unwrap();
+    let clusters = (*truth.iter().max().unwrap() + 1) as usize;
+    let op = PjrtOperator::new(&rt, &mat.lap, 8).unwrap();
+    let opts = BchdavOptions::for_laplacian(16, 8, 11, 1e-3);
+    let res = bchdav(&op, &opts, None);
+    assert!(res.converged);
+    let k_got = res.eigenvalues.len().min(16);
+    let feats = row_normalize(&res.eigenvectors.cols_block(0, k_got));
+    let km = kmeans(&feats, &KmeansOptions::new(clusters));
+    let ari = dist_chebdav::cluster::adjusted_rand_index(&km.assignments, &truth);
+    assert!(ari > 0.8, "PJRT pipeline ARI {ari}");
+    assert!(rt.stats.borrow().pjrt_calls > 0, "hot path skipped PJRT");
+}
+
+#[test]
+fn stats_track_fallbacks_honestly() {
+    let Some(rt) = runtime() else { return };
+    let mat = table2_matrix("LBOLBSV", 1 << 15, 4); // 32768 > biggest bucket
+    let op = PjrtOperator::new(&rt, &mat.lap, 8).unwrap();
+    assert!(!op.has_pjrt_spmm(), "no bucket should fit 32768 rows");
+    let mut rng = Rng::new(5);
+    let x = Mat::randn(mat.lap.nrows, 8, &mut rng);
+    let got = op.spmm(&x);
+    assert!(got.max_abs_diff(&mat.lap.spmm(&x)) < 1e-12);
+    assert!(rt.stats.borrow().native_fallbacks > 0);
+}
+
+#[test]
+fn rownorm_and_kmeans_artifacts_execute() {
+    let Some(rt) = runtime() else { return };
+    // exercise the non-SpMM artifacts directly through the manifest
+    let entry = rt
+        .manifest
+        .find_bucket("rownorm", 4096, 0, 16, None)
+        .expect("rownorm bucket");
+    let exe = rt.executable(entry).unwrap();
+    let mut rng = Rng::new(6);
+    let x: Vec<f32> = (0..entry.n * entry.k).map(|_| rng.normal() as f32).collect();
+    let xb = rt.upload_f32(&x, &[entry.n, entry.k]).unwrap();
+    let y = rt.run_b(&exe, &[&xb]).unwrap();
+    // all rows unit-norm (input has no zero rows w.p. 1)
+    for i in 0..entry.n {
+        let nrm: f32 = (0..entry.k).map(|j| y[i * entry.k + j].powi(2)).sum::<f32>().sqrt();
+        assert!((nrm - 1.0).abs() < 1e-4, "row {i} norm {nrm}");
+    }
+
+    let kentry = rt
+        .manifest
+        .find_bucket("kmeans_assign", 4096, 0, 0, None)
+        .expect("kmeans bucket");
+    let exe = rt.executable(kentry).unwrap();
+    let d = kentry.d.unwrap();
+    let kc = kentry.kc.unwrap();
+    let pts: Vec<f32> = (0..kentry.n * d).map(|_| rng.normal() as f32).collect();
+    let cents: Vec<f32> = (0..kc * d).map(|_| rng.normal() as f32).collect();
+    let pb = rt.upload_f32(&pts, &[kentry.n, d]).unwrap();
+    let cb = rt.upload_f32(&cents, &[kc, d]).unwrap();
+    let assign = rt.run_b_i32(&exe, &[&pb, &cb]).unwrap();
+    assert_eq!(assign.len(), kentry.n);
+    assert!(assign.iter().all(|&a| (a as usize) < kc));
+    // spot-check optimality of a few assignments
+    for &i in &[0usize, 17, 4095] {
+        let dist = |c: usize| -> f32 {
+            (0..d).map(|t| (pts[i * d + t] - cents[c * d + t]).powi(2)).sum()
+        };
+        let got = dist(assign[i] as usize);
+        let best = (0..kc).map(dist).fold(f32::INFINITY, f32::min);
+        assert!(got <= best + 1e-4, "row {i}: {got} vs {best}");
+    }
+}
