@@ -1,0 +1,27 @@
+# dist-chebdav build entry points.
+#
+#   make artifacts  — AOT-lower the JAX/Pallas kernels to HLO text
+#                     artifacts the Rust runtime executes through PJRT
+#                     (requires the Python toolchain with jax installed;
+#                     everything else works without it — PJRT-gated
+#                     tests and benches skip when artifacts are absent).
+#   make tier1      — the repository's tier-1 verification.
+
+ARTIFACT_DIR := rust/artifacts
+
+.PHONY: artifacts tier1 test build clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACT_DIR)
+
+tier1:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+clean-artifacts:
+	rm -rf $(ARTIFACT_DIR)

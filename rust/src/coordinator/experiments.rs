@@ -13,7 +13,7 @@ use crate::sparse::avg_degree;
 /// Round a process count down to the nearest perfect square's root
 /// (the 2D grid wants q x q; the paper uses counts like 121 = 11^2).
 pub fn grid_side(p: usize) -> usize {
-    (1..=p).map(|q| q).take_while(|q| q * q <= p).last().unwrap_or(1)
+    (1..=p).take_while(|q| q * q <= p).last().unwrap_or(1)
 }
 
 // ---------------------------------------------------------------------
@@ -428,6 +428,48 @@ mod tests {
             rows[1].total,
             rows[0].total
         );
+    }
+
+    #[test]
+    fn component_scaling_total_time_decreases_with_p() {
+        // Fig. 6/7 regime: filter + spmm + tsqr modeled time (slowest-
+        // rank compute + alpha-beta comm) falls as the grid grows
+        let mat = table2_matrix("LBOLBSV", 4096, 6);
+        let cost = CostModel::default();
+        let ps = [1usize, 4, 16, 64];
+        let rows = component_scaling(&mat, 11, 8, &ps, &cost, 2);
+        assert_eq!(rows.len(), 3 * ps.len());
+        let total_at = |p: usize| -> f64 {
+            rows.iter()
+                .filter(|r| r.p == p)
+                .map(|r| r.compute + r.comm)
+                .sum()
+        };
+        let totals: Vec<f64> = ps.iter().map(|&p| total_at(p)).collect();
+        // each 4x grid step must not increase the modeled time (5% slack
+        // for wall-clock jitter on loaded machines) and the sweep as a
+        // whole must show a real drop
+        for (i, w) in totals.windows(2).enumerate() {
+            assert!(
+                w[1] < w[0] * 1.05,
+                "total modeled time must fall {} -> {}: {} vs {}",
+                ps[i],
+                ps[i + 1],
+                w[0],
+                w[1]
+            );
+        }
+        assert!(
+            totals[ps.len() - 1] < totals[0] * 0.5,
+            "p=64 must clearly beat p=1: {} vs {}",
+            totals[ps.len() - 1],
+            totals[0]
+        );
+        // and communication is actually being charged once p > 1
+        assert!(rows
+            .iter()
+            .filter(|r| r.p > 1)
+            .any(|r| r.comm > 0.0));
     }
 
     #[test]

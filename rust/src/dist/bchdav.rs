@@ -1,0 +1,482 @@
+//! Distributed Block Chebyshev-Davidson (the paper's Algorithm 2 run as
+//! Algorithm 4's SPMD program on the simulated grid).
+//!
+//! The state machine is a line-for-line mirror of the sequential
+//! `eig::bchdav` — same bookkeeping (k_c locked / k_act active / inner-
+//! outer restart), same RNG stream, same progressive filtering — with
+//! every kernel swapped for its distributed counterpart:
+//!
+//! * filter      -> `dist_cheb_filter` (m x 1.5D SpMM)        ["filter"]
+//! * A * V_new   -> `spmm_1p5d`                               ["spmm"]
+//! * orth        -> CGS passes (Gram allreduces) + `tsqr`     ["orth"]
+//! * Rayleigh    -> distributed Gram + replicated small eigh  ["rayleigh"]
+//! * residuals   -> recomputed via one extra 1.5D SpMM (the
+//!   paper's Table 1 accounting; the sequential driver reads
+//!   them off W for free — the numbers agree)                 ["residual"]
+//!
+//! Because the distributed kernels agree with the sequential ones to
+//! machine precision (exact 1D rows, sign-normalized TSQR, chunked
+//! elementwise passes), the distributed driver tracks the sequential
+//! iterates and its converged eigenvalues match `bchdav`'s within the
+//! residual tolerance — pinned down by the integration test
+//! `distributed_equals_sequential_eigenvalues`.
+
+use super::charged_rowwise;
+use super::filter::dist_cheb_filter;
+use super::matrix::DistMatrix;
+use super::spmm::spmm_1p5d;
+use super::tsqr::tsqr;
+use crate::eig::BchdavOptions;
+use crate::linalg::{eigh, matmul, Mat};
+use crate::mpi_sim::{CostModel, Ledger};
+use crate::util::{time_it, Rng};
+
+/// Paper §4 defaults for normalized-Laplacian spectral clustering — the
+/// distributed entry point to `BchdavOptions::for_laplacian` (analytic
+/// [0, 2] bounds, act_max = max(5 k_b, 30), no bound-estimation run).
+pub fn laplacian_opts(k_want: usize, k_b: usize, m: usize, tol: f64) -> BchdavOptions {
+    BchdavOptions::for_laplacian(k_want, k_b, m, tol)
+}
+
+#[derive(Clone, Debug)]
+pub struct DistBchdavResult {
+    /// Converged eigenvalues, ascending.
+    pub eigenvalues: Vec<f64>,
+    /// Corresponding eigenvectors (columns match `eigenvalues`).
+    pub eigenvectors: Mat,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Total 1.5D SpMM applications (filter + block + residual).
+    pub spmm_count: usize,
+    /// Per-component measured-compute / modeled-comm ledger
+    /// ("filter", "spmm", "orth", "rayleigh", "residual").
+    pub ledger: Ledger,
+}
+
+/// C = A^T B over the 1D row layout: every rank reduces its row range,
+/// then one allreduce of the small ac x bc result.
+fn dist_atb(
+    a: &Mat,
+    b: &Mat,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+    comp: &'static str,
+) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (ac, bc) = (a.cols, b.cols);
+    let mut c = Mat::zeros(ac, bc);
+    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
+        for i in lo..hi {
+            let ar = a.row(i);
+            let br = b.row(i);
+            for (t, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (d, &bv) in c.row_mut(t).iter_mut().zip(br.iter()) {
+                    *d += av * bv;
+                }
+            }
+        }
+    });
+    led.charge(comp, cost.allreduce(ac * bc, p));
+    c
+}
+
+/// C = A Y with A tall and Y small (the subspace rotation): purely
+/// rank-local in the 1D row layout — row chunks are independent, so the
+/// result is identical to the sequential `matmul`.
+fn dist_rows_matmul(a: &Mat, y: &Mat, p: usize, led: &mut Ledger, comp: &'static str) -> Mat {
+    let mut out = Mat::zeros(a.rows, y.cols);
+    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
+        if lo < hi {
+            out.set_rows_block(lo, &matmul(&a.rows_block(lo, hi), y));
+        }
+    });
+    out
+}
+
+/// Distributed mirror of `eig::bchdav::orthonormalize_against`: two CGS
+/// passes against the locked basis (Gram allreduces) + TSQR, with the
+/// same rank-deficiency replacement policy and RNG draw order.
+fn dist_orthonormalize_against(
+    v: &Mat,
+    k_sub: usize,
+    mut block: Mat,
+    rng: &mut Rng,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+) -> Mat {
+    let n = block.rows;
+    let kb = block.cols;
+    for _attempt in 0..3 {
+        if k_sub > 0 {
+            let basis = v.cols_block(0, k_sub);
+            for _ in 0..2 {
+                let coef = dist_atb(&basis, &block, p, cost, led, "orth");
+                let corr = dist_rows_matmul(&basis, &coef, p, led, "orth");
+                charged_rowwise(led, "orth", n, p, |lo, hi| {
+                    for (x, &y) in block.data[lo * kb..hi * kb]
+                        .iter_mut()
+                        .zip(corr.data[lo * kb..hi * kb].iter())
+                    {
+                        *x -= y;
+                    }
+                });
+            }
+        }
+        let (q, r) = tsqr(&block, p, cost, led, "orth");
+        let scale = (0..r.rows).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
+        let bad: Vec<usize> = (0..r.rows)
+            .filter(|&i| r[(i, i)].abs() <= 1e-10 * scale.max(1e-300))
+            .collect();
+        if bad.is_empty() {
+            return q;
+        }
+        block = q;
+        for &j in &bad {
+            let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            block.set_col(j, &col);
+        }
+    }
+    tsqr(&block, p, cost, led, "orth").0
+}
+
+/// Run distributed Block Chebyshev-Davidson on a 2D-partitioned matrix.
+/// `v_init` optionally supplies initial vectors (progressive filtering
+/// consumes them in order, as in the sequential driver).
+pub fn dist_bchdav(
+    dm: &DistMatrix,
+    opts: &BchdavOptions,
+    v_init: Option<&Mat>,
+    cost: &CostModel,
+) -> DistBchdavResult {
+    let n = dm.n();
+    let p = dm.p();
+    let kb = opts.k_b;
+    let act_max = opts.act_max.max(3 * kb);
+    let dim_max = opts.dim_max.max(opts.k_want + kb).min(n);
+    let mut led = Ledger::new();
+    let mut rng = Rng::new(opts.seed);
+    let mut spmm_count = 0usize;
+
+    let lowb = opts.bounds.lower;
+    let upperb = opts.bounds.upper;
+    // Step 1: initial cut between wanted and unwanted (paper §2).
+    let mut low_nwb = opts
+        .bounds
+        .initial_cut(opts.k_want, n)
+        .max(lowb + 1e-6 * (upperb - lowb));
+
+    // Step 2: initial block (same draw order as the sequential driver).
+    let k_init = v_init.map(|v| v.cols).unwrap_or(0);
+    let mut k_i = 0usize;
+    let take_init = |k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| -> Mat {
+        let mut block = Mat::zeros(n, count);
+        for c in 0..count {
+            if k_i + c < k_init {
+                let col = v_init.unwrap().col(k_i + c);
+                block.set_col(c, &col);
+            } else {
+                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                block.set_col(c, &col);
+            }
+        }
+        block
+    };
+    let mut v_tmp = take_init(k_i, kb, &mut rng, v_init);
+    k_i = k_i.min(k_init) + kb.min(k_init.saturating_sub(k_i));
+
+    // Basis and A-image storage (identical layout to the sequential run).
+    let mut v = Mat::zeros(n, dim_max + kb);
+    let mut w = Mat::zeros(n, act_max + kb);
+    let mut h = Mat::zeros(act_max + kb, act_max + kb);
+    let (mut k_c, mut k_sub, mut k_act) = (0usize, 0usize, 0usize);
+    let mut eval: Vec<f64> = Vec::new();
+    #[allow(unused_assignments)]
+    let mut ritz: Vec<f64> = Vec::new();
+
+    let mut iterations = 0usize;
+    while iterations < opts.itmax {
+        iterations += 1;
+
+        // Step 5: distributed Chebyshev filter.
+        let filtered =
+            dist_cheb_filter(dm, &v_tmp, opts.m, low_nwb, upperb, lowb, cost, &mut led, "filter");
+        spmm_count += opts.m;
+
+        // Step 6: orthonormalize against V(:, 0..k_sub).
+        let vnew =
+            dist_orthonormalize_against(&v, k_sub, filtered, &mut rng, p, cost, &mut led);
+        v.set_cols_block(k_sub, &vnew);
+
+        // Step 7: W(:, k_act..k_act+kb) = A * vnew (one 1.5D SpMM).
+        let av = spmm_1p5d(dm, &vnew, false, cost, &mut led, "spmm");
+        spmm_count += 1;
+        w.set_cols_block(k_act, &av);
+        k_act += kb;
+        k_sub += kb;
+
+        // Step 8: last kb columns of H over the active subspace
+        // (distributed Gram), then the sequential driver's mirror trick.
+        let vact = v.cols_block(k_c, k_sub);
+        let wnew = w.cols_block(k_act - kb, k_act);
+        let hcols = dist_atb(&vact, &wnew, p, cost, &mut led, "rayleigh");
+        let ((), dt) = time_it(|| {
+            let base = k_act - kb;
+            for i in 0..k_act {
+                for j in 0..kb {
+                    h[(i, base + j)] = hcols[(i, j)];
+                }
+            }
+            for i in 0..base {
+                for j in 0..kb {
+                    h[(base + j, i)] = hcols[(i, j)];
+                }
+            }
+            for a in 0..kb {
+                for b2 in a + 1..kb {
+                    let s = 0.5 * (h[(base + a, base + b2)] + h[(base + b2, base + a)]);
+                    h[(base + a, base + b2)] = s;
+                    h[(base + b2, base + a)] = s;
+                }
+            }
+        });
+        led.add_compute("rayleigh", dt);
+
+        // Step 9: eigendecomposition of H(0..k_act, 0..k_act), ascending.
+        // H is replicated on every rank, so the small eigh is redundant
+        // local work — billed once, no communication.
+        let ((d_all, y_all), dt) = time_it(|| {
+            let mut hk = Mat::zeros(k_act, k_act);
+            for i in 0..k_act {
+                for j in 0..k_act {
+                    hk[(i, j)] = h[(i, j)];
+                }
+            }
+            eigh(&hk)
+        });
+        led.add_compute("rayleigh", dt);
+        let k_old = k_act;
+
+        // Step 10: inner restart.
+        if k_act + kb > act_max {
+            let k_ri = (act_max / 2).max(act_max.saturating_sub(3 * kb)).max(kb);
+            k_act = k_ri;
+            k_sub = k_act + k_c;
+        }
+
+        // Step 11: subspace rotation (rank-local row blocks).
+        {
+            let mut y = Mat::zeros(k_old, k_act);
+            for i in 0..k_old {
+                for j in 0..k_act {
+                    y[(i, j)] = y_all[(i, j)];
+                }
+            }
+            let vact = v.cols_block(k_c, k_c + k_old);
+            let vrot = dist_rows_matmul(&vact, &y, p, &mut led, "rayleigh");
+            v.set_cols_block(k_c, &vrot);
+            let wact = w.cols_block(0, k_old);
+            let wrot = dist_rows_matmul(&wact, &y, p, &mut led, "rayleigh");
+            w.set_cols_block(0, &wrot);
+        }
+        ritz = d_all[..k_act].to_vec();
+
+        // Step 12: residuals of the first kb active Ritz pairs,
+        // recomputed through one extra 1.5D SpMM (Table 1 accounting).
+        let test = kb.min(k_act);
+        let avr = spmm_1p5d(
+            dm,
+            &v.cols_block(k_c, k_c + test),
+            false,
+            cost,
+            &mut led,
+            "residual",
+        );
+        spmm_count += 1;
+        let mut nrm2s = vec![0.0f64; test];
+        charged_rowwise(&mut led, "residual", n, p, |lo, hi| {
+            for i in lo..hi {
+                for (j, acc) in nrm2s.iter_mut().enumerate() {
+                    let r = avr[(i, j)] - ritz[j] * v[(i, k_c + j)];
+                    *acc += r * r;
+                }
+            }
+        });
+        led.charge("residual", cost.allreduce(test, p));
+        let mut e_c = 0usize;
+        for &nrm2 in &nrm2s {
+            if nrm2.sqrt() <= opts.tol {
+                e_c += 1;
+            } else {
+                break; // converged prefix only (sorted ascending)
+            }
+        }
+
+        if e_c > 0 {
+            // lock: converged columns already sit at V(:, k_c..k_c+e_c)
+            eval.extend_from_slice(&ritz[..e_c]);
+            k_c += e_c;
+            // Step 14: shift W left by e_c columns.
+            let wtail = w.cols_block(e_c, k_act);
+            w.set_cols_block(0, &wtail);
+            k_act -= e_c;
+            ritz.drain(..e_c);
+        }
+
+        // Step 13: done?
+        if k_c >= opts.k_want {
+            break;
+        }
+
+        // Step 15: H <- diag(non-converged Ritz values).
+        for i in 0..act_max + kb {
+            for j in 0..act_max + kb {
+                h[(i, j)] = 0.0;
+            }
+        }
+        for (i, &r) in ritz.iter().enumerate() {
+            h[(i, i)] = r;
+        }
+
+        // Step 16: outer restart.
+        if k_sub + kb > dim_max {
+            let k_ro = dim_max
+                .saturating_sub(2 * kb)
+                .saturating_sub(k_c)
+                .clamp(kb, k_act.max(kb));
+            let k_ro = k_ro.min(k_act);
+            k_sub = k_c + k_ro;
+            k_act = k_ro;
+            ritz.truncate(k_act);
+        }
+
+        // Step 17: progressive filtering — next block mixes unused
+        // initial vectors with the best non-converged Ritz vectors.
+        let fresh = e_c.min(k_init.saturating_sub(k_i));
+        v_tmp = Mat::zeros(n, kb);
+        if fresh > 0 {
+            let init_cols = take_init(k_i, fresh, &mut rng, v_init);
+            for c in 0..fresh {
+                let col = init_cols.col(c);
+                v_tmp.set_col(c, &col);
+            }
+            k_i += fresh;
+        }
+        for c in fresh..kb {
+            let src = k_c + (c - fresh);
+            if src < k_sub {
+                let col = v.col(src);
+                v_tmp.set_col(c, &col);
+            } else {
+                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                v_tmp.set_col(c, &col);
+            }
+        }
+
+        // Step 18: move the cut to the median of non-converged Ritz values.
+        if !ritz.is_empty() {
+            let mut sorted = ritz.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = sorted[sorted.len() / 2];
+            if med > lowb && med < upperb {
+                low_nwb = med;
+            }
+        }
+    }
+
+    // Sort locked pairs ascending (deflation locked them in batches).
+    let mut idx: Vec<usize> = (0..k_c).collect();
+    idx.sort_by(|&i, &j| eval[i].partial_cmp(&eval[j]).unwrap());
+    let mut out_vals = Vec::with_capacity(k_c);
+    let mut out_vecs = Mat::zeros(n, k_c);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        out_vals.push(eval[oldj]);
+        let col = v.col(oldj);
+        out_vecs.set_col(newj, &col);
+    }
+
+    DistBchdavResult {
+        converged: k_c >= opts.k_want,
+        eigenvalues: out_vals,
+        eigenvectors: out_vecs,
+        iterations,
+        spmm_count,
+        ledger: led,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eig::bchdav;
+    use crate::linalg::ortho_error;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    fn lap(n: usize, density: f64, seed: u64) -> crate::sparse::Csr {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < density {
+                    edges.push((u, v));
+                }
+            }
+        }
+        normalized_laplacian(n, &edges)
+    }
+
+    #[test]
+    fn matches_sequential_on_random_laplacian() {
+        let a = lap(150, 0.06, 7);
+        let opts = laplacian_opts(4, 2, 11, 1e-8);
+        let seq = bchdav(&a, &opts, None);
+        assert!(seq.converged);
+        let cost = CostModel::default();
+        for q in [1usize, 3] {
+            let dm = DistMatrix::new(&a, q);
+            let res = dist_bchdav(&dm, &opts, None, &cost);
+            assert!(res.converged, "q={q} after {} iters", res.iterations);
+            for (d, s) in res.eigenvalues.iter().zip(seq.eigenvalues.iter()) {
+                assert!((d - s).abs() < 1e-6, "q={q}: {d} vs {s}");
+            }
+            assert!(ortho_error(&res.eigenvectors) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn ledger_has_all_five_components() {
+        let a = lap(120, 0.08, 9);
+        let dm = DistMatrix::new(&a, 2);
+        let res = dist_bchdav(&dm, &laplacian_opts(3, 3, 9, 1e-6), None, &CostModel::default());
+        assert!(res.converged);
+        let comps = res.ledger.components();
+        for want in ["filter", "spmm", "orth", "rayleigh", "residual"] {
+            assert!(comps.contains(&want), "missing component {want}: {comps:?}");
+        }
+        // the filter dominates communication (Fig. 8's headline)
+        assert!(res.ledger.comm_of("filter") > res.ledger.comm_of("orth"));
+    }
+
+    #[test]
+    fn warm_start_uses_initial_vectors() {
+        let a = lap(140, 0.07, 11);
+        let dm = DistMatrix::new(&a, 2);
+        let opts = laplacian_opts(4, 2, 11, 1e-7);
+        let cost = CostModel::default();
+        let cold = dist_bchdav(&dm, &opts, None, &cost);
+        assert!(cold.converged);
+        let warm = dist_bchdav(&dm, &opts, Some(&cold.eigenvectors), &cost);
+        assert!(warm.converged);
+        assert!(
+            warm.iterations <= cold.iterations + 1,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! The 2D-partitioned sparse matrix of the 1.5D algorithm (paper Fig. 1).
+//!
+//! `DistMatrix` couples the grid's index arithmetic (`mpi_sim::Grid` —
+//! outer 2D ranges plus the nested 1D sub-blocking the dense panels use)
+//! with the actual sub-matrices (`sparse::Partition2D`). Process P(i, j)
+//! owns block A[i, j] permanently — the "A-Stationary" discipline: A is
+//! partitioned once and never moves; only panel blocks travel.
+
+use crate::mpi_sim::Grid;
+use crate::sparse::{Csr, Partition2D};
+
+pub struct DistMatrix {
+    pub grid: Grid,
+    pub part: Partition2D,
+}
+
+impl DistMatrix {
+    /// Partition a square sparse matrix over a q x q grid (p = q^2).
+    pub fn new(a: &Csr, q: usize) -> DistMatrix {
+        assert_eq!(a.nrows, a.ncols, "distributed matrix must be square");
+        assert!(q >= 1);
+        DistMatrix {
+            grid: Grid::new(a.nrows, q),
+            part: Partition2D::new(a, q),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.grid.n
+    }
+
+    pub fn q(&self) -> usize {
+        self.grid.q
+    }
+
+    /// Simulated process count p = q^2.
+    pub fn p(&self) -> usize {
+        self.grid.p()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.part.total_nnz()
+    }
+
+    /// The stationary block owned by P(i, j) (local indices).
+    pub fn block(&self, i: usize, j: usize) -> &Csr {
+        &self.part.blocks[i][j]
+    }
+
+    /// Load imbalance (paper eq. 19): p * max_ij nnz(A[i,j]) / nnz(A).
+    pub fn load_imbalance(&self) -> f64 {
+        self.part.load_imbalance()
+    }
+
+    /// Rows of the largest flat (nested-1D) dense block — the per-rank
+    /// panel contribution in the column-communicator allgather.
+    pub(crate) fn max_flat_rows(&self) -> usize {
+        self.grid.flat.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0)
+    }
+
+    /// Rows of the largest outer (2D) range — the reduce-scatter vector
+    /// length along a row communicator.
+    pub(crate) fn max_outer_rows(&self) -> usize {
+        self.grid.outer.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    fn lap(n: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < density {
+                    edges.push((u, v));
+                }
+            }
+        }
+        normalized_laplacian(n, &edges)
+    }
+
+    #[test]
+    fn blocks_conserve_nnz() {
+        let a = lap(67, 0.1, 1);
+        for q in [1usize, 2, 5] {
+            let dm = DistMatrix::new(&a, q);
+            let total: usize = (0..q)
+                .flat_map(|i| (0..q).map(move |j| (i, j)))
+                .map(|(i, j)| dm.block(i, j).nnz())
+                .sum();
+            assert_eq!(total, a.nnz(), "q={q}");
+            assert_eq!(dm.nnz(), a.nnz());
+            assert!(dm.load_imbalance() >= 1.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn grid_and_partition_ranges_agree() {
+        let a = lap(103, 0.08, 2);
+        let dm = DistMatrix::new(&a, 4);
+        assert_eq!(dm.grid.outer, dm.part.row_ranges);
+        assert_eq!(dm.grid.outer, dm.part.col_ranges);
+        assert!(dm.max_flat_rows() >= 1);
+        assert!(dm.max_outer_rows() >= dm.max_flat_rows());
+    }
+}

@@ -1,0 +1,67 @@
+//! The distributed layer (paper §3) over the simulated process grid.
+//!
+//! This is the paper's headline contribution, reproduced on the
+//! `mpi_sim` substrate: the sparse A is 2D-partitioned over a
+//! sqrt(p) x sqrt(p) grid while the tall-skinny dense panels are
+//! 1D-partitioned with the transposed V/U ownership of Fig. 1
+//! ([`DistMatrix`]); on top of that layout sit
+//!
+//! * [`spmm_1p5d`] — the A-Stationary 1.5D SpMM (allgather along column
+//!   communicators, reduce-scatter along row communicators, remedy-(b)
+//!   redistribution back to the V layout);
+//! * [`spmm_1d`] / [`rows_1d`] — the PARSEC-style 1D baseline whose
+//!   full-panel allgather volume is sqrt(p) times larger (Fig. 9);
+//! * [`tsqr`] — butterfly tall-skinny QR (Alg. 6), sign-normalized so it
+//!   agrees with the sequential Householder QR exactly;
+//! * [`dgks_orthonormalize`] — the PARSEC DGKS baseline whose per-column
+//!   allreduces stop scaling (Fig. 9's orthonormalization panel);
+//! * [`dist_cheb_filter`] — Alg. 3 over the 1.5D SpMM;
+//! * [`dist_bchdav`] — the distributed Algorithm 2 driver reusing the
+//!   sequential `eig::bchdav` bookkeeping, with the per-component
+//!   compute/comm [`Ledger`](crate::mpi_sim::Ledger) the figure benches
+//!   read (Figs. 6-8, Tables 1-2);
+//! * [`arpack_scaling`] / [`lobpcg_scaling`] — the Fig. 5 cost replays.
+//!
+//! Every collective is charged through the alpha-beta
+//! [`CostModel`](crate::mpi_sim::CostModel); every rank's local compute
+//! is actually executed and billed at the slowest rank's share (see
+//! mpi_sim's ledger doc). See DESIGN.md for the per-figure index.
+
+pub mod bchdav;
+pub mod filter;
+pub mod matrix;
+pub mod orth;
+pub mod scaling;
+pub mod spmm;
+pub mod tsqr;
+
+pub use bchdav::{dist_bchdav, laplacian_opts, DistBchdavResult};
+pub use filter::dist_cheb_filter;
+pub use matrix::DistMatrix;
+pub use orth::dgks_orthonormalize;
+pub use scaling::{arpack_scaling, lobpcg_scaling, ScalingPoint, SolverScaling};
+pub use spmm::{rows_1d, spmm_1d, spmm_1p5d};
+pub use tsqr::tsqr;
+
+use crate::mpi_sim::Ledger;
+use crate::sparse::split_ranges;
+
+/// Run a row-parallel local computation as one lockstep superstep over
+/// `p` simulated ranks owning contiguous row ranges, charging the
+/// slowest rank's share of the measured loop time to `comp` (see
+/// `Ledger::superstep_weighted`). The body sees `[lo, hi)` row ranges in
+/// rank order, so results are byte-identical to the sequential loop.
+pub(crate) fn charged_rowwise(
+    led: &mut Ledger,
+    comp: &'static str,
+    n: usize,
+    p: usize,
+    mut body: impl FnMut(usize, usize),
+) {
+    let ranges = split_ranges(n, p.max(1));
+    let weights: Vec<f64> = ranges.iter().map(|&(lo, hi)| (hi - lo) as f64).collect();
+    led.superstep_weighted(comp, &weights, |r| {
+        let (lo, hi) = ranges[r];
+        body(lo, hi);
+    });
+}

@@ -1,0 +1,174 @@
+//! PARSEC-style DGKS orthonormalization — the baseline TSQR replaces.
+//!
+//! In the 1D row layout every inner product is an allreduce: two block
+//! classical Gram-Schmidt passes against the locked basis (one
+//! k_sub x kb Gram allreduce each), then column-by-column DGKS inside
+//! the block (per column: two projection allreduces of j words plus the
+//! norm allreduce). That is O(k) latency-bound collectives per block
+//! versus TSQR's O(log p) — the non-scaling orthonormalization the paper
+//! benchmarks against in Fig. 9.
+
+use super::charged_rowwise;
+use crate::linalg::Mat;
+use crate::mpi_sim::{CostModel, Ledger};
+
+/// Orthonormalize `v` against the first `k_sub` columns of `basis` and
+/// internally, DGKS-style, over `p` simulated ranks. Returns the
+/// orthonormalized block; near-null columns are left unnormalized (the
+/// caller decides replacement policy — the benches only need the cost).
+pub fn dgks_orthonormalize(
+    basis: &Mat,
+    k_sub: usize,
+    v: &Mat,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+    comp: &'static str,
+) -> Mat {
+    let n = v.rows;
+    let kb = v.cols;
+    assert!(k_sub <= basis.cols, "k_sub {} > basis cols {}", k_sub, basis.cols);
+    assert!(k_sub == 0 || basis.rows == n);
+    let mut w = v.clone();
+
+    // block CGS against the locked basis — "twice is enough"
+    if k_sub > 0 {
+        for _pass in 0..2 {
+            let mut coef = vec![0.0f64; k_sub * kb];
+            charged_rowwise(led, comp, n, p, |lo, hi| {
+                for i in lo..hi {
+                    let br = basis.row(i);
+                    let wr = w.row(i);
+                    for (c, &bv) in br[..k_sub].iter().enumerate() {
+                        if bv == 0.0 {
+                            continue;
+                        }
+                        let dst = &mut coef[c * kb..(c + 1) * kb];
+                        for (d, &wv) in dst.iter_mut().zip(wr.iter()) {
+                            *d += bv * wv;
+                        }
+                    }
+                }
+            });
+            led.charge(comp, cost.allreduce(k_sub * kb, p));
+            charged_rowwise(led, comp, n, p, |lo, hi| {
+                for i in lo..hi {
+                    // w.row(i) -= basis.row(i)[..k_sub] * coef
+                    let mut corr = vec![0.0f64; kb];
+                    {
+                        let br = basis.row(i);
+                        for (c, &bv) in br[..k_sub].iter().enumerate() {
+                            if bv == 0.0 {
+                                continue;
+                            }
+                            for (d, &cv) in corr.iter_mut().zip(coef[c * kb..(c + 1) * kb].iter()) {
+                                *d += bv * cv;
+                            }
+                        }
+                    }
+                    for (x, &y) in w.row_mut(i).iter_mut().zip(corr.iter()) {
+                        *x -= y;
+                    }
+                }
+            });
+        }
+    }
+
+    // column-by-column DGKS inside the block
+    for j in 0..kb {
+        for _pass in 0..2 {
+            if j == 0 {
+                continue;
+            }
+            let mut dots = vec![0.0f64; j];
+            charged_rowwise(led, comp, n, p, |lo, hi| {
+                for i in lo..hi {
+                    let wr = w.row(i);
+                    let wij = wr[j];
+                    if wij == 0.0 {
+                        continue;
+                    }
+                    for (d, &wc) in dots.iter_mut().zip(wr[..j].iter()) {
+                        *d += wc * wij;
+                    }
+                }
+            });
+            led.charge(comp, cost.allreduce(j, p));
+            charged_rowwise(led, comp, n, p, |lo, hi| {
+                for i in lo..hi {
+                    let wr = w.row_mut(i);
+                    let mut acc = 0.0;
+                    for (&d, &wc) in dots.iter().zip(wr[..j].iter()) {
+                        acc += d * wc;
+                    }
+                    wr[j] -= acc;
+                }
+            });
+        }
+        let mut nrm2 = 0.0f64;
+        charged_rowwise(led, comp, n, p, |lo, hi| {
+            for i in lo..hi {
+                let x = w[(i, j)];
+                nrm2 += x * x;
+            }
+        });
+        led.charge(comp, cost.allreduce(1, p));
+        let nrm = nrm2.sqrt();
+        if nrm > 1e-300 {
+            let inv = 1.0 / nrm;
+            charged_rowwise(led, comp, n, p, |lo, hi| {
+                for i in lo..hi {
+                    w[(i, j)] *= inv;
+                }
+            });
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{atb, ortho_error, qr_thin};
+    use crate::util::Rng;
+
+    #[test]
+    fn orthonormalizes_a_random_block() {
+        let mut rng = Rng::new(1);
+        let v = Mat::randn(120, 6, &mut rng);
+        let basis = Mat::zeros(120, 0);
+        let mut led = Ledger::new();
+        let q = dgks_orthonormalize(&basis, 0, &v, 16, &CostModel::default(), &mut led, "orth");
+        assert!(ortho_error(&q) < 1e-10);
+        assert!(led.comm_of("orth") > 0.0);
+    }
+
+    #[test]
+    fn respects_locked_basis() {
+        let mut rng = Rng::new(2);
+        let basis = qr_thin(&Mat::randn(80, 5, &mut rng)).0;
+        let v = Mat::randn(80, 3, &mut rng);
+        let mut led = Ledger::new();
+        let q = dgks_orthonormalize(&basis, 5, &v, 4, &CostModel::default(), &mut led, "orth");
+        let cross = atb(&basis, &q);
+        let max = cross.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        assert!(max < 1e-10, "basis leakage {max}");
+        assert!(ortho_error(&q) < 1e-10);
+    }
+
+    #[test]
+    fn more_messages_than_tsqr() {
+        // the Fig. 9 point: DGKS pays O(k) collectives vs TSQR's O(log p)
+        let mut rng = Rng::new(3);
+        let v = Mat::randn(256, 16, &mut rng);
+        let cost = CostModel::default();
+        let basis = Mat::zeros(256, 0);
+        let mut dg = Ledger::new();
+        dgks_orthonormalize(&basis, 0, &v, 64, &cost, &mut dg, "orth");
+        let mut ts = Ledger::new();
+        super::super::tsqr::tsqr(&v, 64, &cost, &mut ts, "orth");
+        let m_dgks = dg.messages.get("orth").copied().unwrap_or(0.0);
+        let m_tsqr = ts.messages.get("orth").copied().unwrap_or(0.0);
+        assert!(m_dgks > 4.0 * m_tsqr, "DGKS {m_dgks} vs TSQR {m_tsqr}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Fig. 5 cost replays: parallel ARPACK and LOBPCG scalability.
+//!
+//! The paper's Fig. 5 point is structural, not about absolute speed:
+//! both baselines spend every iteration in full (re)orthogonalization
+//! collectives whose cost does not shrink with p, so their speedups
+//! flatten past a few hundred processes while the local work keeps
+//! shrinking. The replay runs the *sequential* solver once (real,
+//! measured), then prices each process count with the alpha-beta model:
+//! compute = T_seq / p (perfect local split — generous to the
+//! baselines), comm = iterations x per-iteration collective cost in the
+//! 1D row layout both solvers use in practice.
+
+use crate::eig::{lanczos_smallest, lobpcg, LanczosOptions, LobpcgOptions};
+use crate::mpi_sim::CostModel;
+use crate::sparse::Csr;
+use crate::util::time_it;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    pub p: usize,
+    /// Modeled parallel time: compute + comm.
+    pub time: f64,
+    pub speedup: f64,
+    pub compute: f64,
+    pub comm: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SolverScaling {
+    pub solver: &'static str,
+    /// Measured sequential wall time (the p = 1 baseline).
+    pub seq_compute: f64,
+    /// Matvec/iteration count of the measured run (what the comm model
+    /// multiplies).
+    pub iterations: usize,
+    pub converged: bool,
+    pub points: Vec<ScalingPoint>,
+}
+
+fn replay(
+    solver: &'static str,
+    seq_t: f64,
+    iterations: usize,
+    converged: bool,
+    ps: &[usize],
+    comm_per_iter: impl Fn(usize) -> f64,
+) -> SolverScaling {
+    let points = ps
+        .iter()
+        .map(|&p| {
+            let p = p.max(1);
+            let compute = seq_t / p as f64;
+            let comm = if p > 1 {
+                iterations as f64 * comm_per_iter(p)
+            } else {
+                0.0
+            };
+            let time = compute + comm;
+            ScalingPoint {
+                p,
+                time,
+                speedup: seq_t / time.max(1e-300),
+                compute,
+                comm,
+            }
+        })
+        .collect();
+    SolverScaling {
+        solver,
+        seq_compute: seq_t,
+        iterations,
+        converged,
+        points,
+    }
+}
+
+/// ARPACK stand-in scaling: thick-restart Lanczos, one SpMV plus full
+/// reorthogonalization against the whole ncv-wide basis per step.
+pub fn arpack_scaling(
+    a: &Csr,
+    k: usize,
+    tol: f64,
+    ps: &[usize],
+    cost: &CostModel,
+) -> SolverScaling {
+    let mut opts = LanczosOptions::new(k, tol);
+    opts.itmax = 200_000;
+    let (res, seq_t) = time_it(|| lanczos_smallest(a, &opts));
+    let n = a.nrows;
+    let ncv = opts.m_max.min(n);
+    replay("ARPACK", seq_t, res.matvecs, res.converged, ps, |p| {
+        // per Lanczos step in the 1D row layout: gather the iteration
+        // vector for the SpMV, two full-reorthogonalization Gram
+        // allreduces (the part that stops scaling), and the beta norm
+        cost.allgather(n.div_ceil(p), p).seconds
+            + 2.0 * cost.allreduce(ncv, p).seconds
+            + cost.allreduce(1, p).seconds
+    })
+}
+
+/// LOBPCG scaling: per iteration one block SpMM plus the Gram /
+/// orthonormalization allreduces of the 3k-wide trial basis [X, T R, P].
+pub fn lobpcg_scaling(
+    a: &Csr,
+    k: usize,
+    tol: f64,
+    ps: &[usize],
+    cost: &CostModel,
+) -> SolverScaling {
+    let opts = LobpcgOptions::new(k, tol);
+    let (res, seq_t) = time_it(|| lobpcg(a, &opts, None));
+    let n = a.nrows;
+    replay("LOBPCG", seq_t, res.iterations, res.converged, ps, |p| {
+        let s = 3 * k;
+        cost.allgather(n.div_ceil(p) * k, p).seconds
+            + cost.allreduce(s * s, p).seconds
+            + cost.allreduce(s * k, p).seconds
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::normalized_laplacian;
+    use crate::util::Rng;
+
+    fn lap(n: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < density {
+                    edges.push((u, v));
+                }
+            }
+        }
+        normalized_laplacian(n, &edges)
+    }
+
+    #[test]
+    fn speedup_grows_then_flattens() {
+        // n large enough that one step's local work clearly exceeds one
+        // step's collectives at small p (the regime Fig. 5 starts in)
+        let a = lap(3000, 0.008, 1);
+        let ps = [1usize, 4, 64, 1024, 16384];
+        let cost = CostModel::default();
+        for scaling in [
+            arpack_scaling(&a, 6, 0.1, &ps, &cost),
+            lobpcg_scaling(&a, 6, 0.1, &ps, &cost),
+        ] {
+            let sp: Vec<f64> = scaling.points.iter().map(|pt| pt.speedup).collect();
+            assert!((sp[0] - 1.0).abs() < 1e-9, "{}: p=1 speedup {}", scaling.solver, sp[0]);
+            assert!(sp[1] > sp[0], "{}: no gain at p=4", scaling.solver);
+            for (pt, s) in scaling.points.iter().zip(sp.iter()) {
+                assert!(*s <= pt.p as f64 + 1e-9, "{}: superlinear", scaling.solver);
+                assert!(pt.time > 0.0 && pt.compute > 0.0);
+            }
+            // modeled compute splits perfectly; comm only grows
+            for w in scaling.points.windows(2) {
+                assert!(w[1].compute < w[0].compute);
+                assert!(w[1].comm >= w[0].comm);
+            }
+            // the tail flattens: the last 16x process increase buys far
+            // less than 16x (collectives dominate)
+            assert!(
+                sp[4] < sp[3] * 4.0,
+                "{}: tail should flatten ({} vs {})",
+                scaling.solver,
+                sp[4],
+                sp[3]
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Butterfly tall-skinny QR (paper Alg. 6).
+//!
+//! Each simulated rank Householder-factors its contiguous row block,
+//! then the k x k R factors combine pairwise up a binary tree: stack two
+//! R's, QR the 2k x k stack, and push the small orthogonal factors back
+//! down into the group Q's. Every local QR is sign-normalized
+//! (diag(R) >= 0), and thin QR with a positive diagonal is unique for
+//! full-rank input, so the tree result equals the sequential
+//! `linalg::qr_thin` up to rounding — which is what makes the
+//! distributed driver agree with the sequential one to machine
+//! precision, and what the tree-shape invariance tests pin down.
+//!
+//! Cost: the butterfly exchanges one k x k R factor per level —
+//! O(log p) messages, O(k^2 log p) words (paper Table 1's "orth" row).
+//! The communication does not scale with p, but its absolute volume is
+//! tiny next to the filter's panels (Fig. 6).
+
+use crate::linalg::{matmul, qr_thin, Mat};
+use crate::mpi_sim::{CostModel, Ledger};
+use crate::sparse::split_ranges;
+
+/// TSQR of a tall panel over `p` simulated ranks: returns (Q, R) with
+/// Q (n x k) orthonormal, R (k x k) upper-triangular, diag(R) >= 0.
+pub fn tsqr(
+    v: &Mat,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+    comp: &'static str,
+) -> (Mat, Mat) {
+    let (n, k) = (v.rows, v.cols);
+    assert!(n >= k, "TSQR expects a tall panel, got {n}x{k}");
+    let p = p.max(1);
+    // every leaf must hold at least k rows for its local Householder QR;
+    // more ranks than n/k rows simply leaves some simulated ranks idle
+    let p_eff = if k == 0 { 1 } else { p.min((n / k).max(1)) };
+    let ranges = split_ranges(n, p_eff);
+
+    // level 0: local QR per rank
+    let weights: Vec<f64> = ranges.iter().map(|&(lo, hi)| (hi - lo) as f64).collect();
+    let locals: Vec<(Mat, Mat)> = led.superstep_weighted(comp, &weights, |r| {
+        let (lo, hi) = ranges[r];
+        qr_thin(&v.rows_block(lo, hi))
+    });
+    let (mut qs, mut rs): (Vec<Mat>, Vec<Mat>) = locals.into_iter().unzip();
+
+    // combine tree: adjacent groups pair up, odd group carries over;
+    // groups stay in row order so vcat reassembles the global Q directly
+    let mut levels = 0usize;
+    while qs.len() > 1 {
+        levels += 1;
+        let pairs = qs.len() / 2;
+        let merged: Vec<(Mat, Mat)> = led.superstep(comp, pairs, |m| {
+            let stacked = rs[2 * m].vcat(&rs[2 * m + 1]);
+            let (qq, r) = qr_thin(&stacked);
+            let qa = matmul(&qs[2 * m], &qq.rows_block(0, k));
+            let qb = matmul(&qs[2 * m + 1], &qq.rows_block(k, 2 * k));
+            (qa.vcat(&qb), r)
+        });
+        let carry = if qs.len() % 2 == 1 {
+            Some((qs.pop().unwrap(), rs.pop().unwrap()))
+        } else {
+            None
+        };
+        qs.clear();
+        rs.clear();
+        for (qm, rm) in merged {
+            qs.push(qm);
+            rs.push(rm);
+        }
+        if let Some((qc, rc)) = carry {
+            qs.push(qc);
+            rs.push(rc);
+        }
+    }
+
+    // butterfly exchange: one k x k R factor per level of the executed
+    // combine tree (= ceil(log2 p) when every rank holds >= k rows, the
+    // regime of all the figure runs; fewer when short panels idle ranks)
+    if p > 1 && k > 0 {
+        for _ in 0..levels.max(1) {
+            led.charge(comp, cost.send(k * k));
+        }
+    }
+
+    (qs.pop().unwrap(), rs.pop().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ortho_error, qr_residual};
+    use crate::util::Rng;
+
+    #[test]
+    fn equals_sequential_qr_for_any_tree_shape() {
+        let mut rng = Rng::new(1);
+        let cost = CostModel::default();
+        let v = Mat::randn(90, 6, &mut rng);
+        let (qs, rs_) = qr_thin(&v);
+        for p in [1usize, 2, 3, 7, 16, 64] {
+            let mut led = Ledger::new();
+            let (q, r) = tsqr(&v, p, &cost, &mut led, "orth");
+            assert!(q.max_abs_diff(&qs) < 1e-9, "p={p}");
+            assert!(r.max_abs_diff(&rs_) < 1e-9, "p={p}");
+            assert!(ortho_error(&q) < 1e-10, "p={p}");
+            assert!(qr_residual(&v, &q, &r) < 1e-10, "p={p}");
+        }
+    }
+
+    #[test]
+    fn more_ranks_than_row_blocks_is_safe() {
+        let mut rng = Rng::new(2);
+        let v = Mat::randn(10, 5, &mut rng); // only 2 leaves of 5 rows fit
+        let mut led = Ledger::new();
+        let (q, r) = tsqr(&v, 1024, &CostModel::default(), &mut led, "orth");
+        assert!(ortho_error(&q) < 1e-10);
+        assert!(qr_residual(&v, &q, &r) < 1e-10);
+    }
+
+    #[test]
+    fn comm_is_k_squared_log_p() {
+        let mut rng = Rng::new(3);
+        let v = Mat::randn(256, 4, &mut rng);
+        let cost = CostModel { alpha: 0.0, beta: 1.0 };
+        let mut led = Ledger::new();
+        tsqr(&v, 16, &cost, &mut led, "orth");
+        // 4 levels x 16 words
+        let words = led.words.get("orth").copied().unwrap_or(0.0);
+        assert!((words - 64.0).abs() < 1e-9, "words {words}");
+    }
+}

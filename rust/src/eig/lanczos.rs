@@ -6,8 +6,8 @@
 //! this baseline is its *cost structure*: one SpMV per step plus full
 //! (re)orthogonalization against the whole basis every step — the
 //! orthogonalization being exactly what stops scaling in parallel
-//! (paper Fig. 5). The distributed variant (dist/lanczos.rs) charges
-//! those collectives per step.
+//! (paper Fig. 5). The distributed cost replay (dist/scaling.rs)
+//! charges those collectives per step.
 
 use super::bounds::SpectrumBounds;
 use super::op::SpmmOp;

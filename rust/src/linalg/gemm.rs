@@ -91,7 +91,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 }
 
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// C = A * B with A tall (n x a) and B small (a x b): the subspace
 /// rotation V <- V * Y. Same kernel as matmul but kept as a named entry

@@ -127,6 +127,42 @@ mod tests {
     }
 
     #[test]
+    fn flat_blocks_nest_inside_their_outer_range() {
+        // the Fig. 1 alignment the 1.5D SpMM relies on: flat block
+        // j*q + l is the l-th sub-block of outer column range j
+        for &(n, q) in &[(100, 3), (17, 4), (64, 8), (5, 1), (121, 11)] {
+            let g = Grid::new(n, q);
+            for j in 0..q {
+                let (lo, hi) = g.outer[j];
+                for l in 0..q {
+                    let (blo, bhi) = g.flat[j * q + l];
+                    assert!(
+                        lo <= blo && bhi <= hi,
+                        "n={n} q={q}: flat[{j}*{q}+{l}]=({blo},{bhi}) outside outer[{j}]=({lo},{hi})"
+                    );
+                }
+                // and the q sub-blocks tile the outer range exactly
+                assert_eq!(g.flat[j * q].0, lo);
+                assert_eq!(g.flat[j * q + q - 1].1, hi);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_side_rounds_non_squares_down() {
+        use crate::coordinator::grid_side;
+        // the benches feed arbitrary (non-square) process counts; the
+        // grid wants the largest q with q^2 <= p
+        for (p, want) in [(2usize, 1usize), (5, 2), (120, 10), (577, 24), (1024, 32)] {
+            assert_eq!(grid_side(p), want, "p={p}");
+        }
+        for p in 1..500 {
+            let q = grid_side(p);
+            assert!(q * q <= p && (q + 1) * (q + 1) > p, "p={p} q={q}");
+        }
+    }
+
+    #[test]
     fn transposed_ownership_differs_unless_diagonal() {
         let g = Grid::new(64, 4);
         for i in 0..4 {

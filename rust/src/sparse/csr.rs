@@ -219,7 +219,7 @@ impl Csr {
 }
 
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {

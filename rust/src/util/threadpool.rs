@@ -40,25 +40,40 @@ where
 }
 
 /// Map `f` over `0..n` in parallel writing into the returned Vec.
-pub fn parallel_map<T: Send + Clone + Default, F>(n: usize, threads: usize, f: F) -> Vec<T>
+/// Results are written through `MaybeUninit`, so `T` needs neither
+/// `Clone` nor `Default` and no placeholder values are constructed.
+/// Caveat: if `f` panics, elements already written are leaked (not
+/// dropped) while the panic unwinds — safe, but don't rely on `Drop`
+/// side effects of `T` across a panicking map.
+pub fn parallel_map<T: Send, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+    out.resize_with(n, std::mem::MaybeUninit::uninit);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for_chunks(n, threads, |lo, hi| {
         let ptr = &ptr;
         for i in lo..hi {
             // Safety: chunks are disjoint, each index written exactly once.
-            unsafe { *ptr.0.add(i) = f(i) };
+            unsafe { (*ptr.0.add(i)).write(f(i)) };
         }
     });
-    out
+    // Safety: parallel_for_chunks covers 0..n exactly, so every slot is
+    // initialized; MaybeUninit<T> has the same layout as T.
+    unsafe {
+        let mut out = std::mem::ManuallyDrop::new(out);
+        Vec::from_raw_parts(out.as_mut_ptr() as *mut T, n, out.capacity())
+    }
 }
 
+/// Shared raw pointer for handing disjoint output slots to scoped
+/// threads. Soundness: moving/sharing the wrapper across threads hands
+/// out the ability to write `T` values there, so both impls require
+/// `T: Send` — a `SendPtr<Rc<_>>` must not cross threads.
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {

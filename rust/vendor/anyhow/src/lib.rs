@@ -1,0 +1,148 @@
+//! In-tree `anyhow` shim (the offline image carries no crates.io
+//! registry). Implements exactly the subset the repository uses:
+//!
+//! * [`Error`] — a context chain of messages; `{e}` prints the outermost
+//!   message, `{e:#}` the whole chain joined with `": "` (same shape as
+//!   real anyhow's Display);
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(c)` / `.with_context(|| c)` on both
+//!   `Result` and `Option`;
+//! * [`anyhow!`] / [`bail!`] — format-style constructors;
+//! * a blanket `From<E: std::error::Error>` so `?` converts std errors.
+
+use std::fmt;
+
+/// Error as a chain of human-readable messages, outermost context first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msgs: vec![m.to_string()],
+        }
+    }
+
+    fn wrap(mut self, context: String) -> Error {
+        self.msgs.insert(0, context);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.join(": "))
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // keep the source chain visible in one flat message
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error side of a `Result` or to a `None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        // `{:#}` flattens an inner shim Error's chain; for plain std
+        // errors alternate Display is the same as Display.
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — build an [`Error`] with `format!` syntax.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let n: Option<usize> = None;
+        let e = n.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        let e2: Error = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e2}"), "bad value 42");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn g() -> Result<i32> {
+            let v: i32 = "xyz".parse()?;
+            Ok(v)
+        }
+        assert!(g().is_err());
+    }
+}
