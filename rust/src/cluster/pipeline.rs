@@ -2,6 +2,9 @@
 //! Laplacian -> k smallest eigenvectors -> row-normalized features ->
 //! K-means -> cluster assignments, with a pluggable eigensolver so the
 //! quality benches (Figs. 2-4) swap ARPACK/LOBPCG/Bchdav in and out.
+//! The Bchdav arm calls the stable `eig::bchdav` entry point, which
+//! since the backend unification is a thin `SeqBackend` instantiation
+//! of the shared `eig::core::davidson_core` state machine.
 
 use super::kmeans::{kmeans, row_normalize, KmeansOptions};
 use super::metrics::{adjusted_rand_index, normalized_mutual_information};

@@ -89,7 +89,13 @@ impl Toml {
         self.sections.get(section)?.get(key)
     }
 
-    pub fn get_or<T>(&self, section: &str, key: &str, default: T, f: impl Fn(&Value) -> Option<T>) -> T {
+    pub fn get_or<T>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+        f: impl Fn(&Value) -> Option<T>,
+    ) -> T {
         self.get(section, key).and_then(f).unwrap_or(default)
     }
 }

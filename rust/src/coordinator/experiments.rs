@@ -4,8 +4,8 @@
 
 use crate::cluster::{quality, spectral_clustering, Eigensolver};
 use crate::config::ExperimentConfig;
-use crate::dist::{dist_bchdav, laplacian_opts, DistMatrix};
-use crate::eig::BchdavOptions;
+use crate::dist::{dist_bchdav, DistMatrix};
+use crate::eig::{laplacian_opts, BchdavOptions};
 use crate::graph::{table2_matrix, TestMatrix};
 use crate::mpi_sim::{CostModel, Ledger};
 use crate::sparse::avg_degree;

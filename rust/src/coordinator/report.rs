@@ -61,8 +61,13 @@ impl Table {
             .map(|r| {
                 let mut obj = Json::obj();
                 for (h, c) in self.headers.iter().zip(r.iter()) {
+                    let numeric_start = c
+                        .chars()
+                        .next()
+                        .map(|ch| ch.is_ascii_digit() || ch == '-' || ch == '.')
+                        .unwrap_or(false);
                     obj = match c.parse::<f64>() {
-                        Ok(x) if c.chars().next().map(|ch| ch.is_ascii_digit() || ch == '-' || ch == '.').unwrap_or(false) => obj.put(h, x),
+                        Ok(x) if numeric_start => obj.put(h, x),
                         _ => obj.put(h, c.as_str()),
                     };
                 }

@@ -1,42 +1,46 @@
 //! Distributed Block Chebyshev-Davidson (the paper's Algorithm 2 run as
 //! Algorithm 4's SPMD program on the simulated grid).
 //!
-//! The state machine is a line-for-line mirror of the sequential
-//! `eig::bchdav` — same bookkeeping (k_c locked / k_act active / inner-
-//! outer restart), same RNG stream, same progressive filtering — with
-//! every kernel swapped for its distributed counterpart:
+//! The state machine is not mirrored here anymore — it is the *same*
+//! code as the sequential driver, `eig::core::davidson_core`, driven
+//! through the [`DistBackend`] that fills every kernel slot with its
+//! distributed counterpart:
 //!
 //! * filter      -> `dist_cheb_filter` (m x 1.5D SpMM)        ["filter"]
 //! * A * V_new   -> `spmm_1p5d`                               ["spmm"]
 //! * orth        -> CGS passes (Gram allreduces) + `tsqr`     ["orth"]
-//! * Rayleigh    -> distributed Gram + replicated small eigh  ["rayleigh"]
+//! * Rayleigh    -> `dist_atb` Gram + replicated small eigh   ["rayleigh"]
 //! * residuals   -> recomputed via one extra 1.5D SpMM (the
-//!   paper's Table 1 accounting; the sequential driver reads
+//!   paper's Table 1 accounting; the sequential backend reads
 //!   them off W for free — the numbers agree)                 ["residual"]
 //!
-//! Because the distributed kernels agree with the sequential ones to
-//! machine precision (exact 1D rows, sign-normalized TSQR, chunked
-//! elementwise passes), the distributed driver tracks the sequential
-//! iterates and its converged eigenvalues match `bchdav`'s within the
-//! residual tolerance — pinned down by the integration test
-//! `distributed_equals_sequential_eigenvalues`.
+//! Instrumentation sinks into the [`Ledger`] (measured compute at the
+//! slowest rank's share + modeled alpha-beta collectives) through the
+//! same `Instrument` seam the sequential timers use. Because the
+//! distributed kernels agree with the sequential ones to machine
+//! precision (exact 1D rows, sign-normalized TSQR, chunked elementwise
+//! passes) and the core owns both runs' RNG stream, the distributed
+//! driver tracks the sequential iterates and its converged eigenvalues
+//! match `bchdav`'s within the residual tolerance — pinned down by the
+//! integration tests `distributed_equals_sequential_eigenvalues` and
+//! `warm_start_same_panel_same_stream_across_backends`.
 
 use super::charged_rowwise;
 use super::filter::dist_cheb_filter;
 use super::matrix::DistMatrix;
+use super::orth::dist_atb;
 use super::spmm::spmm_1p5d;
 use super::tsqr::tsqr;
+use crate::eig::core::{davidson_core, DavidsonBackend};
 use crate::eig::BchdavOptions;
-use crate::linalg::{eigh, matmul, Mat};
+use crate::linalg::{matmul, Mat};
 use crate::mpi_sim::{CostModel, Ledger};
-use crate::util::{time_it, Rng};
+use crate::util::Rng;
 
-/// Paper §4 defaults for normalized-Laplacian spectral clustering — the
-/// distributed entry point to `BchdavOptions::for_laplacian` (analytic
-/// [0, 2] bounds, act_max = max(5 k_b, 30), no bound-estimation run).
-pub fn laplacian_opts(k_want: usize, k_b: usize, m: usize, tol: f64) -> BchdavOptions {
-    BchdavOptions::for_laplacian(k_want, k_b, m, tol)
-}
+// Paper §4 defaults for normalized-Laplacian spectral clustering: the
+// one `BchdavOptions` constructor, re-exported from `eig` so sequential
+// and distributed runs configure identically by construction.
+pub use crate::eig::laplacian_opts;
 
 #[derive(Clone, Debug)]
 pub struct DistBchdavResult {
@@ -53,37 +57,6 @@ pub struct DistBchdavResult {
     pub ledger: Ledger,
 }
 
-/// C = A^T B over the 1D row layout: every rank reduces its row range,
-/// then one allreduce of the small ac x bc result.
-fn dist_atb(
-    a: &Mat,
-    b: &Mat,
-    p: usize,
-    cost: &CostModel,
-    led: &mut Ledger,
-    comp: &'static str,
-) -> Mat {
-    assert_eq!(a.rows, b.rows);
-    let (ac, bc) = (a.cols, b.cols);
-    let mut c = Mat::zeros(ac, bc);
-    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
-        for i in lo..hi {
-            let ar = a.row(i);
-            let br = b.row(i);
-            for (t, &av) in ar.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                for (d, &bv) in c.row_mut(t).iter_mut().zip(br.iter()) {
-                    *d += av * bv;
-                }
-            }
-        }
-    });
-    led.charge(comp, cost.allreduce(ac * bc, p));
-    c
-}
-
 /// C = A Y with A tall and Y small (the subspace rotation): purely
 /// rank-local in the 1D row layout — row chunks are independent, so the
 /// result is identical to the sequential `matmul`.
@@ -98,8 +71,9 @@ fn dist_rows_matmul(a: &Mat, y: &Mat, p: usize, led: &mut Ledger, comp: &'static
 }
 
 /// Distributed mirror of `eig::bchdav::orthonormalize_against`: two CGS
-/// passes against the locked basis (Gram allreduces) + TSQR, with the
-/// same rank-deficiency replacement policy and RNG draw order.
+/// passes against the locked basis (shared `dist_atb` Gram allreduces) +
+/// TSQR, with the same rank-deficiency replacement policy and RNG draw
+/// order.
 fn dist_orthonormalize_against(
     v: &Mat,
     k_sub: usize,
@@ -144,161 +118,79 @@ fn dist_orthonormalize_against(
     tsqr(&block, p, cost, led, "orth").0
 }
 
-/// Run distributed Block Chebyshev-Davidson on a 2D-partitioned matrix.
-/// `v_init` optionally supplies initial vectors (progressive filtering
-/// consumes them in order, as in the sequential driver).
-pub fn dist_bchdav(
-    dm: &DistMatrix,
-    opts: &BchdavOptions,
-    v_init: Option<&Mat>,
-    cost: &CostModel,
-) -> DistBchdavResult {
-    let n = dm.n();
-    let p = dm.p();
-    let kb = opts.k_b;
-    let act_max = opts.act_max.max(3 * kb);
-    let dim_max = opts.dim_max.max(opts.k_want + kb).min(n);
-    let mut led = Ledger::new();
-    let mut rng = Rng::new(opts.seed);
-    let mut spmm_count = 0usize;
+/// The distributed [`DavidsonBackend`]: every kernel slot is the 2D-grid
+/// kernel over a [`DistMatrix`], charging measured compute and modeled
+/// collectives into the [`Ledger`] sink.
+pub struct DistBackend<'a> {
+    dm: &'a DistMatrix,
+    cost: &'a CostModel,
+}
 
-    let lowb = opts.bounds.lower;
-    let upperb = opts.bounds.upper;
-    // Step 1: initial cut between wanted and unwanted (paper §2).
-    let mut low_nwb = opts
-        .bounds
-        .initial_cut(opts.k_want, n)
-        .max(lowb + 1e-6 * (upperb - lowb));
+impl<'a> DistBackend<'a> {
+    pub fn new(dm: &'a DistMatrix, cost: &'a CostModel) -> DistBackend<'a> {
+        DistBackend { dm, cost }
+    }
+}
 
-    // Step 2: initial block (same draw order as the sequential driver).
-    let k_init = v_init.map(|v| v.cols).unwrap_or(0);
-    let mut k_i = 0usize;
-    let take_init = |k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| -> Mat {
-        let mut block = Mat::zeros(n, count);
-        for c in 0..count {
-            if k_i + c < k_init {
-                let col = v_init.unwrap().col(k_i + c);
-                block.set_col(c, &col);
-            } else {
-                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                block.set_col(c, &col);
-            }
-        }
-        block
-    };
-    let mut v_tmp = take_init(k_i, kb, &mut rng, v_init);
-    k_i = k_i.min(k_init) + kb.min(k_init.saturating_sub(k_i));
+impl DavidsonBackend for DistBackend<'_> {
+    type Inst = Ledger;
 
-    // Basis and A-image storage (identical layout to the sequential run).
-    let mut v = Mat::zeros(n, dim_max + kb);
-    let mut w = Mat::zeros(n, act_max + kb);
-    let mut h = Mat::zeros(act_max + kb, act_max + kb);
-    let (mut k_c, mut k_sub, mut k_act) = (0usize, 0usize, 0usize);
-    let mut eval: Vec<f64> = Vec::new();
-    #[allow(unused_assignments)]
-    let mut ritz: Vec<f64> = Vec::new();
+    fn n(&self) -> usize {
+        self.dm.n()
+    }
 
-    let mut iterations = 0usize;
-    while iterations < opts.itmax {
-        iterations += 1;
+    fn filter(&mut self, led: &mut Ledger, v: &Mat, m: usize, a: f64, b: f64, a0: f64) -> Mat {
+        dist_cheb_filter(self.dm, v, m, a, b, a0, self.cost, led, "filter")
+    }
 
-        // Step 5: distributed Chebyshev filter.
-        let filtered =
-            dist_cheb_filter(dm, &v_tmp, opts.m, low_nwb, upperb, lowb, cost, &mut led, "filter");
-        spmm_count += opts.m;
+    fn spmm(&mut self, led: &mut Ledger, comp: &'static str, x: &Mat) -> Mat {
+        spmm_1p5d(self.dm, x, false, self.cost, led, comp)
+    }
 
-        // Step 6: orthonormalize against V(:, 0..k_sub).
-        let vnew =
-            dist_orthonormalize_against(&v, k_sub, filtered, &mut rng, p, cost, &mut led);
-        v.set_cols_block(k_sub, &vnew);
+    fn orthonormalize(
+        &mut self,
+        led: &mut Ledger,
+        v: &Mat,
+        k_sub: usize,
+        block: Mat,
+        rng: &mut Rng,
+    ) -> Mat {
+        dist_orthonormalize_against(v, k_sub, block, rng, self.dm.p(), self.cost, led)
+    }
 
-        // Step 7: W(:, k_act..k_act+kb) = A * vnew (one 1.5D SpMM).
-        let av = spmm_1p5d(dm, &vnew, false, cost, &mut led, "spmm");
-        spmm_count += 1;
-        w.set_cols_block(k_act, &av);
-        k_act += kb;
-        k_sub += kb;
+    fn gram(&mut self, led: &mut Ledger, comp: &'static str, a: &Mat, b: &Mat) -> Mat {
+        dist_atb(a, b, self.dm.p(), self.cost, led, comp)
+    }
 
-        // Step 8: last kb columns of H over the active subspace
-        // (distributed Gram), then the sequential driver's mirror trick.
-        let vact = v.cols_block(k_c, k_sub);
-        let wnew = w.cols_block(k_act - kb, k_act);
-        let hcols = dist_atb(&vact, &wnew, p, cost, &mut led, "rayleigh");
-        let ((), dt) = time_it(|| {
-            let base = k_act - kb;
-            for i in 0..k_act {
-                for j in 0..kb {
-                    h[(i, base + j)] = hcols[(i, j)];
-                }
-            }
-            for i in 0..base {
-                for j in 0..kb {
-                    h[(base + j, i)] = hcols[(i, j)];
-                }
-            }
-            for a in 0..kb {
-                for b2 in a + 1..kb {
-                    let s = 0.5 * (h[(base + a, base + b2)] + h[(base + b2, base + a)]);
-                    h[(base + a, base + b2)] = s;
-                    h[(base + b2, base + a)] = s;
-                }
-            }
-        });
-        led.add_compute("rayleigh", dt);
+    fn rotate(&mut self, led: &mut Ledger, comp: &'static str, a: &Mat, y: &Mat) -> Mat {
+        dist_rows_matmul(a, y, self.dm.p(), led, comp)
+    }
 
-        // Step 9: eigendecomposition of H(0..k_act, 0..k_act), ascending.
-        // H is replicated on every rank, so the small eigh is redundant
-        // local work — billed once, no communication.
-        let ((d_all, y_all), dt) = time_it(|| {
-            let mut hk = Mat::zeros(k_act, k_act);
-            for i in 0..k_act {
-                for j in 0..k_act {
-                    hk[(i, j)] = h[(i, j)];
-                }
-            }
-            eigh(&hk)
-        });
-        led.add_compute("rayleigh", dt);
-        let k_old = k_act;
-
-        // Step 10: inner restart.
-        if k_act + kb > act_max {
-            let k_ri = (act_max / 2).max(act_max.saturating_sub(3 * kb)).max(kb);
-            k_act = k_ri;
-            k_sub = k_act + k_c;
-        }
-
-        // Step 11: subspace rotation (rank-local row blocks).
-        {
-            let mut y = Mat::zeros(k_old, k_act);
-            for i in 0..k_old {
-                for j in 0..k_act {
-                    y[(i, j)] = y_all[(i, j)];
-                }
-            }
-            let vact = v.cols_block(k_c, k_c + k_old);
-            let vrot = dist_rows_matmul(&vact, &y, p, &mut led, "rayleigh");
-            v.set_cols_block(k_c, &vrot);
-            let wact = w.cols_block(0, k_old);
-            let wrot = dist_rows_matmul(&wact, &y, p, &mut led, "rayleigh");
-            w.set_cols_block(0, &wrot);
-        }
-        ritz = d_all[..k_act].to_vec();
-
-        // Step 12: residuals of the first kb active Ritz pairs,
-        // recomputed through one extra 1.5D SpMM (Table 1 accounting).
-        let test = kb.min(k_act);
+    fn residual_norms(
+        &mut self,
+        led: &mut Ledger,
+        v: &Mat,
+        k_c: usize,
+        _w: &Mat,
+        ritz: &[f64],
+        test: usize,
+        _tol: f64,
+    ) -> (Vec<f64>, usize) {
+        // Recomputed through one extra 1.5D SpMM (Table 1 accounting) —
+        // all `test` norms come out of the one SpMM + allreduce, so the
+        // early-exit hint `_tol` buys nothing here.
+        let p = self.dm.p();
+        let n = self.dm.n();
         let avr = spmm_1p5d(
-            dm,
+            self.dm,
             &v.cols_block(k_c, k_c + test),
             false,
-            cost,
-            &mut led,
+            self.cost,
+            led,
             "residual",
         );
-        spmm_count += 1;
         let mut nrm2s = vec![0.0f64; test];
-        charged_rowwise(&mut led, "residual", n, p, |lo, hi| {
+        charged_rowwise(led, "residual", n, p, |lo, hi| {
             for i in lo..hi {
                 for (j, acc) in nrm2s.iter_mut().enumerate() {
                     let r = avr[(i, j)] - ritz[j] * v[(i, k_c + j)];
@@ -306,106 +198,30 @@ pub fn dist_bchdav(
                 }
             }
         });
-        led.charge("residual", cost.allreduce(test, p));
-        let mut e_c = 0usize;
-        for &nrm2 in &nrm2s {
-            if nrm2.sqrt() <= opts.tol {
-                e_c += 1;
-            } else {
-                break; // converged prefix only (sorted ascending)
-            }
-        }
-
-        if e_c > 0 {
-            // lock: converged columns already sit at V(:, k_c..k_c+e_c)
-            eval.extend_from_slice(&ritz[..e_c]);
-            k_c += e_c;
-            // Step 14: shift W left by e_c columns.
-            let wtail = w.cols_block(e_c, k_act);
-            w.set_cols_block(0, &wtail);
-            k_act -= e_c;
-            ritz.drain(..e_c);
-        }
-
-        // Step 13: done?
-        if k_c >= opts.k_want {
-            break;
-        }
-
-        // Step 15: H <- diag(non-converged Ritz values).
-        for i in 0..act_max + kb {
-            for j in 0..act_max + kb {
-                h[(i, j)] = 0.0;
-            }
-        }
-        for (i, &r) in ritz.iter().enumerate() {
-            h[(i, i)] = r;
-        }
-
-        // Step 16: outer restart.
-        if k_sub + kb > dim_max {
-            let k_ro = dim_max
-                .saturating_sub(2 * kb)
-                .saturating_sub(k_c)
-                .clamp(kb, k_act.max(kb));
-            let k_ro = k_ro.min(k_act);
-            k_sub = k_c + k_ro;
-            k_act = k_ro;
-            ritz.truncate(k_act);
-        }
-
-        // Step 17: progressive filtering — next block mixes unused
-        // initial vectors with the best non-converged Ritz vectors.
-        let fresh = e_c.min(k_init.saturating_sub(k_i));
-        v_tmp = Mat::zeros(n, kb);
-        if fresh > 0 {
-            let init_cols = take_init(k_i, fresh, &mut rng, v_init);
-            for c in 0..fresh {
-                let col = init_cols.col(c);
-                v_tmp.set_col(c, &col);
-            }
-            k_i += fresh;
-        }
-        for c in fresh..kb {
-            let src = k_c + (c - fresh);
-            if src < k_sub {
-                let col = v.col(src);
-                v_tmp.set_col(c, &col);
-            } else {
-                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                v_tmp.set_col(c, &col);
-            }
-        }
-
-        // Step 18: move the cut to the median of non-converged Ritz values.
-        if !ritz.is_empty() {
-            let mut sorted = ritz.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let med = sorted[sorted.len() / 2];
-            if med > lowb && med < upperb {
-                low_nwb = med;
-            }
-        }
+        led.charge("residual", self.cost.allreduce(test, p));
+        (nrm2s.iter().map(|&x| x.sqrt()).collect(), 1)
     }
+}
 
-    // Sort locked pairs ascending (deflation locked them in batches).
-    let mut idx: Vec<usize> = (0..k_c).collect();
-    idx.sort_by(|&i, &j| eval[i].partial_cmp(&eval[j]).unwrap());
-    let mut out_vals = Vec::with_capacity(k_c);
-    let mut out_vecs = Mat::zeros(n, k_c);
-    for (newj, &oldj) in idx.iter().enumerate() {
-        out_vals.push(eval[oldj]);
-        let col = v.col(oldj);
-        out_vecs.set_col(newj, &col);
-    }
-
+/// Run distributed Block Chebyshev-Davidson on a 2D-partitioned matrix.
+/// `v_init` optionally supplies initial vectors (progressive filtering
+/// consumes them in order, as in the sequential driver — the core
+/// guarantees it: same state machine, same RNG stream).
+pub fn dist_bchdav(
+    dm: &DistMatrix,
+    opts: &BchdavOptions,
+    v_init: Option<&Mat>,
+    cost: &CostModel,
+) -> DistBchdavResult {
+    let mut backend = DistBackend::new(dm, cost);
+    let core = davidson_core(&mut backend, opts, v_init);
     DistBchdavResult {
-        converged: k_c >= opts.k_want,
-        eigenvalues: out_vals,
-        eigenvectors: out_vecs,
-        iterations,
-        spmm_count,
-        ledger: led,
+        eigenvalues: core.eigenvalues,
+        eigenvectors: core.eigenvectors,
+        iterations: core.iterations,
+        converged: core.converged,
+        spmm_count: core.spmm_count,
+        ledger: core.instrument,
     }
 }
 

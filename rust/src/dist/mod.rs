@@ -15,11 +15,17 @@
 //!   agrees with the sequential Householder QR exactly;
 //! * [`dgks_orthonormalize`] — the PARSEC DGKS baseline whose per-column
 //!   allreduces stop scaling (Fig. 9's orthonormalization panel);
+//! * [`dist_atb`] — the shared 1D-layout Gram step (per-rank reduce +
+//!   allreduce) behind the Rayleigh-Ritz projection, the driver's CGS
+//!   passes, and the DGKS baseline;
 //! * [`dist_cheb_filter`] — Alg. 3 over the 1.5D SpMM;
-//! * [`dist_bchdav`] — the distributed Algorithm 2 driver reusing the
-//!   sequential `eig::bchdav` bookkeeping, with the per-component
-//!   compute/comm [`Ledger`](crate::mpi_sim::Ledger) the figure benches
-//!   read (Figs. 6-8, Tables 1-2);
+//! * [`dist_bchdav`] — the distributed Algorithm 2 entry point: a thin
+//!   wrapper that runs the *shared* state machine
+//!   (`eig::core::davidson_core`) through [`DistBackend`], whose kernel
+//!   slots charge the per-component compute/comm
+//!   [`Ledger`](crate::mpi_sim::Ledger) the figure benches read
+//!   (Figs. 6-8, Tables 1-2); `laplacian_opts` is re-exported from
+//!   `eig` (one options constructor for both backends);
 //! * [`arpack_scaling`] / [`lobpcg_scaling`] — the Fig. 5 cost replays.
 //!
 //! Every collective is charged through the alpha-beta
@@ -35,10 +41,10 @@ pub mod scaling;
 pub mod spmm;
 pub mod tsqr;
 
-pub use bchdav::{dist_bchdav, laplacian_opts, DistBchdavResult};
+pub use bchdav::{dist_bchdav, laplacian_opts, DistBackend, DistBchdavResult};
 pub use filter::dist_cheb_filter;
 pub use matrix::DistMatrix;
-pub use orth::dgks_orthonormalize;
+pub use orth::{dgks_orthonormalize, dist_atb};
 pub use scaling::{arpack_scaling, lobpcg_scaling, ScalingPoint, SolverScaling};
 pub use spmm::{rows_1d, spmm_1d, spmm_1p5d};
 pub use tsqr::tsqr;

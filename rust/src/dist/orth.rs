@@ -12,6 +12,40 @@ use super::charged_rowwise;
 use crate::linalg::Mat;
 use crate::mpi_sim::{CostModel, Ledger};
 
+/// C = A^T B over the 1D row layout: every rank reduces its row range,
+/// then one allreduce of the small ac x bc result. This is *the* Gram
+/// step of the layer — the Davidson backend's Rayleigh-Ritz projection,
+/// its CGS passes against the locked basis, and the DGKS baseline's
+/// block-CGS passes all charge through this one implementation.
+pub fn dist_atb(
+    a: &Mat,
+    b: &Mat,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+    comp: &'static str,
+) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (ac, bc) = (a.cols, b.cols);
+    let mut c = Mat::zeros(ac, bc);
+    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
+        for i in lo..hi {
+            let ar = a.row(i);
+            let br = b.row(i);
+            for (t, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (d, &bv) in c.row_mut(t).iter_mut().zip(br.iter()) {
+                    *d += av * bv;
+                }
+            }
+        }
+    });
+    led.charge(comp, cost.allreduce(ac * bc, p));
+    c
+}
+
 /// Orthonormalize `v` against the first `k_sub` columns of `basis` and
 /// internally, DGKS-style, over `p` simulated ranks. Returns the
 /// orthonormalized block; near-null columns are left unnormalized (the
@@ -31,26 +65,20 @@ pub fn dgks_orthonormalize(
     assert!(k_sub == 0 || basis.rows == n);
     let mut w = v.clone();
 
-    // block CGS against the locked basis — "twice is enough"
+    // block CGS against the locked basis — "twice is enough"; the
+    // k_sub x kb Gram coefficients come from the shared per-rank-reduce
+    // + allreduce Gram step. Callers normally pass a basis of exactly
+    // k_sub columns, so the narrowing copy (unbilled — it is a seam
+    // artifact, not a simulated-rank cost) only happens on the wider
+    // case.
     if k_sub > 0 {
+        let basis_k = if basis.cols == k_sub {
+            None
+        } else {
+            Some(basis.cols_block(0, k_sub))
+        };
         for _pass in 0..2 {
-            let mut coef = vec![0.0f64; k_sub * kb];
-            charged_rowwise(led, comp, n, p, |lo, hi| {
-                for i in lo..hi {
-                    let br = basis.row(i);
-                    let wr = w.row(i);
-                    for (c, &bv) in br[..k_sub].iter().enumerate() {
-                        if bv == 0.0 {
-                            continue;
-                        }
-                        let dst = &mut coef[c * kb..(c + 1) * kb];
-                        for (d, &wv) in dst.iter_mut().zip(wr.iter()) {
-                            *d += bv * wv;
-                        }
-                    }
-                }
-            });
-            led.charge(comp, cost.allreduce(k_sub * kb, p));
+            let coef = dist_atb(basis_k.as_ref().unwrap_or(basis), &w, p, cost, led, comp);
             charged_rowwise(led, comp, n, p, |lo, hi| {
                 for i in lo..hi {
                     // w.row(i) -= basis.row(i)[..k_sub] * coef
@@ -61,7 +89,7 @@ pub fn dgks_orthonormalize(
                             if bv == 0.0 {
                                 continue;
                             }
-                            for (d, &cv) in corr.iter_mut().zip(coef[c * kb..(c + 1) * kb].iter()) {
+                            for (d, &cv) in corr.iter_mut().zip(coef.row(c).iter()) {
                                 *d += bv * cv;
                             }
                         }
@@ -131,6 +159,19 @@ mod tests {
     use super::*;
     use crate::linalg::{atb, ortho_error, qr_thin};
     use crate::util::Rng;
+
+    #[test]
+    fn dist_atb_matches_sequential_gram_and_charges() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(100, 5, &mut rng);
+        let b = Mat::randn(100, 3, &mut rng);
+        let mut led = Ledger::new();
+        let got = dist_atb(&a, &b, 8, &CostModel::default(), &mut led, "rayleigh");
+        let want = atb(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+        assert!(led.comm_of("rayleigh") > 0.0);
+        assert!(led.messages.get("rayleigh").copied().unwrap_or(0.0) > 0.0);
+    }
 
     #[test]
     fn orthonormalizes_a_random_block() {

@@ -1,20 +1,21 @@
-//! Block Chebyshev-Davidson with inner-outer restart (Algorithm 2 of the
+//! Block Chebyshev-Davidson, sequential entry point (Algorithm 2 of the
 //! paper; Zhou 2010's bchdav with progressive filtering), computing the
 //! k_want *smallest* eigenpairs of a symmetric operator.
 //!
-//! Bookkeeping follows the paper exactly: k_c converged (locked) columns
-//! at the front of V, k_act active columns after them, k_sub = k_c +
-//! k_act; inner restart bounds the active subspace (and hence the
-//! orthonormalization + Rayleigh-Ritz cost per iteration), outer restart
-//! bounds the whole basis. One deviation, documented: the paper's step 9
-//! sorts Ritz values non-increasingly (Zhou's largest-eigenpair
-//! convention); since spectral clustering wants the *smallest*
-//! eigenvalues we sort ascending and lock from the bottom — the same
-//! algorithm under the substitution A -> -A.
+//! The outer-iteration state machine lives once, in
+//! [`core::davidson_core`](super::core::davidson_core); this module
+//! contributes the [`SeqBackend`] that fills the five kernel slots from
+//! any [`SpmmOp`] — which is what makes every `SpmmOp`, including the
+//! runtime's `PjrtOperator`, a full solver for free — plus the options /
+//! result types and the thin public [`bchdav`] wrapper, whose signature
+//! predates the unification and is kept stable for `cluster::pipeline`,
+//! the CLI, and the benches. Instrumentation sinks into
+//! [`ComponentTimers`] under the usual component keys.
 
 use super::bounds::SpectrumBounds;
+use super::core::{davidson_core, DavidsonBackend};
 use super::op::SpmmOp;
-use crate::linalg::{atb, eigh, matmul, qr_thin, Mat};
+use crate::linalg::{atb, matmul, qr_thin, Mat};
 use crate::util::{ComponentTimers, Rng};
 
 #[derive(Clone, Debug)]
@@ -57,6 +58,14 @@ impl BchdavOptions {
     }
 }
 
+/// Free-function form of [`BchdavOptions::for_laplacian`] (analytic
+/// [0, 2] bounds, act_max = max(5 k_b, 30), no bound-estimation run).
+/// `dist` re-exports this as its entry point, so sequential and
+/// distributed runs configure identically by construction.
+pub fn laplacian_opts(k_want: usize, k_b: usize, m: usize, tol: f64) -> BchdavOptions {
+    BchdavOptions::for_laplacian(k_want, k_b, m, tol)
+}
+
 #[derive(Clone, Debug)]
 pub struct BchdavResult {
     /// Converged eigenvalues, ascending (k_want of them on success).
@@ -71,6 +80,100 @@ pub struct BchdavResult {
     pub timers: ComponentTimers,
 }
 
+/// The sequential [`DavidsonBackend`]: every kernel slot is the direct
+/// shared-memory kernel over one [`SpmmOp`], timed into
+/// [`ComponentTimers`]. Residual norms are read off W for free (the
+/// distributed backend recomputes them via SpMM to match the paper's
+/// Table 1 cost accounting; the numbers agree).
+pub struct SeqBackend<'a, Op: SpmmOp + ?Sized> {
+    op: &'a Op,
+}
+
+impl<'a, Op: SpmmOp + ?Sized> SeqBackend<'a, Op> {
+    pub fn new(op: &'a Op) -> SeqBackend<'a, Op> {
+        SeqBackend { op }
+    }
+}
+
+impl<Op: SpmmOp + ?Sized> DavidsonBackend for SeqBackend<'_, Op> {
+    type Inst = ComponentTimers;
+
+    fn n(&self) -> usize {
+        self.op.n()
+    }
+
+    fn filter(
+        &mut self,
+        inst: &mut ComponentTimers,
+        v: &Mat,
+        m: usize,
+        a: f64,
+        b: f64,
+        a0: f64,
+    ) -> Mat {
+        inst.time("filter", || self.op.cheb_filter(v, m, a, b, a0))
+    }
+
+    fn spmm(&mut self, inst: &mut ComponentTimers, comp: &'static str, x: &Mat) -> Mat {
+        inst.time(comp, || self.op.spmm(x))
+    }
+
+    fn orthonormalize(
+        &mut self,
+        inst: &mut ComponentTimers,
+        v: &Mat,
+        k_sub: usize,
+        block: Mat,
+        rng: &mut Rng,
+    ) -> Mat {
+        inst.time("orth", || orthonormalize_against(v, k_sub, block, rng))
+    }
+
+    fn gram(&mut self, inst: &mut ComponentTimers, comp: &'static str, a: &Mat, b: &Mat) -> Mat {
+        inst.time(comp, || atb(a, b))
+    }
+
+    fn rotate(&mut self, inst: &mut ComponentTimers, comp: &'static str, a: &Mat, y: &Mat) -> Mat {
+        inst.time(comp, || matmul(a, y))
+    }
+
+    fn residual_norms(
+        &mut self,
+        inst: &mut ComponentTimers,
+        v: &Mat,
+        k_c: usize,
+        w: &Mat,
+        ritz: &[f64],
+        test: usize,
+        tol: f64,
+    ) -> (Vec<f64>, usize) {
+        // W(:, 0..k_act) = A V(:, k_c..k_c+k_act) after the rotation, so
+        // r_j = W(:, j) - theta_j V(:, k_c + j) — no extra SpMM needed.
+        // The core only locks the converged prefix, so stop at the first
+        // miss: pairs past it would be wasted work (the distributed
+        // backend computes all `test` norms because its SpMM already
+        // paid for them).
+        inst.time("residual", || {
+            let n = v.rows;
+            let mut norms = Vec::with_capacity(test);
+            for j in 0..test {
+                let theta = ritz[j];
+                let mut nrm2 = 0.0;
+                for i in 0..n {
+                    let r = w[(i, j)] - theta * v[(i, k_c + j)];
+                    nrm2 += r * r;
+                }
+                let nrm = nrm2.sqrt();
+                norms.push(nrm);
+                if nrm > tol {
+                    break;
+                }
+            }
+            (norms, 0)
+        })
+    }
+}
+
 /// Run Block Chebyshev-Davidson. `v_init` optionally supplies initial
 /// vectors (progressive filtering consumes them in order — the streaming
 /// warm-start path); missing columns are filled with random vectors.
@@ -79,269 +182,15 @@ pub fn bchdav<Op: SpmmOp + ?Sized>(
     opts: &BchdavOptions,
     v_init: Option<&Mat>,
 ) -> BchdavResult {
-    let n = a.n();
-    let kb = opts.k_b;
-    let act_max = opts.act_max.max(3 * kb);
-    let dim_max = opts.dim_max.max(opts.k_want + kb).min(n);
-    let mut timers = ComponentTimers::new();
-    let mut rng = Rng::new(opts.seed);
-    let mut spmm_count = 0usize;
-
-    let lowb = opts.bounds.lower;
-    let upperb = opts.bounds.upper;
-    // Step 1: initial cut between wanted and unwanted (paper §2).
-    let mut low_nwb = opts
-        .bounds
-        .initial_cut(opts.k_want, n)
-        .max(lowb + 1e-6 * (upperb - lowb));
-
-    // Step 2: initial block.
-    let k_init = v_init.map(|v| v.cols).unwrap_or(0);
-    let mut k_i = 0usize; // used initial vectors
-    let take_init = |k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| -> Mat {
-        let mut block = Mat::zeros(n, count);
-        for c in 0..count {
-            if k_i + c < k_init {
-                let col = v_init.unwrap().col(k_i + c);
-                block.set_col(c, &col);
-            } else {
-                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                block.set_col(c, &col);
-            }
-        }
-        block
-    };
-    let mut v_tmp = take_init(k_i, kb, &mut rng, v_init);
-    k_i = k_i.min(k_init) + kb.min(k_init.saturating_sub(k_i));
-
-    // Basis and A-image storage.
-    let mut v = Mat::zeros(n, dim_max + kb);
-    let mut w = Mat::zeros(n, act_max + kb);
-    let mut h = Mat::zeros(act_max + kb, act_max + kb);
-    let (mut k_c, mut k_sub, mut k_act) = (0usize, 0usize, 0usize);
-    let mut eval: Vec<f64> = Vec::new();
-    // Ritz values of the current active subspace (diag of D).
-    #[allow(unused_assignments)]
-    let mut ritz: Vec<f64> = Vec::new();
-
-    let mut iterations = 0usize;
-    while iterations < opts.itmax {
-        iterations += 1;
-
-        // Step 5: Chebyshev filter.
-        let filtered = timers.time("filter", || {
-            a.cheb_filter(&v_tmp, opts.m, low_nwb, upperb, lowb)
-        });
-        spmm_count += opts.m;
-
-        // Step 6: orthonormalize against V(:, 0..k_sub) (DGKS: two
-        // projection passes + thin QR; rank-deficient columns replaced by
-        // random vectors and re-orthonormalized).
-        let vnew = timers.time("orth", || {
-            orthonormalize_against(&v, k_sub, filtered, &mut rng)
-        });
-        v.set_cols_block(k_sub, &vnew);
-
-        // Step 7: W(:, k_act..k_act+kb) = A * vnew.
-        let av = timers.time("spmm", || a.spmm(&vnew));
-        spmm_count += 1;
-        w.set_cols_block(k_act, &av);
-        k_act += kb;
-        k_sub += kb;
-
-        // Step 8: last kb columns of H over the active subspace, then
-        // symmetrize. The rows of the new block are *mirrored* from the
-        // computed columns (they were zeroed at step 15); only the new
-        // kb x kb corner genuinely needs averaging.
-        timers.time("rayleigh", || {
-            let vact = v.cols_block(k_c, k_sub);
-            let wnew = w.cols_block(k_act - kb, k_act);
-            let hcols = atb(&vact, &wnew); // (k_act x kb)
-            let base = k_act - kb;
-            for i in 0..k_act {
-                for j in 0..kb {
-                    h[(i, base + j)] = hcols[(i, j)];
-                }
-            }
-            // mirror new-rows x old-cols from the computed old-rows x new-cols
-            for i in 0..base {
-                for j in 0..kb {
-                    h[(base + j, i)] = hcols[(i, j)];
-                }
-            }
-            // symmetrize the new corner
-            for a in 0..kb {
-                for b2 in a + 1..kb {
-                    let s = 0.5 * (h[(base + a, base + b2)] + h[(base + b2, base + a)]);
-                    h[(base + a, base + b2)] = s;
-                    h[(base + b2, base + a)] = s;
-                }
-            }
-        });
-
-        // Step 9: eigendecomposition of H(0..k_act, 0..k_act), ascending
-        // (wanted = smallest; see module doc).
-        let (d_all, y_all) = timers.time("rayleigh", || {
-            let hk = {
-                let mut hk = Mat::zeros(k_act, k_act);
-                for i in 0..k_act {
-                    for j in 0..k_act {
-                        hk[(i, j)] = h[(i, j)];
-                    }
-                }
-                hk
-            };
-            eigh(&hk)
-        });
-        let k_old = k_act;
-
-        // Step 10: inner restart.
-        if k_act + kb > act_max {
-            let k_ri = (act_max / 2).max(act_max.saturating_sub(3 * kb)).max(kb);
-            k_act = k_ri;
-            k_sub = k_act + k_c;
-        }
-
-        // Step 11: subspace rotation (Rayleigh-Ritz refinement).
-        timers.time("rayleigh", || {
-            let y = {
-                let mut y = Mat::zeros(k_old, k_act);
-                for i in 0..k_old {
-                    for j in 0..k_act {
-                        y[(i, j)] = y_all[(i, j)];
-                    }
-                }
-                y
-            };
-            let vact = v.cols_block(k_c, k_c + k_old);
-            v.set_cols_block(k_c, &matmul(&vact, &y));
-            let wact = w.cols_block(0, k_old);
-            w.set_cols_block(0, &matmul(&wact, &y));
-        });
-        ritz = d_all[..k_act].to_vec();
-
-        // Step 12: residuals of the first kb active Ritz pairs.
-        // W(:, 0..k_act) = A V(:, k_c..k_c+k_act) after the rotation, so
-        // r_j = W(:, j) - theta_j V(:, k_c + j) — no extra SpMM needed
-        // (the distributed driver recomputes via SpMM to match the
-        // paper's Table 1 cost accounting; the numbers agree).
-        let e_c = timers.time("residual", || {
-            let test = kb.min(k_act);
-            let mut e_c = 0usize;
-            for j in 0..test {
-                let theta = ritz[j];
-                let mut nrm2 = 0.0;
-                for i in 0..n {
-                    let r = w[(i, j)] - theta * v[(i, k_c + j)];
-                    nrm2 += r * r;
-                }
-                if nrm2.sqrt() <= opts.tol {
-                    e_c += 1;
-                } else {
-                    break; // converged prefix only (sorted ascending)
-                }
-            }
-            e_c
-        });
-
-        if std::env::var("BCHDAV_DEBUG").is_ok() && iterations <= 40 {
-            let vnorm = v.col_norm(k_c);
-            eprintln!(
-                "it={iterations} k_c={k_c} k_act={k_act} k_sub={k_sub} cut={low_nwb:.4} e_c={e_c} ritz[..3]={:?} vcol_norm={vnorm:.3e}",
-                &ritz[..ritz.len().min(3)]
-            );
-        }
-        if e_c > 0 {
-            // lock: the converged columns already sit at V(:, k_c..k_c+e_c)
-            eval.extend_from_slice(&ritz[..e_c]);
-            k_c += e_c;
-            // Step 14: shift W left by e_c columns.
-            let wtail = w.cols_block(e_c, k_act);
-            w.set_cols_block(0, &wtail);
-            k_act -= e_c;
-            ritz.drain(..e_c);
-        }
-
-        // Step 13: done?
-        if k_c >= opts.k_want {
-            break;
-        }
-
-        // Step 15: H <- diag(non-converged Ritz values).
-        for i in 0..act_max + kb {
-            for j in 0..act_max + kb {
-                h[(i, j)] = 0.0;
-            }
-        }
-        for (i, &r) in ritz.iter().enumerate() {
-            h[(i, i)] = r;
-        }
-
-        // Step 16: outer restart.
-        if k_sub + kb > dim_max {
-            let k_ro = dim_max
-                .saturating_sub(2 * kb)
-                .saturating_sub(k_c)
-                .clamp(kb, k_act.max(kb));
-            let k_ro = k_ro.min(k_act);
-            k_sub = k_c + k_ro;
-            k_act = k_ro;
-            ritz.truncate(k_act);
-        }
-
-        // Step 17: progressive filtering — next block mixes unused
-        // initial vectors with the current best non-converged Ritz
-        // vectors.
-        let fresh = e_c.min(k_init.saturating_sub(k_i));
-        v_tmp = Mat::zeros(n, kb);
-        if fresh > 0 {
-            let init_cols = take_init(k_i, fresh, &mut rng, v_init);
-            for c in 0..fresh {
-                let col = init_cols.col(c);
-                v_tmp.set_col(c, &col);
-            }
-            k_i += fresh;
-        }
-        for c in fresh..kb {
-            let src = k_c + (c - fresh);
-            if src < k_sub {
-                let col = v.col(src);
-                v_tmp.set_col(c, &col);
-            } else {
-                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                v_tmp.set_col(c, &col);
-            }
-        }
-
-        // Step 18: move the cut to the median of non-converged Ritz values.
-        if !ritz.is_empty() {
-            let mut sorted = ritz.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let med = sorted[sorted.len() / 2];
-            if med > lowb && med < upperb {
-                low_nwb = med;
-            }
-        }
-    }
-
-    // Sort locked pairs ascending (deflation locked them in batches).
-    let mut idx: Vec<usize> = (0..k_c).collect();
-    idx.sort_by(|&i, &j| eval[i].partial_cmp(&eval[j]).unwrap());
-    let mut out_vals = Vec::with_capacity(k_c);
-    let mut out_vecs = Mat::zeros(n, k_c);
-    for (newj, &oldj) in idx.iter().enumerate() {
-        out_vals.push(eval[oldj]);
-        let col = v.col(oldj);
-        out_vecs.set_col(newj, &col);
-    }
-
+    let mut backend = SeqBackend::new(a);
+    let core = davidson_core(&mut backend, opts, v_init);
     BchdavResult {
-        converged: k_c >= opts.k_want,
-        eigenvalues: out_vals,
-        eigenvectors: out_vecs,
-        iterations,
-        spmm_count,
-        timers,
+        eigenvalues: core.eigenvalues,
+        eigenvectors: core.eigenvectors,
+        iterations: core.iterations,
+        converged: core.converged,
+        spmm_count: core.spmm_count,
+        timers: core.instrument,
     }
 }
 
@@ -500,5 +349,18 @@ mod tests {
         let res = bchdav(&lap, &opts, None);
         assert!(!res.converged);
         assert_eq!(res.iterations, 1);
+    }
+
+    #[test]
+    fn all_component_keys_reported() {
+        // the unified core must keep feeding the Fig. 8 vocabulary into
+        // the sequential sink
+        let (lap, _) = ring_of_cliques(5, 8);
+        let res = bchdav(&lap, &BchdavOptions::for_laplacian(4, 2, 9, 1e-6), None);
+        assert!(res.converged);
+        let names: Vec<&str> = res.timers.breakdown().iter().map(|&(n, _, _)| n).collect();
+        for want in ["filter", "spmm", "orth", "rayleigh", "residual"] {
+            assert!(names.contains(&want), "missing component {want}: {names:?}");
+        }
     }
 }

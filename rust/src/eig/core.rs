@@ -1,0 +1,394 @@
+//! The one Algorithm 2 state machine (Zhou 2010's bchdav with
+//! inner-outer restart and progressive filtering), generic over a
+//! [`DavidsonBackend`] that supplies the five kernels the sequential and
+//! distributed drivers swap. Until this module existed the bookkeeping
+//! lived twice — `eig::bchdav` and `dist::bchdav` were documented
+//! line-for-line mirrors — and every algorithmic change had to be
+//! hand-synchronized across two state machines. Now
+//! [`davidson_core`] owns the control flow once:
+//!
+//! * k_c converged (locked) columns at the front of V, k_act active
+//!   columns after them, k_sub = k_c + k_act;
+//! * inner restart bounds the active subspace, outer restart bounds the
+//!   whole basis;
+//! * progressive filtering consumes `v_init` columns in order (the
+//!   streaming warm-start path) and tops the next block up with the best
+//!   non-converged Ritz vectors;
+//! * the moving filter cut tracks the median of the non-converged Ritz
+//!   values.
+//!
+//! Backends plug in at exactly the seams the two original drivers
+//! differed on: Chebyshev filter, block SpMM, orthonormalization against
+//! the locked basis, the Rayleigh-Ritz Gram product, the subspace
+//! rotation, and the residual norms. Everything else — including the RNG
+//! stream, which the core owns so all backends consume *identical*
+//! draws — is shared. Instrumentation goes through the
+//! [`Instrument`] sink (`ComponentTimers` sequentially, the mpi_sim
+//! `Ledger` distributed) under the paper's Fig. 7/8 component keys:
+//! "filter" / "spmm" / "orth" / "rayleigh" / "residual".
+//!
+//! One documented deviation from the paper, inherited from the original
+//! drivers: step 9 sorts Ritz values ascending and locks from the bottom
+//! (spectral clustering wants the *smallest* eigenpairs) — the same
+//! algorithm as Zhou's largest-eigenpair convention under A -> -A.
+
+use super::bchdav::BchdavOptions;
+use crate::linalg::{eigh, Mat};
+use crate::util::{Instrument, Rng};
+
+/// The kernel slots of Algorithm 2. The sequential `SeqBackend` fills
+/// them from any [`SpmmOp`](super::SpmmOp) (CSR, the PJRT operator, ...);
+/// the distributed `DistBackend` fills them from the 1.5D SpMM / TSQR /
+/// Gram-allreduce kernels with Ledger charging. Methods receive the
+/// instrumentation sink explicitly so backends charge the same component
+/// keys the core uses for its own bookkeeping.
+pub trait DavidsonBackend {
+    /// Where this backend's time goes: `ComponentTimers` for sequential
+    /// runs, the mpi_sim `Ledger` for distributed ones.
+    type Inst: Instrument + Default;
+
+    /// Problem dimension (A is n x n symmetric).
+    fn n(&self) -> usize;
+
+    /// Degree-m Chebyshev filter of the block `v` (Alg. 3); charged to
+    /// "filter".
+    fn filter(&mut self, inst: &mut Self::Inst, v: &Mat, m: usize, a: f64, b: f64, a0: f64) -> Mat;
+
+    /// Y = A X for a tall-skinny panel; charged to `comp` ("spmm" when
+    /// extending the basis image).
+    fn spmm(&mut self, inst: &mut Self::Inst, comp: &'static str, x: &Mat) -> Mat;
+
+    /// Orthonormalize `block` against the first `k_sub` columns of `v`,
+    /// then internally; rank-deficient columns are replaced with fresh
+    /// draws from `rng` (the shared stream). Charged to "orth".
+    fn orthonormalize(
+        &mut self,
+        inst: &mut Self::Inst,
+        v: &Mat,
+        k_sub: usize,
+        block: Mat,
+        rng: &mut Rng,
+    ) -> Mat;
+
+    /// Gram product C = A^T B (the Rayleigh-Ritz projection); charged to
+    /// `comp` ("rayleigh").
+    fn gram(&mut self, inst: &mut Self::Inst, comp: &'static str, a: &Mat, b: &Mat) -> Mat;
+
+    /// C = A Y with A tall and Y small (the subspace rotation); charged
+    /// to `comp` ("rayleigh").
+    fn rotate(&mut self, inst: &mut Self::Inst, comp: &'static str, a: &Mat, y: &Mat) -> Mat;
+
+    /// Residual 2-norms of the first `test` active Ritz pairs, whose
+    /// vectors are V(:, k_c..k_c+test) with Ritz values `ritz[..test]`.
+    /// `w` holds A V(:, k_c..k_c+k_act) in its leading columns, so a
+    /// backend may read the residuals off it for free (sequential) or
+    /// recompute A V through an extra SpMM (distributed — the paper's
+    /// Table 1 accounting; the numbers agree). The core locks only the
+    /// prefix of norms <= `tol`, so a backend may stop after the first
+    /// miss and return a short vector. Returns the norms and the number
+    /// of extra SpMM applications performed. Charged to "residual".
+    #[allow(clippy::too_many_arguments)]
+    fn residual_norms(
+        &mut self,
+        inst: &mut Self::Inst,
+        v: &Mat,
+        k_c: usize,
+        w: &Mat,
+        ritz: &[f64],
+        test: usize,
+        tol: f64,
+    ) -> (Vec<f64>, usize);
+}
+
+/// What one `davidson_core` run produced, carrying the backend's
+/// instrumentation sink out to the thin public wrappers (`bchdav` maps
+/// it into `BchdavResult.timers`, `dist_bchdav` into
+/// `DistBchdavResult.ledger`).
+#[derive(Clone, Debug)]
+pub struct CoreResult<I> {
+    /// Converged eigenvalues, ascending (k_want of them on success).
+    pub eigenvalues: Vec<f64>,
+    /// Corresponding eigenvectors (n x k columns match `eigenvalues`).
+    pub eigenvectors: Mat,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Total SpMM applications (filter + block + residual).
+    pub spmm_count: usize,
+    /// The backend's instrumentation sink.
+    pub instrument: I,
+    /// Raw u64 draws consumed from the solver's RNG stream. The core
+    /// owns the stream, so two backends that report the same count
+    /// consumed the exact same prefix — the cross-backend warm-start
+    /// test pins this down.
+    pub rng_draws: u64,
+}
+
+/// Run Block Chebyshev-Davidson (Algorithm 2) over `backend`. `v_init`
+/// optionally supplies initial vectors (progressive filtering consumes
+/// them in order — the streaming warm-start path); missing columns are
+/// filled with random vectors from the core-owned stream.
+pub fn davidson_core<B: DavidsonBackend>(
+    backend: &mut B,
+    opts: &BchdavOptions,
+    v_init: Option<&Mat>,
+) -> CoreResult<B::Inst> {
+    let n = backend.n();
+    let kb = opts.k_b;
+    let act_max = opts.act_max.max(3 * kb);
+    let dim_max = opts.dim_max.max(opts.k_want + kb).min(n);
+    let mut inst = B::Inst::default();
+    let mut rng = Rng::new(opts.seed);
+    let mut spmm_count = 0usize;
+
+    let lowb = opts.bounds.lower;
+    let upperb = opts.bounds.upper;
+    // Step 1: initial cut between wanted and unwanted (paper §2).
+    let mut low_nwb = opts
+        .bounds
+        .initial_cut(opts.k_want, n)
+        .max(lowb + 1e-6 * (upperb - lowb));
+
+    // Step 2: initial block.
+    let k_init = v_init.map(|v| v.cols).unwrap_or(0);
+    let mut k_i = 0usize; // used initial vectors
+    let take_init = |k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| -> Mat {
+        let mut block = Mat::zeros(n, count);
+        for c in 0..count {
+            if k_i + c < k_init {
+                let col = v_init.unwrap().col(k_i + c);
+                block.set_col(c, &col);
+            } else {
+                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                block.set_col(c, &col);
+            }
+        }
+        block
+    };
+    let mut v_tmp = take_init(k_i, kb, &mut rng, v_init);
+    k_i = k_i.min(k_init) + kb.min(k_init.saturating_sub(k_i));
+
+    // Basis and A-image storage.
+    let mut v = Mat::zeros(n, dim_max + kb);
+    let mut w = Mat::zeros(n, act_max + kb);
+    let mut h = Mat::zeros(act_max + kb, act_max + kb);
+    let (mut k_c, mut k_sub, mut k_act) = (0usize, 0usize, 0usize);
+    let mut eval: Vec<f64> = Vec::new();
+    // Ritz values of the current active subspace (diag of D).
+    #[allow(unused_assignments)]
+    let mut ritz: Vec<f64> = Vec::new();
+
+    let mut iterations = 0usize;
+    while iterations < opts.itmax {
+        iterations += 1;
+
+        // Step 5: Chebyshev filter.
+        let filtered = backend.filter(&mut inst, &v_tmp, opts.m, low_nwb, upperb, lowb);
+        spmm_count += opts.m;
+
+        // Step 6: orthonormalize against V(:, 0..k_sub) (DGKS: two
+        // projection passes + thin QR; rank-deficient columns replaced
+        // by random vectors and re-orthonormalized).
+        let vnew = backend.orthonormalize(&mut inst, &v, k_sub, filtered, &mut rng);
+        v.set_cols_block(k_sub, &vnew);
+
+        // Step 7: W(:, k_act..k_act+kb) = A * vnew.
+        let av = backend.spmm(&mut inst, "spmm", &vnew);
+        spmm_count += 1;
+        w.set_cols_block(k_act, &av);
+        k_act += kb;
+        k_sub += kb;
+
+        // Step 8: last kb columns of H over the active subspace (Gram
+        // product), then symmetrize. The rows of the new block are
+        // *mirrored* from the computed columns (they were zeroed at step
+        // 15); only the new kb x kb corner genuinely needs averaging.
+        // (panel copies go through the rank-local channel: the
+        // sequential breakdown includes them, as the old driver did,
+        // while the Ledger ignores them — see `Instrument::time_panel`)
+        let (vact, wnew) = inst.time_panel("rayleigh", || {
+            (v.cols_block(k_c, k_sub), w.cols_block(k_act - kb, k_act))
+        });
+        let hcols = backend.gram(&mut inst, "rayleigh", &vact, &wnew); // (k_act x kb)
+        inst.time("rayleigh", || {
+            let base = k_act - kb;
+            for i in 0..k_act {
+                for j in 0..kb {
+                    h[(i, base + j)] = hcols[(i, j)];
+                }
+            }
+            // mirror new-rows x old-cols from the computed old-rows x new-cols
+            for i in 0..base {
+                for j in 0..kb {
+                    h[(base + j, i)] = hcols[(i, j)];
+                }
+            }
+            // symmetrize the new corner
+            for a in 0..kb {
+                for b2 in a + 1..kb {
+                    let s = 0.5 * (h[(base + a, base + b2)] + h[(base + b2, base + a)]);
+                    h[(base + a, base + b2)] = s;
+                    h[(base + b2, base + a)] = s;
+                }
+            }
+        });
+
+        // Step 9: eigendecomposition of H(0..k_act, 0..k_act), ascending
+        // (wanted = smallest; see module doc). H is replicated on every
+        // simulated rank, so distributed backends bill this once as
+        // redundant local work — exactly what this sink call does.
+        let (d_all, y_all) = inst.time("rayleigh", || {
+            let mut hk = Mat::zeros(k_act, k_act);
+            for i in 0..k_act {
+                for j in 0..k_act {
+                    hk[(i, j)] = h[(i, j)];
+                }
+            }
+            eigh(&hk)
+        });
+        let k_old = k_act;
+
+        // Step 10: inner restart.
+        if k_act + kb > act_max {
+            let k_ri = (act_max / 2).max(act_max.saturating_sub(3 * kb)).max(kb);
+            k_act = k_ri;
+            k_sub = k_act + k_c;
+        }
+
+        // Step 11: subspace rotation (Rayleigh-Ritz refinement).
+        {
+            let y = inst.time("rayleigh", || {
+                let mut y = Mat::zeros(k_old, k_act);
+                for i in 0..k_old {
+                    for j in 0..k_act {
+                        y[(i, j)] = y_all[(i, j)];
+                    }
+                }
+                y
+            });
+            let vact = inst.time_panel("rayleigh", || v.cols_block(k_c, k_c + k_old));
+            let vrot = backend.rotate(&mut inst, "rayleigh", &vact, &y);
+            inst.time_panel("rayleigh", || v.set_cols_block(k_c, &vrot));
+            let wact = inst.time_panel("rayleigh", || w.cols_block(0, k_old));
+            let wrot = backend.rotate(&mut inst, "rayleigh", &wact, &y);
+            inst.time_panel("rayleigh", || w.set_cols_block(0, &wrot));
+        }
+        ritz = d_all[..k_act].to_vec();
+
+        // Step 12: residuals of the first kb active Ritz pairs — the
+        // backend decides whether to read them off W or recompute via an
+        // extra SpMM; the converged prefix is counted here (sorted
+        // ascending, so locking stops at the first miss).
+        let test = kb.min(k_act);
+        let (norms, extra_spmms) =
+            backend.residual_norms(&mut inst, &v, k_c, &w, &ritz, test, opts.tol);
+        spmm_count += extra_spmms;
+        let mut e_c = 0usize;
+        for &nrm in &norms {
+            if nrm <= opts.tol {
+                e_c += 1;
+            } else {
+                break; // converged prefix only
+            }
+        }
+
+        if std::env::var("BCHDAV_DEBUG").is_ok() && iterations <= 40 {
+            let vnorm = v.col_norm(k_c);
+            eprintln!(
+                "it={iterations} k_c={k_c} k_act={k_act} k_sub={k_sub} cut={low_nwb:.4} e_c={e_c} ritz[..3]={:?} vcol_norm={vnorm:.3e}",
+                &ritz[..ritz.len().min(3)]
+            );
+        }
+        if e_c > 0 {
+            // lock: the converged columns already sit at V(:, k_c..k_c+e_c)
+            eval.extend_from_slice(&ritz[..e_c]);
+            k_c += e_c;
+            // Step 14: shift W left by e_c columns.
+            let wtail = w.cols_block(e_c, k_act);
+            w.set_cols_block(0, &wtail);
+            k_act -= e_c;
+            ritz.drain(..e_c);
+        }
+
+        // Step 13: done?
+        if k_c >= opts.k_want {
+            break;
+        }
+
+        // Step 15: H <- diag(non-converged Ritz values).
+        for i in 0..act_max + kb {
+            for j in 0..act_max + kb {
+                h[(i, j)] = 0.0;
+            }
+        }
+        for (i, &r) in ritz.iter().enumerate() {
+            h[(i, i)] = r;
+        }
+
+        // Step 16: outer restart.
+        if k_sub + kb > dim_max {
+            let k_ro = dim_max
+                .saturating_sub(2 * kb)
+                .saturating_sub(k_c)
+                .clamp(kb, k_act.max(kb));
+            let k_ro = k_ro.min(k_act);
+            k_sub = k_c + k_ro;
+            k_act = k_ro;
+            ritz.truncate(k_act);
+        }
+
+        // Step 17: progressive filtering — next block mixes unused
+        // initial vectors with the current best non-converged Ritz
+        // vectors.
+        let fresh = e_c.min(k_init.saturating_sub(k_i));
+        v_tmp = Mat::zeros(n, kb);
+        if fresh > 0 {
+            let init_cols = take_init(k_i, fresh, &mut rng, v_init);
+            for c in 0..fresh {
+                let col = init_cols.col(c);
+                v_tmp.set_col(c, &col);
+            }
+            k_i += fresh;
+        }
+        for c in fresh..kb {
+            let src = k_c + (c - fresh);
+            if src < k_sub {
+                let col = v.col(src);
+                v_tmp.set_col(c, &col);
+            } else {
+                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                v_tmp.set_col(c, &col);
+            }
+        }
+
+        // Step 18: move the cut to the median of non-converged Ritz values.
+        if !ritz.is_empty() {
+            let mut sorted = ritz.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = sorted[sorted.len() / 2];
+            if med > lowb && med < upperb {
+                low_nwb = med;
+            }
+        }
+    }
+
+    // Sort locked pairs ascending (deflation locked them in batches).
+    let mut idx: Vec<usize> = (0..k_c).collect();
+    idx.sort_by(|&i, &j| eval[i].partial_cmp(&eval[j]).unwrap());
+    let mut out_vals = Vec::with_capacity(k_c);
+    let mut out_vecs = Mat::zeros(n, k_c);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        out_vals.push(eval[oldj]);
+        let col = v.col(oldj);
+        out_vecs.set_col(newj, &col);
+    }
+
+    CoreResult {
+        converged: k_c >= opts.k_want,
+        eigenvalues: out_vals,
+        eigenvectors: out_vecs,
+        iterations,
+        spmm_count,
+        instrument: inst,
+        rng_draws: rng.draws(),
+    }
+}

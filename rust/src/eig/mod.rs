@@ -1,18 +1,25 @@
 //! Eigensolvers: the paper's Block Chebyshev-Davidson plus the baselines
 //! it is compared against (ARPACK-like thick-restart Lanczos, LOBPCG with
 //! optional AMG-lite preconditioning, power iteration for PIC).
+//!
+//! The Algorithm 2 state machine lives once in [`core`] as
+//! `davidson_core<B: DavidsonBackend>`; [`bchdav`] is its sequential
+//! `SeqBackend<Op: SpmmOp>` instantiation and `dist::dist_bchdav` its
+//! distributed one, so solver variants land once instead of twice.
 
 pub mod amg;
 pub mod bchdav;
 pub mod bounds;
 pub mod chebfilter;
+pub mod core;
 pub mod lanczos;
 pub mod lobpcg;
 pub mod op;
 pub mod power_iteration;
 
 pub use amg::AmgLite;
-pub use bchdav::{bchdav, BchdavOptions, BchdavResult};
+pub use bchdav::{bchdav, laplacian_opts, BchdavOptions, BchdavResult, SeqBackend};
+pub use self::core::{davidson_core, CoreResult, DavidsonBackend};
 pub use bounds::{estimate_lanczos, SpectrumBounds};
 pub use chebfilter::{chebyshev_filter_via_spmm, filter_scalar};
 pub use lanczos::{lanczos_smallest, LanczosOptions, LanczosResult};

@@ -139,6 +139,25 @@ impl Ledger {
     }
 }
 
+/// The Ledger is the distributed side of the unified instrumentation
+/// sink: the Davidson core (`eig::core`) bills its backend-independent
+/// bookkeeping (H assembly, the small replicated eigh) through this
+/// impl, while the distributed kernels keep charging their own measured
+/// supersteps and modeled collectives directly. Same component keys as
+/// `ComponentTimers`, so Figs. 6-8 read either sink identically.
+impl crate::util::Instrument for Ledger {
+    fn add_compute(&mut self, component: &'static str, seconds: f64) {
+        Ledger::add_compute(self, component, seconds);
+    }
+
+    /// Rank-local panel copies are deliberately *not* billed (matching
+    /// the pre-unification distributed driver): every distributed
+    /// kernel charges its panel traffic at the slowest rank's share via
+    /// `superstep_weighted`, and a full-time charge here would add a
+    /// constant, p-independent term to the Fig. 6-8 scaling curves.
+    fn add_panel_compute(&mut self, _component: &'static str, _seconds: f64) {}
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

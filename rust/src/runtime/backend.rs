@@ -1,6 +1,8 @@
 //! The PJRT-backed operator: `SpmmOp` whose SpMM (and, when the shapes
 //! and degree allow, whole Chebyshev filter) runs through the compiled
-//! Pallas artifacts.
+//! Pallas artifacts. Because `eig::core`'s `SeqBackend` lifts any
+//! `SpmmOp` into a full `DavidsonBackend`, this operator is a complete
+//! Bchdav solver with zero driver code of its own.
 //!
 //! A is converted to ELL/HYB once, padded to the chosen shape bucket, and
 //! the value/column planes are uploaded to the device *once* — the
@@ -295,6 +297,26 @@ mod tests {
         let got = op.spmm(&x);
         assert!(got.max_abs_diff(&a.spmm(&x)) < 1e-12);
         assert!(rt.stats.borrow().native_fallbacks >= 1);
+    }
+
+    #[test]
+    fn davidson_core_over_pjrt_backend_converges() {
+        // The PJRT seam of the unified core: PjrtOperator is nothing but
+        // an `SpmmOp`, and `SeqBackend` turns any `SpmmOp` into a full
+        // `DavidsonBackend` — so the compiled-artifact path gets the
+        // whole Algorithm 2 state machine without a line of driver code.
+        let Some(rt) = runtime() else { return };
+        let a = lap(400, 0.025, 7);
+        let op = PjrtOperator::new(&rt, &a, 4).unwrap();
+        let opts = crate::eig::BchdavOptions::for_laplacian(4, 4, 11, 1e-4);
+        let mut backend = crate::eig::SeqBackend::new(&op);
+        let core = crate::eig::davidson_core(&mut backend, &opts, None);
+        assert!(core.converged);
+        let res_entrypoint = crate::eig::bchdav(&op, &opts, None);
+        assert_eq!(core.iterations, res_entrypoint.iterations);
+        for (c, e) in core.eigenvalues.iter().zip(res_entrypoint.eigenvalues.iter()) {
+            assert!((c - e).abs() < 1e-12, "{c} vs {e}");
+        }
     }
 
     #[test]

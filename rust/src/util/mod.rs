@@ -8,4 +8,4 @@ pub mod timer;
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{hardware_threads, parallel_for_chunks, parallel_map};
-pub use timer::{bench, time_it, BenchStat, ComponentTimers};
+pub use timer::{bench, time_it, BenchStat, ComponentTimers, Instrument};

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
+    draws: u64,
 }
 
 impl Rng {
@@ -28,7 +29,15 @@ impl Rng {
         for v in s.iter_mut() {
             *v = splitmix64(&mut sm);
         }
-        Rng { s }
+        Rng { s, draws: 0 }
+    }
+
+    /// Raw u64 draws consumed so far. Every sampler bottoms out in
+    /// `next_u64`, so two runs that report the same count consumed the
+    /// exact same stream prefix — the cross-backend warm-start tests use
+    /// this to pin down stream-consumption equality.
+    pub fn draws(&self) -> u64 {
+        self.draws
     }
 
     /// Derive an independent stream (e.g. one per simulated rank).
@@ -38,6 +47,7 @@ impl Rng {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        self.draws += 1;
         let r = self.s[1]
             .wrapping_mul(5)
             .rotate_left(7)

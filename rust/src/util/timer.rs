@@ -57,6 +57,61 @@ impl BenchStat {
     }
 }
 
+/// The instrumentation sink the unified Davidson core (`eig::core`)
+/// reports into. Sequential solves sink into [`ComponentTimers`];
+/// distributed solves sink into the mpi_sim `Ledger`, whose kernels
+/// additionally charge modeled communication on their own. Both use the
+/// same component vocabulary ("filter" / "spmm" / "orth" / "rayleigh" /
+/// "residual"), so the Fig. 6-8 benches read either sink identically.
+pub trait Instrument {
+    /// Add measured compute seconds to a component. Used for work that
+    /// is replicated on every simulated rank (small-matrix bookkeeping:
+    /// H assembly, the k x k eigh) — billed at full wall time by every
+    /// sink.
+    fn add_compute(&mut self, component: &'static str, seconds: f64);
+
+    /// Add measured seconds of *rank-local panel work* (O(n k) copies a
+    /// lockstep run would split across ranks). The sequential timers
+    /// bill this like any compute; the distributed Ledger ignores it —
+    /// a full-time charge would add a constant, p-independent term to
+    /// scaling curves whose kernels bill only the slowest rank's ~1/p
+    /// share (and its own kernels already charge their panel traffic
+    /// through `superstep_weighted`).
+    fn add_panel_compute(&mut self, component: &'static str, seconds: f64);
+
+    /// Time a closure and charge the elapsed wall time to `component`
+    /// as replicated compute.
+    fn time<T>(&mut self, component: &'static str, f: impl FnOnce() -> T) -> T
+    where
+        Self: Sized,
+    {
+        let (out, dt) = time_it(f);
+        self.add_compute(component, dt);
+        out
+    }
+
+    /// Time a closure and charge it to `component` as rank-local panel
+    /// work (see `add_panel_compute`).
+    fn time_panel<T>(&mut self, component: &'static str, f: impl FnOnce() -> T) -> T
+    where
+        Self: Sized,
+    {
+        let (out, dt) = time_it(f);
+        self.add_panel_compute(component, dt);
+        out
+    }
+}
+
+impl Instrument for ComponentTimers {
+    fn add_compute(&mut self, component: &'static str, seconds: f64) {
+        self.add(component, seconds);
+    }
+
+    fn add_panel_compute(&mut self, component: &'static str, seconds: f64) {
+        self.add(component, seconds);
+    }
+}
+
 /// Named accumulating timers, used to produce the Fig. 8 style breakdown
 /// ("percentage of CPU time per component").
 #[derive(Default, Debug, Clone)]

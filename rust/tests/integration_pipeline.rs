@@ -7,7 +7,9 @@ use dist_chebdav::cluster::{quality, spectral_clustering, Eigensolver};
 use dist_chebdav::config::ExperimentConfig;
 use dist_chebdav::coordinator::{dist_run, grid_side};
 use dist_chebdav::dist::{dist_bchdav, laplacian_opts, DistMatrix};
-use dist_chebdav::eig::{bchdav, lanczos_smallest, lobpcg, BchdavOptions, LanczosOptions, LobpcgOptions};
+use dist_chebdav::eig::{
+    bchdav, lanczos_smallest, lobpcg, BchdavOptions, LanczosOptions, LobpcgOptions,
+};
 use dist_chebdav::graph::sbm::{generate, Category, SbmParams};
 use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::mpi_sim::CostModel;
