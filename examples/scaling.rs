@@ -5,7 +5,7 @@
 //!     cargo run --release --example scaling [-- n]
 
 use dist_chebdav::config::ExperimentConfig;
-use dist_chebdav::coordinator::{dist_scaling_sweep, fmt_f, fmt_secs, Table};
+use dist_chebdav::coordinator::{apply_run_settings, dist_scaling_sweep, fmt_f, fmt_secs, Table};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
@@ -21,6 +21,7 @@ fn main() {
         ps: vec![1, 4, 16, 64, 121, 256, 576, 1024],
         ..Default::default()
     };
+    apply_run_settings(&cfg);
     let mat = table2_matrix("LBOLBSV", n, 3);
     println!(
         "matrix {} n={} nnz={} | m={} k={} k_b={} tol={:.0e} | alpha={:.1e} beta={:.1e}",

@@ -28,6 +28,22 @@ pub fn full() -> bool {
     std::env::var("CHEBDAV_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Apply the shared `[run]` runtime knobs (worker threads for native
+/// kernels + the rank-parallel superstep executor) through the same
+/// `apply_run_settings` entry point the CLI and config files use.
+/// Benches take no CLI flags, so the thread count comes from
+/// `CHEBDAV_THREADS` (default: hardware threads); `CHEBDAV_SEQ_RANKS=1`
+/// is the sequential-rank escape hatch (read by the executor itself).
+pub fn apply_run_defaults() {
+    let mut cfg = dist_chebdav::config::ExperimentConfig::default();
+    if let Ok(v) = std::env::var("CHEBDAV_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            cfg.threads = n;
+        }
+    }
+    dist_chebdav::coordinator::apply_run_settings(&cfg);
+}
+
 pub fn banner(fig: &str, paper_claim: &str) {
     println!("==================================================================");
     println!("{fig}");

@@ -45,6 +45,7 @@ fn run_figure(fig: &str, n: usize, ks: &[usize], repeats: usize) {
 }
 
 fn main() {
+    common::apply_run_defaults();
     let repeats = if common::full() { 5 } else { 2 };
     let ks3: &[usize] = if common::full() { &[32, 64] } else { &[32] };
     run_figure("Fig2", common::bench_n(2_048), &[32], repeats);

@@ -10,6 +10,7 @@ use dist_chebdav::coordinator::{fmt_f, fmt_secs, quality_cell, Table};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(4_096);
     common::banner("Fig4", "AMG preconditioning: no quality gain, extra cost");
     let mut table = Table::new(

@@ -13,6 +13,7 @@ use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::mpi_sim::CostModel;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     let k = if common::full() { 64 } else { 16 };
     common::banner("Fig5", "ARPACK/LOBPCG speedup flattens past ~256 processes");

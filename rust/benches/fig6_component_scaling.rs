@@ -13,6 +13,7 @@ use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::mpi_sim::CostModel;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(16_384);
     common::banner("Fig6", "filter/SpMM comm shrinks ~1/sqrt(p); TSQR comm grows ~log p");
     let mat = table2_matrix("HBOLBSV", n, 13);

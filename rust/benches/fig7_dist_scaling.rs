@@ -13,6 +13,7 @@ use dist_chebdav::coordinator::{dist_scaling_sweep, fmt_f, fmt_secs, Table};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     common::banner("Fig7", "distributed Bchdav speedup ~ sqrt(p), filter dominant");
     let cases = [

@@ -12,6 +12,7 @@ use dist_chebdav::coordinator::{dist_run, fmt_f, Table};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     common::banner("Fig8", "filter dominates the per-component time split at p=121");
     let cases = [

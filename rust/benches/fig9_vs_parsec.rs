@@ -13,6 +13,7 @@ use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::mpi_sim::CostModel;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     common::banner("Fig9", "1.5D+TSQR beats PARSEC's 1D+DGKS and keeps scaling");
     let mat = table2_matrix("LBOLBSV", n, 17);

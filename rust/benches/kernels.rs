@@ -3,21 +3,27 @@
 //! * native CSR SpMM vs HYB(ELL) SpMM vs the PJRT-compiled Pallas
 //!   artifact, across panel widths;
 //! * Householder QR vs TSQR trees of different leaf counts;
-//! * fused PJRT Chebyshev filter vs per-degree recurrence.
+//! * fused PJRT Chebyshev filter vs per-degree recurrence;
+//! * the superstep executor: serial vs parallel rank execution of a
+//!   1.5D SpMM superstep (the realized wall-clock speedup of
+//!   `mpi_sim::exec` — billing is identical in both modes).
 //!
 //! Used to drive the performance pass recorded in EXPERIMENTS.md §Perf.
 
 mod common;
 
 use dist_chebdav::coordinator::{fmt_f, fmt_secs, Table};
+use dist_chebdav::dist::{spmm_1p5d, DistMatrix};
 use dist_chebdav::eig::SpmmOp;
 use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::linalg::Mat;
+use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
 use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
 use dist_chebdav::sparse::EllHyb;
 use dist_chebdav::util::{bench, Rng};
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     common::banner("kernels", "hot-path microbenches (EXPERIMENTS.md §Perf)");
     let mat = table2_matrix("LBOLBSV", n, 3);
@@ -112,4 +118,42 @@ fn main() {
     }
     print!("{}", table.render());
     common::save("kernels_orth", &table);
+
+    // --- superstep executor: serial vs parallel rank execution ---
+    // One full 1.5D SpMM superstep (produce + deterministic merge) per
+    // measurement; the speedup column is the realized wall-clock win of
+    // mpi_sim::exec at that grid. Billing and results are identical in
+    // both modes — only wall-clock differs.
+    let mut table = Table::new(
+        &format!(
+            "superstep executor, 1.5D SpMM n={n} k=8, {} worker threads",
+            dist_chebdav::util::configured_threads()
+        ),
+        &["q", "ranks", "serial", "parallel", "speedup"],
+    );
+    let cost = CostModel::default();
+    let x = Mat::randn(n, 8, &mut rng);
+    for q in [4usize, 8, 11] {
+        let dm = DistMatrix::new(a, q);
+        set_seq_ranks(Some(true));
+        let s_seq = bench(1, 3, || {
+            let mut led = Ledger::new();
+            spmm_1p5d(&dm, &x, false, &cost, &mut led, "spmm")
+        });
+        set_seq_ranks(Some(false));
+        let s_par = bench(1, 3, || {
+            let mut led = Ledger::new();
+            spmm_1p5d(&dm, &x, false, &cost, &mut led, "spmm")
+        });
+        set_seq_ranks(None);
+        table.row(&[
+            q.to_string(),
+            (q * q).to_string(),
+            fmt_secs(s_seq.min),
+            fmt_secs(s_par.min),
+            fmt_f(s_seq.min / s_par.min.max(1e-30), 2),
+        ]);
+    }
+    print!("{}", table.render());
+    common::save("kernels_superstep", &table);
 }

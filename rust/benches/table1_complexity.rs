@@ -11,6 +11,7 @@ use dist_chebdav::coordinator::{fmt_f, table1, Table};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(8_192);
     common::banner(
         "Table1",

@@ -9,6 +9,7 @@ mod common;
 use dist_chebdav::coordinator::{fmt_f, table2, Table};
 
 fn main() {
+    common::apply_run_defaults();
     let n = common::bench_n(65_536);
     common::banner("Table2", "load imb.: SBM ~1.2 | MAWI ~8.8 | Graph500 ~7.2 (paper values)");
     let rows = table2(&["LBOLBSV", "HBOLBSV", "MAWI", "Graph500"], n, 1);

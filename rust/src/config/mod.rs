@@ -32,6 +32,13 @@ pub struct ExperimentConfig {
     pub beta: f64,
     /// execute the SpMM hot path through the PJRT artifacts
     pub use_pjrt: bool,
+    /// worker threads for the scoped pool (native kernels + the
+    /// rank-parallel superstep executor); 0 = auto (hardware_threads)
+    pub threads: usize,
+    /// run simulated ranks sequentially (the pre-executor behaviour) —
+    /// the config-side spelling of `CHEBDAV_SEQ_RANKS=1`, for debugging
+    /// and timing-sensitivity checks
+    pub seq_ranks: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -50,6 +57,8 @@ impl Default for ExperimentConfig {
             alpha: 2.0e-6,
             beta: 1.0e-9,
             use_pjrt: false,
+            threads: crate::util::hardware_threads(),
+            seq_ranks: false,
         }
     }
 }
@@ -84,6 +93,10 @@ impl ExperimentConfig {
             alpha: t.get_or("comm", "alpha", d.alpha, |v| v.as_float()),
             beta: t.get_or("comm", "beta", d.beta, |v| v.as_float()),
             use_pjrt: t.get_or("runtime", "use_pjrt", d.use_pjrt, |v| v.as_bool()),
+            threads: t.get_or("run", "threads", d.threads, |v| {
+                v.as_int().map(|i| i.max(0) as usize)
+            }),
+            seq_ranks: t.get_or("run", "seq_ranks", d.seq_ranks, |v| v.as_bool()),
         })
     }
 
@@ -127,11 +140,23 @@ alpha = 1e-6
 beta = 2e-9
 [runtime]
 use_pjrt = true
+[run]
+threads = 3
+seq_ranks = true
 "#;
         let c = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(c.graph, "MAWI");
         assert_eq!(c.ps, vec![1, 121, 1024]);
         assert_eq!(c.alpha, 1e-6);
         assert!(c.use_pjrt);
+        assert_eq!(c.threads, 3);
+        assert!(c.seq_ranks);
+    }
+
+    #[test]
+    fn run_section_defaults_to_auto_parallel() {
+        let c = ExperimentConfig::from_toml("name = \"x\"").unwrap();
+        assert_eq!(c.threads, crate::util::hardware_threads());
+        assert!(!c.seq_ranks);
     }
 }

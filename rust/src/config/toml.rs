@@ -187,6 +187,15 @@ warm = true
     }
 
     #[test]
+    fn run_section_keys_parse() {
+        // the `[run]` knobs ExperimentConfig consumes (worker threads,
+        // sequential-rank debugging escape hatch)
+        let t = Toml::parse("[run]\nthreads = 8\nseq_ranks = false\n").unwrap();
+        assert_eq!(t.get("run", "threads").unwrap().as_int(), Some(8));
+        assert_eq!(t.get("run", "seq_ranks").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
     fn hash_inside_string_preserved() {
         let t = Toml::parse("s = \"a#b\"").unwrap();
         assert_eq!(t.get("", "s").unwrap().as_str(), Some("a#b"));

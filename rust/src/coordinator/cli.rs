@@ -56,6 +56,7 @@ impl Args {
 }
 
 fn config_from_args(args: &Args) -> ExperimentConfig {
+    let d = ExperimentConfig::default();
     ExperimentConfig {
         graph: args.get("graph", "LBOLBSV".to_string()),
         n: args.get("n", 1 << 13),
@@ -65,7 +66,8 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
         m: args.get("m", 11),
         tol: args.get("tol", 1e-2),
         use_pjrt: args.has("pjrt"),
-        ..Default::default()
+        threads: args.get("threads", d.threads),
+        ..d
     }
 }
 
@@ -94,11 +96,16 @@ fn print_help() {
         "chebdav — distributed Block Chebyshev-Davidson spectral clustering
 
 USAGE:
-  chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --seed S --pjrt]
-  chebdav cluster [--graph G --n N --k K --kb B --m M --tol T --seed S]
-  chebdav scale   <config.toml>
+  chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --seed S --threads W --pjrt]
+  chebdav cluster [--graph G --n N --k K --kb B --m M --tol T --seed S --threads W]
+  chebdav scale   <config.toml> [--threads W]
   chebdav table2  [--n N --seed S]
   chebdav info
+
+  --threads W   worker threads for native kernels and the rank-parallel
+                superstep executor (default: hardware threads; also the
+                config key [run] threads). CHEBDAV_SEQ_RANKS=1 or
+                [run] seq_ranks = true restores sequential rank execution.
 
 GRAPHS: LBOLBSV LBOHBSV HBOLBSV HBOHBSV MAWI Graph500"
     );
@@ -106,6 +113,7 @@ GRAPHS: LBOLBSV LBOHBSV HBOLBSV HBOHBSV MAWI Graph500"
 
 fn cmd_solve(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
+    experiments::apply_run_settings(&cfg);
     let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
     let mut opts = BchdavOptions::for_laplacian(cfg.k, cfg.k_b, cfg.m, cfg.tol);
     opts.seed = cfg.seed;
@@ -153,6 +161,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
+    experiments::apply_run_settings(&cfg);
     let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
     let truth = mat
         .labels
@@ -187,7 +196,9 @@ fn cmd_scale(args: &Args) -> Result<()> {
         .positional
         .first()
         .context("usage: chebdav scale <config.toml>")?;
-    let cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+    let mut cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+    cfg.threads = args.get("threads", cfg.threads);
+    experiments::apply_run_settings(&cfg);
     let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
     println!(
         "scaling sweep `{}` on {} (n={}, nnz={}), ps={:?}",
@@ -268,6 +279,11 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
     }
     println!("hardware threads: {}", crate::util::hardware_threads());
+    println!(
+        "worker threads: {} | rank execution: {}",
+        crate::util::configured_threads(),
+        if crate::mpi_sim::seq_ranks() { "sequential (CHEBDAV_SEQ_RANKS)" } else { "parallel" }
+    );
     Ok(())
 }
 

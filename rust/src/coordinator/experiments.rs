@@ -16,6 +16,21 @@ pub fn grid_side(p: usize) -> usize {
     (1..=p).take_while(|q| q * q <= p).last().unwrap_or(1)
 }
 
+/// Apply a config's `[run]` knobs to the process-global runtime: the
+/// worker-thread count for native kernels and the rank-parallel
+/// superstep executor (`--threads` / `[run] threads`; 0 = auto), and
+/// the sequential-rank escape hatch (`[run] seq_ranks = true`, the
+/// config-side spelling of `CHEBDAV_SEQ_RANKS=1`). The CLI, the figure
+/// benches, and the examples all funnel through this one entry point so
+/// they share the same knob. `seq_ranks = false` (the default) leaves
+/// the environment variable in control rather than overriding it.
+pub fn apply_run_settings(cfg: &ExperimentConfig) {
+    crate::util::set_threads(cfg.threads);
+    if cfg.seq_ranks {
+        crate::mpi_sim::set_seq_ranks(Some(true));
+    }
+}
+
 // ---------------------------------------------------------------------
 // Quality experiments (Figs. 2, 3, 4)
 // ---------------------------------------------------------------------

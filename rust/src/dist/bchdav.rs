@@ -25,12 +25,12 @@
 //! integration tests `distributed_equals_sequential_eigenvalues` and
 //! `warm_start_same_panel_same_stream_across_backends`.
 
-use super::charged_rowwise;
 use super::filter::dist_cheb_filter;
 use super::matrix::DistMatrix;
 use super::orth::dist_atb;
 use super::spmm::spmm_1p5d;
 use super::tsqr::tsqr;
+use super::{merge_partials, rowwise_produce, rowwise_update};
 use crate::eig::core::{davidson_core, DavidsonBackend};
 use crate::eig::BchdavOptions;
 use crate::linalg::{matmul, Mat};
@@ -52,19 +52,26 @@ pub struct DistBchdavResult {
     pub converged: bool,
     /// Total 1.5D SpMM applications (filter + block + residual).
     pub spmm_count: usize,
+    /// Raw u64 draws consumed from the core-owned RNG stream — equal
+    /// across backends *and* across parallel/sequential rank execution
+    /// (pinned by `tests/rank_parallel.rs`).
+    pub rng_draws: u64,
     /// Per-component measured-compute / modeled-comm ledger
     /// ("filter", "spmm", "orth", "rayleigh", "residual").
     pub ledger: Ledger,
 }
 
 /// C = A Y with A tall and Y small (the subspace rotation): purely
-/// rank-local in the 1D row layout — row chunks are independent, so the
-/// result is identical to the sequential `matmul`.
+/// rank-local in the 1D row layout — each rank computes and writes its
+/// own disjoint row block, so the result is identical to the sequential
+/// `matmul` whether ranks run concurrently or not.
 fn dist_rows_matmul(a: &Mat, y: &Mat, p: usize, led: &mut Ledger, comp: &'static str) -> Mat {
     let mut out = Mat::zeros(a.rows, y.cols);
-    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
+    let cols = y.cols;
+    rowwise_update(led, comp, a.rows, p, cols, &mut out.data, |lo, hi, ob| {
         if lo < hi {
-            out.set_rows_block(lo, &matmul(&a.rows_block(lo, hi), y));
+            let part = matmul(&a.rows_block(lo, hi), y);
+            ob.copy_from_slice(&part.data);
         }
     });
     out
@@ -91,11 +98,8 @@ fn dist_orthonormalize_against(
             for _ in 0..2 {
                 let coef = dist_atb(&basis, &block, p, cost, led, "orth");
                 let corr = dist_rows_matmul(&basis, &coef, p, led, "orth");
-                charged_rowwise(led, "orth", n, p, |lo, hi| {
-                    for (x, &y) in block.data[lo * kb..hi * kb]
-                        .iter_mut()
-                        .zip(corr.data[lo * kb..hi * kb].iter())
-                    {
+                rowwise_update(led, "orth", n, p, kb, &mut block.data, |lo, hi, bb| {
+                    for (x, &y) in bb.iter_mut().zip(corr.data[lo * kb..hi * kb].iter()) {
                         *x -= y;
                     }
                 });
@@ -189,15 +193,18 @@ impl DavidsonBackend for DistBackend<'_> {
             led,
             "residual",
         );
-        let mut nrm2s = vec![0.0f64; test];
-        charged_rowwise(led, "residual", n, p, |lo, hi| {
+        let partials: Vec<Vec<f64>> = rowwise_produce(led, "residual", n, p, |lo, hi| {
+            let mut acc = vec![0.0f64; test];
             for i in lo..hi {
-                for (j, acc) in nrm2s.iter_mut().enumerate() {
+                for (j, a) in acc.iter_mut().enumerate() {
                     let r = avr[(i, j)] - ritz[j] * v[(i, k_c + j)];
-                    *acc += r * r;
+                    *a += r * r;
                 }
             }
+            acc
         });
+        let mut nrm2s = vec![0.0f64; test];
+        merge_partials(&mut nrm2s, &partials);
         led.charge("residual", self.cost.allreduce(test, p));
         (nrm2s.iter().map(|&x| x.sqrt()).collect(), 1)
     }
@@ -221,6 +228,7 @@ pub fn dist_bchdav(
         iterations: core.iterations,
         converged: core.converged,
         spmm_count: core.spmm_count,
+        rng_draws: core.rng_draws,
         ledger: core.instrument,
     }
 }

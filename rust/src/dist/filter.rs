@@ -12,8 +12,8 @@
 //! m log p messages (Table 1's "filter" row) — plus the elementwise
 //! update billed at the slowest rank's share.
 
-use super::charged_rowwise;
 use super::matrix::DistMatrix;
+use super::rowwise_update;
 use super::spmm::spmm_1p5d;
 use crate::linalg::Mat;
 use crate::mpi_sim::{CostModel, Ledger};
@@ -43,15 +43,14 @@ pub fn dist_cheb_filter(
     let mut sigma = e / (a0 - c);
     let tau = 2.0 / sigma;
 
-    // U = (A V - c V) * sigma / e, fused into one rank-local pass
+    // U = (A V - c V) * sigma / e, fused into one rank-local pass over
+    // disjoint row blocks (each rank updates only its own rows)
     let mut u = spmm_1p5d(dm, v, false, cost, led, comp);
     {
         let s = sigma / e;
-        charged_rowwise(led, comp, v.rows, p, |lo, hi| {
-            for (uv, &vv) in u.data[lo * k..hi * k]
-                .iter_mut()
-                .zip(v.data[lo * k..hi * k].iter())
-            {
+        let rows = v.rows;
+        rowwise_update(led, comp, rows, p, k, &mut u.data, |lo, hi, ub| {
+            for (uv, &vv) in ub.iter_mut().zip(v.data[lo * k..hi * k].iter()) {
                 *uv = (*uv - c * vv) * s;
             }
         });
@@ -66,8 +65,8 @@ pub fn dist_cheb_filter(
         let mut w = spmm_1p5d(dm, &u, false, cost, led, comp);
         let s1 = 2.0 * sigma1 / e;
         let s2 = sigma * sigma1;
-        charged_rowwise(led, comp, v.rows, p, |lo, hi| {
-            for ((wv, &uv), &pv) in w.data[lo * k..hi * k]
+        rowwise_update(led, comp, v.rows, p, k, &mut w.data, |lo, hi, wb| {
+            for ((wv, &uv), &pv) in wb
                 .iter_mut()
                 .zip(u.data[lo * k..hi * k].iter())
                 .zip(v_prev.data[lo * k..hi * k].iter())

@@ -30,8 +30,12 @@
 //!
 //! Every collective is charged through the alpha-beta
 //! [`CostModel`](crate::mpi_sim::CostModel); every rank's local compute
-//! is actually executed and billed at the slowest rank's share (see
-//! mpi_sim's ledger doc). See DESIGN.md for the per-figure index.
+//! is actually executed — concurrently, through the rank-parallel
+//! superstep executor (`mpi_sim::exec`; kernels here are produce-then-
+//! merge with a fixed ascending-rank merge order, so parallel and
+//! sequential execution are bit-identical) — and billed at the slowest
+//! rank's share (see mpi_sim's ledger doc). See DESIGN.md for the
+//! per-figure index.
 
 pub mod bchdav;
 pub mod filter;
@@ -51,23 +55,77 @@ pub use tsqr::tsqr;
 
 use crate::mpi_sim::Ledger;
 use crate::sparse::split_ranges;
+use crate::util::SendPtr;
 
-/// Run a row-parallel local computation as one lockstep superstep over
-/// `p` simulated ranks owning contiguous row ranges, charging the
-/// slowest rank's share of the measured loop time to `comp` (see
-/// `Ledger::superstep_weighted`). The body sees `[lo, hi)` row ranges in
-/// rank order, so results are byte-identical to the sequential loop.
-pub(crate) fn charged_rowwise(
+/// Contiguous row ranges of `0..n` over `p` ranks plus the row-count
+/// weights the slowest-rank-share billing uses.
+pub(crate) fn row_partition(n: usize, p: usize) -> (Vec<(usize, usize)>, Vec<f64>) {
+    let ranges = split_ranges(n, p.max(1));
+    let weights: Vec<f64> = ranges.iter().map(|&(lo, hi)| (hi - lo) as f64).collect();
+    (ranges, weights)
+}
+
+/// Row-partitioned *produce* superstep over `p` simulated ranks owning
+/// contiguous row ranges: each rank computes a partial from its `[lo,
+/// hi)` range (no shared `&mut` capture — ranks run concurrently on the
+/// executor), billed at the slowest rank's share. Partials come back in
+/// ascending rank order; the caller's sequential merge in that order is
+/// what keeps parallel and sequential rank execution bit-identical.
+pub(crate) fn rowwise_produce<T: Send>(
     led: &mut Ledger,
     comp: &'static str,
     n: usize,
     p: usize,
-    mut body: impl FnMut(usize, usize),
-) {
-    let ranges = split_ranges(n, p.max(1));
-    let weights: Vec<f64> = ranges.iter().map(|&(lo, hi)| (hi - lo) as f64).collect();
+    produce: impl Fn(usize, usize) -> T + Sync,
+) -> Vec<T> {
+    let (ranges, weights) = row_partition(n, p);
     led.superstep_weighted(comp, &weights, |r| {
         let (lo, hi) = ranges[r];
-        body(lo, hi);
+        produce(lo, hi)
+    })
+}
+
+/// Merge per-rank reduction partials into `acc` in ascending rank
+/// order — the one fixed float-addition order the parallel/sequential
+/// bit-identity claim depends on, shared by every reduce-style kernel
+/// (`dist_atb`, the DGKS column dots, the distributed residual norms).
+/// The merge adds model the reduction-tree work the corresponding
+/// allreduce charge covers, so callers do not bill them as compute.
+pub(crate) fn merge_partials(acc: &mut [f64], parts: &[Vec<f64>]) {
+    for part in parts {
+        for (d, &s) in acc.iter_mut().zip(part.iter()) {
+            *d += s;
+        }
+    }
+}
+
+/// Row-partitioned *in-place* superstep over a row-major buffer of
+/// `rows` rows with `stride` values per row: rank r updates exactly its
+/// own `[lo, hi)` row block, handed to the body as the mutable slice
+/// `data[lo*stride .. hi*stride]`. The row blocks are disjoint, so ranks
+/// run concurrently and the result equals the sequential loop exactly —
+/// no merge phase needed. Billed at the slowest rank's share.
+/// (Parameter order mirrors `rowwise_produce`: row count first, then
+/// rank count.)
+pub(crate) fn rowwise_update(
+    led: &mut Ledger,
+    comp: &'static str,
+    rows: usize,
+    p: usize,
+    stride: usize,
+    data: &mut [f64],
+    body: impl Fn(usize, usize, &mut [f64]) + Sync,
+) {
+    assert_eq!(data.len(), rows * stride, "buffer is not rows x stride");
+    let (ranges, weights) = row_partition(rows, p);
+    let ptr = SendPtr(data.as_mut_ptr());
+    led.superstep_weighted(comp, &weights, |r| {
+        let ptr = &ptr; // capture the Sync wrapper, not the raw field
+        let (lo, hi) = ranges[r];
+        // Safety: split_ranges yields disjoint [lo, hi) row ranges, so
+        // every rank writes a disjoint region of `data`.
+        let block =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * stride), (hi - lo) * stride) };
+        body(lo, hi, block);
     });
 }

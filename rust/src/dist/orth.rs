@@ -8,15 +8,19 @@
 //! versus TSQR's O(log p) — the non-scaling orthonormalization the paper
 //! benchmarks against in Fig. 9.
 
-use super::charged_rowwise;
+use super::{merge_partials, rowwise_produce, rowwise_update};
 use crate::linalg::Mat;
 use crate::mpi_sim::{CostModel, Ledger};
 
-/// C = A^T B over the 1D row layout: every rank reduces its row range,
-/// then one allreduce of the small ac x bc result. This is *the* Gram
-/// step of the layer — the Davidson backend's Rayleigh-Ritz projection,
-/// its CGS passes against the locked basis, and the DGKS baseline's
-/// block-CGS passes all charge through this one implementation.
+/// C = A^T B over the 1D row layout: every rank reduces its own row
+/// range into a local ac x bc partial (concurrently — no shared state),
+/// the partials merge sequentially in ascending rank order, then one
+/// allreduce of the small result is charged. This is *the* Gram step of
+/// the layer — the Davidson backend's Rayleigh-Ritz projection, its CGS
+/// passes against the locked basis, and the DGKS baseline's block-CGS
+/// passes all charge through this one implementation. (The tiny merge
+/// adds are the reduction-tree work the allreduce charge models, so
+/// they are not billed as compute.)
 pub fn dist_atb(
     a: &Mat,
     b: &Mat,
@@ -27,8 +31,8 @@ pub fn dist_atb(
 ) -> Mat {
     assert_eq!(a.rows, b.rows);
     let (ac, bc) = (a.cols, b.cols);
-    let mut c = Mat::zeros(ac, bc);
-    charged_rowwise(led, comp, a.rows, p, |lo, hi| {
+    let parts: Vec<Vec<f64>> = rowwise_produce(led, comp, a.rows, p, |lo, hi| {
+        let mut acc = vec![0.0f64; ac * bc];
         for i in lo..hi {
             let ar = a.row(i);
             let br = b.row(i);
@@ -36,12 +40,16 @@ pub fn dist_atb(
                 if av == 0.0 {
                     continue;
                 }
-                for (d, &bv) in c.row_mut(t).iter_mut().zip(br.iter()) {
+                let dst = &mut acc[t * bc..(t + 1) * bc];
+                for (d, &bv) in dst.iter_mut().zip(br.iter()) {
                     *d += av * bv;
                 }
             }
         }
+        acc
     });
+    let mut c = Mat::zeros(ac, bc);
+    merge_partials(&mut c.data, &parts);
     led.charge(comp, cost.allreduce(ac * bc, p));
     c
 }
@@ -64,6 +72,9 @@ pub fn dgks_orthonormalize(
     assert!(k_sub <= basis.cols, "k_sub {} > basis cols {}", k_sub, basis.cols);
     assert!(k_sub == 0 || basis.rows == n);
     let mut w = v.clone();
+    if kb == 0 {
+        return w;
+    }
 
     // block CGS against the locked basis — "twice is enough"; the
     // k_sub x kb Gram coefficients come from the shared per-rank-reduce
@@ -79,8 +90,8 @@ pub fn dgks_orthonormalize(
         };
         for _pass in 0..2 {
             let coef = dist_atb(basis_k.as_ref().unwrap_or(basis), &w, p, cost, led, comp);
-            charged_rowwise(led, comp, n, p, |lo, hi| {
-                for i in lo..hi {
+            rowwise_update(led, comp, n, p, kb, &mut w.data, |lo, _hi, wb| {
+                for (i, wr) in (lo..).zip(wb.chunks_exact_mut(kb)) {
                     // w.row(i) -= basis.row(i)[..k_sub] * coef
                     let mut corr = vec![0.0f64; kb];
                     {
@@ -94,7 +105,7 @@ pub fn dgks_orthonormalize(
                             }
                         }
                     }
-                    for (x, &y) in w.row_mut(i).iter_mut().zip(corr.iter()) {
+                    for (x, &y) in wr.iter_mut().zip(corr.iter()) {
                         *x -= y;
                     }
                 }
@@ -102,14 +113,15 @@ pub fn dgks_orthonormalize(
         }
     }
 
-    // column-by-column DGKS inside the block
+    // column-by-column DGKS inside the block: per-rank partial dots /
+    // norms merged in ascending rank order, disjoint row-block updates
     for j in 0..kb {
         for _pass in 0..2 {
             if j == 0 {
                 continue;
             }
-            let mut dots = vec![0.0f64; j];
-            charged_rowwise(led, comp, n, p, |lo, hi| {
+            let partial_dots: Vec<Vec<f64>> = rowwise_produce(led, comp, n, p, |lo, hi| {
+                let mut dots = vec![0.0f64; j];
                 for i in lo..hi {
                     let wr = w.row(i);
                     let wij = wr[j];
@@ -120,11 +132,13 @@ pub fn dgks_orthonormalize(
                         *d += wc * wij;
                     }
                 }
+                dots
             });
+            let mut dots = vec![0.0f64; j];
+            merge_partials(&mut dots, &partial_dots);
             led.charge(comp, cost.allreduce(j, p));
-            charged_rowwise(led, comp, n, p, |lo, hi| {
-                for i in lo..hi {
-                    let wr = w.row_mut(i);
+            rowwise_update(led, comp, n, p, kb, &mut w.data, |_lo, _hi, wb| {
+                for wr in wb.chunks_exact_mut(kb) {
                     let mut acc = 0.0;
                     for (&d, &wc) in dots.iter().zip(wr[..j].iter()) {
                         acc += d * wc;
@@ -133,20 +147,22 @@ pub fn dgks_orthonormalize(
                 }
             });
         }
-        let mut nrm2 = 0.0f64;
-        charged_rowwise(led, comp, n, p, |lo, hi| {
+        let partial_nrm2: Vec<f64> = rowwise_produce(led, comp, n, p, |lo, hi| {
+            let mut acc = 0.0f64;
             for i in lo..hi {
                 let x = w[(i, j)];
-                nrm2 += x * x;
+                acc += x * x;
             }
+            acc
         });
+        let nrm2: f64 = partial_nrm2.iter().sum();
         led.charge(comp, cost.allreduce(1, p));
         let nrm = nrm2.sqrt();
         if nrm > 1e-300 {
             let inv = 1.0 / nrm;
-            charged_rowwise(led, comp, n, p, |lo, hi| {
-                for i in lo..hi {
-                    w[(i, j)] *= inv;
+            rowwise_update(led, comp, n, p, kb, &mut w.data, |_lo, _hi, wb| {
+                for wr in wb.chunks_exact_mut(kb) {
+                    wr[j] *= inv;
                 }
             });
         }

@@ -21,14 +21,19 @@
 
 use super::matrix::DistMatrix;
 use crate::linalg::Mat;
+use crate::mpi_sim::exec::slowest_share;
 use crate::mpi_sim::{CostModel, Ledger};
 use crate::sparse::{split_ranges, Csr};
+use crate::util::SendPtr;
 
 /// A-Stationary 1.5D SpMM: Y = A X (or A^T X with `transposed`, using
-/// the transposed-ownership exchange pattern). The result is assembled
-/// globally and is exact: rank contributions add in ascending column-
-/// block order, so Y matches the sequential `Csr::spmm` to machine
-/// precision (bit-for-bit at q = 1).
+/// the transposed-ownership exchange pattern). Each rank produces its
+/// A[i, j] * X[range_j] partial concurrently; the partials are then
+/// merged sequentially in ascending rank order (for each output row
+/// block, ascending column-block order), so the result is deterministic
+/// and exact: Y matches the sequential `Csr::spmm` to machine precision
+/// (bit-for-bit at q = 1), in parallel and sequential rank execution
+/// alike.
 pub fn spmm_1p5d(
     dm: &DistMatrix,
     x: &Mat,
@@ -56,25 +61,36 @@ pub fn spmm_1p5d(
             b.nnz() as f64
         })
         .collect();
-    let mut y = Mat::zeros(n, k);
-    led.superstep_weighted(comp, &weights, |r| {
+    let parts: Vec<Mat> = led.superstep_weighted(comp, &weights, |r| {
         let (i, j) = g.coords_of(r);
         let (clo, chi) = g.col_range(j);
-        let (rlo, _) = g.row_range(i);
         let xj = x.rows_block(clo, chi);
         // A^T[i, j] = (A[j, i])^T — the symmetric layout swap
-        let part = if transposed {
+        if transposed {
             dm.block(j, i).transpose().spmm(&xj)
         } else {
             dm.block(i, j).spmm(&xj)
-        };
+        }
+    });
+
+    // Sequential deterministic merge: ascending rank order, i.e. for
+    // each output row block the column-block contributions add in
+    // ascending j — the same floating-point order the sequential loop
+    // used. Billed at the slowest rank's share, as the in-loop
+    // accumulation was before the ranks ran concurrently.
+    let t0 = std::time::Instant::now();
+    let mut y = Mat::zeros(n, k);
+    for (r, part) in parts.iter().enumerate() {
+        let (i, _) = g.coords_of(r);
+        let (rlo, _) = g.row_range(i);
         for t in 0..part.rows {
             let dst = y.row_mut(rlo + t);
             for (d, &s) in dst.iter_mut().zip(part.row(t).iter()) {
                 *d += s;
             }
         }
-    });
+    }
+    led.add_compute(comp, t0.elapsed().as_secs_f64() * slowest_share(&weights));
     y
 }
 
@@ -114,11 +130,23 @@ pub fn spmm_1d(
         led.charge(comp, cost.allgather(max_rows * k, p));
     }
 
+    // ranges must tile 0..n in order: each rank writes its own disjoint
+    // row block of y directly (no merge needed — every output row is
+    // computed by exactly one rank, so concurrent execution is exact)
+    for w in ranges.windows(2) {
+        assert!(w[0].1 <= w[1].0, "1D ranges must be disjoint and ascending");
+    }
     let weights: Vec<f64> = blocks.iter().map(|b| b.nnz() as f64).collect();
     let mut y = Mat::zeros(n, k);
+    let yptr = SendPtr(y.data.as_mut_ptr());
     led.superstep_weighted(comp, &weights, |r| {
+        let yptr = &yptr; // capture the Sync wrapper, not the raw field
         let part = blocks[r].spmm(x);
-        y.set_rows_block(ranges[r].0, &part);
+        let (lo, hi) = ranges[r];
+        assert_eq!(part.rows, hi - lo);
+        // Safety: row ranges are disjoint (asserted above).
+        let dst = unsafe { std::slice::from_raw_parts_mut(yptr.0.add(lo * k), (hi - lo) * k) };
+        dst.copy_from_slice(&part.data);
     });
     y
 }

@@ -36,7 +36,8 @@ pub fn tsqr(
     let p_eff = if k == 0 { 1 } else { p.min((n / k).max(1)) };
     let ranges = split_ranges(n, p_eff);
 
-    // level 0: local QR per rank
+    // level 0: local QR per rank — pure produce (each leaf reads only
+    // its own row block), so the executor runs the leaves concurrently
     let weights: Vec<f64> = ranges.iter().map(|&(lo, hi)| (hi - lo) as f64).collect();
     let locals: Vec<(Mat, Mat)> = led.superstep_weighted(comp, &weights, |r| {
         let (lo, hi) = ranges[r];

@@ -8,14 +8,15 @@
 //! registers; row blocks go to the scoped thread pool.
 
 use super::Mat;
-use crate::util::parallel_for_chunks;
+use crate::util::{parallel_for_chunks, SendPtr};
 
 /// C = A^T * B where A is (n x a), B is (n x b) — the Rayleigh-quotient /
 /// Gram update. Accumulates in per-thread buffers then reduces.
 pub fn atb(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows);
     let (n, ac, bc) = (a.rows, a.cols, b.cols);
-    let threads = crate::util::hardware_threads().min(8).max(1);
+    // thread_budget: single-threaded inside a simulated-rank superstep
+    let threads = crate::util::thread_budget().min(8).max(1);
     let nblocks = threads;
     let chunk = n.div_ceil(nblocks.max(1)).max(1);
     let mut partials = vec![vec![0.0f64; ac * bc]; nblocks];
@@ -64,7 +65,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
     let threads = if m * k * n > 1 << 18 {
-        crate::util::hardware_threads().min(8)
+        crate::util::thread_budget().min(8)
     } else {
         1
     };
@@ -89,9 +90,6 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     });
     c
 }
-
-struct SendPtr<T>(*mut T);
-unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// C = A * B with A tall (n x a) and B small (a x b): the subspace
 /// rotation V <- V * Y. Same kernel as matmul but kept as a named entry

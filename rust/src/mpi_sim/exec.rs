@@ -1,0 +1,189 @@
+//! Rank-parallel superstep executor.
+//!
+//! A lockstep SPMD superstep runs every simulated rank's local work and
+//! bills the ledger from the per-rank measured times. Until this module
+//! existed the ranks ran *sequentially*, so a p = 121 sweep paid 121x
+//! serial wall-clock; here the rank bodies execute concurrently on the
+//! scoped thread pool — which is what a real cluster does — while the
+//! billing stays deterministic because it is computed from the per-rank
+//! measurements, not from the superstep's own wall time:
+//!
+//! * rank bodies are `Fn(rank) -> T + Sync` with no shared `&mut`
+//!   capture; each rank is timed individually inside its thread;
+//! * outputs come back in ascending rank order (the *merge* phase every
+//!   caller runs afterwards is sequential and deterministic, so parallel
+//!   and sequential execution produce bit-identical results);
+//! * while rank bodies execute, the native kernels' thread budget drops
+//!   to 1 (`util::thread_budget`) in *both* modes — a simulated rank
+//!   models one single-core MPI process, so per-rank times mean the same
+//!   thing parallel or sequential and never oversubscribe the machine.
+//!
+//! `CHEBDAV_SEQ_RANKS=1` (or config `[run] seq_ranks`, or
+//! [`set_seq_ranks`] programmatically) restores the sequential loop for
+//! debugging and timing-sensitivity checks; everything observable except
+//! measured compute — solver output, RNG stream, modeled comm — is
+//! identical across modes (pinned by `tests/rank_parallel.rs`).
+
+use crate::util::parallel_map;
+use crate::util::threadpool::{configured_threads, enter_rank_scope, in_rank_scope};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Execution-mode override: 0 = follow the environment, 1 = force
+/// sequential, 2 = force parallel.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn env_seq_ranks() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("CHEBDAV_SEQ_RANKS")
+            .map(|v| {
+                let v = v.to_ascii_lowercase();
+                !(v.is_empty() || v == "0" || v == "false" || v == "no" || v == "off")
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// Force sequential (`Some(true)`) or parallel (`Some(false)`) rank
+/// execution, overriding `CHEBDAV_SEQ_RANKS`; `None` restores
+/// environment control. Process-global — meant for the config
+/// `[run] seq_ranks` escape hatch and for tests that compare modes.
+pub fn set_seq_ranks(mode: Option<bool>) {
+    MODE.store(
+        match mode {
+            None => 0,
+            Some(true) => 1,
+            Some(false) => 2,
+        },
+        Ordering::SeqCst,
+    );
+}
+
+/// True when supersteps run their ranks sequentially (the pre-executor
+/// behaviour): forced via [`set_seq_ranks`] or `CHEBDAV_SEQ_RANKS=1`.
+pub fn seq_ranks() -> bool {
+    match MODE.load(Ordering::SeqCst) {
+        1 => true,
+        2 => false,
+        _ => env_seq_ranks(),
+    }
+}
+
+/// One executed superstep: per-rank outputs and measured seconds, both
+/// in ascending rank order.
+pub struct RankRun<T> {
+    pub outputs: Vec<T>,
+    pub seconds: Vec<f64>,
+}
+
+impl<T> RankRun<T> {
+    /// Max-over-ranks measured time — what a lockstep step costs.
+    pub fn max_seconds(&self) -> f64 {
+        self.seconds.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Sum of per-rank measured times — the serial-equivalent work, fed
+    /// into the weighted slowest-rank-share billing.
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+}
+
+/// The slowest rank's share of the total under a known per-rank work
+/// distribution: `max(w) / sum(w)` (uniform share if all weights are 0).
+pub fn slowest_share(weights: &[f64]) -> f64 {
+    let sum: f64 = weights.iter().sum();
+    let max = weights.iter().copied().fold(0.0, f64::max);
+    if sum > 0.0 {
+        max / sum
+    } else {
+        1.0 / weights.len().max(1) as f64
+    }
+}
+
+/// Execute one superstep's rank-local work: `body(r)` for every rank in
+/// `0..ranks`, each timed individually, concurrently on the scoped pool
+/// unless sequential mode is active (or only one worker / rank exists).
+/// While bodies run, nested native kernels see a thread budget of 1.
+pub fn run_ranks<T: Send>(ranks: usize, body: impl Fn(usize) -> T + Sync) -> RankRun<T> {
+    run_ranks_mode(ranks, body, seq_ranks())
+}
+
+/// `run_ranks` with the execution mode passed explicitly — the unit
+/// tests use this so they never have to flip the process-global mode
+/// (which would race concurrently running tests in the same binary).
+fn run_ranks_mode<T: Send>(
+    ranks: usize,
+    body: impl Fn(usize) -> T + Sync,
+    seq: bool,
+) -> RankRun<T> {
+    // A nested superstep (run_ranks called from inside a rank body)
+    // runs inline on the already-budgeted thread.
+    let outer = if in_rank_scope() { 1 } else { configured_threads() };
+    let timed = |r: usize| {
+        // The rank scope is entered on the thread that executes the
+        // body — the executor's worker thread when parallel, this
+        // thread when sequential — so the budget rule confines exactly
+        // the kernels the body calls and nothing else in the process.
+        let _scope = enter_rank_scope();
+        let t0 = Instant::now();
+        let out = body(r);
+        (out, t0.elapsed().as_secs_f64())
+    };
+    let pairs: Vec<(T, f64)> = if ranks <= 1 || outer <= 1 || seq {
+        (0..ranks).map(timed).collect()
+    } else {
+        parallel_map(ranks, outer.min(ranks), timed)
+    };
+    let mut outputs = Vec::with_capacity(ranks);
+    let mut seconds = Vec::with_capacity(ranks);
+    for (out, dt) in pairs {
+        outputs.push(out);
+        seconds.push(dt);
+    }
+    RankRun { outputs, seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests pass the mode explicitly through run_ranks_mode: the
+    // process-global mode belongs to tests/rank_parallel.rs (its own
+    // test binary), and flipping it from the lib binary would race
+    // concurrently running timing-sensitive tests.
+
+    #[test]
+    fn outputs_in_rank_order_both_modes() {
+        for seq in [true, false] {
+            let run = run_ranks_mode(9, |r| r * r, seq);
+            assert_eq!(run.outputs, (0..9).map(|r| r * r).collect::<Vec<_>>());
+            assert_eq!(run.seconds.len(), 9);
+            assert!(run.max_seconds() <= run.total_seconds() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn kernels_inside_a_superstep_are_single_threaded() {
+        for seq in [true, false] {
+            let budgets = run_ranks_mode(4, |_| crate::util::thread_budget(), seq);
+            assert_eq!(budgets.outputs, vec![1, 1, 1, 1], "seq={seq}");
+        }
+    }
+
+    #[test]
+    fn slowest_share_matches_formula() {
+        assert!((slowest_share(&[9.0, 1.0]) - 0.9).abs() < 1e-15);
+        assert!((slowest_share(&[1.0; 4]) - 0.25).abs() < 1e-15);
+        assert!((slowest_share(&[0.0, 0.0]) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_ranks_is_empty() {
+        let run = run_ranks(0, |r| r);
+        assert!(run.outputs.is_empty() && run.seconds.is_empty());
+        assert_eq!(run.max_seconds(), 0.0);
+    }
+}

@@ -2,8 +2,11 @@
 //!
 //! Two clocks:
 //!   * **compute** — real, measured: each superstep executes every rank's
-//!     local work sequentially and records the *maximum* per-rank wall
-//!     time (that is what a lockstep SPMD step costs in the field);
+//!     local work (concurrently, through the rank-parallel executor in
+//!     `exec`) and bills from the per-rank measured times — the
+//!     *maximum* over ranks (what a lockstep SPMD step costs in the
+//!     field), or the slowest rank's share of the summed times when the
+//!     per-rank work distribution is known (`superstep_weighted`);
 //!   * **comm** — modeled: the alpha-beta charges from cost.rs.
 //!
 //! Components use the paper's Fig. 7/8 vocabulary: "filter", "spmm",
@@ -11,8 +14,8 @@
 //! read the breakdown straight out of the ledger.
 
 use super::cost::Charge;
+use super::exec;
 use std::collections::BTreeMap;
-use std::time::Instant;
 
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
@@ -32,23 +35,21 @@ impl Ledger {
         Ledger::default()
     }
 
-    /// Execute one lockstep superstep: run `body(rank)` for every rank,
-    /// time each, and charge the max to `component`. Returns all outputs.
-    pub fn superstep<T>(
+    /// Execute one lockstep superstep through the rank-parallel executor:
+    /// run `body(rank)` for every rank, time each, and charge the
+    /// max-over-ranks measured time to `component`. The body must be
+    /// free of shared `&mut` capture (ranks may run concurrently);
+    /// outputs come back in ascending rank order for the caller's
+    /// deterministic merge.
+    pub fn superstep<T: Send>(
         &mut self,
         component: &'static str,
         ranks: usize,
-        mut body: impl FnMut(usize) -> T,
+        body: impl Fn(usize) -> T + Sync,
     ) -> Vec<T> {
-        let mut out = Vec::with_capacity(ranks);
-        let mut max_dt = 0.0f64;
-        for r in 0..ranks {
-            let t0 = Instant::now();
-            out.push(body(r));
-            max_dt = max_dt.max(t0.elapsed().as_secs_f64());
-        }
-        *self.compute.entry(component).or_insert(0.0) += max_dt;
-        out
+        let run = exec::run_ranks(ranks, body);
+        *self.compute.entry(component).or_insert(0.0) += run.max_seconds();
+        run.outputs
     }
 
     /// Directly add measured compute seconds (when the caller did its own
@@ -57,26 +58,22 @@ impl Ledger {
         *self.compute.entry(component).or_insert(0.0) += seconds;
     }
 
-    /// Work-weighted superstep: run all ranks' local work, time the
-    /// *whole* loop once, and charge `T_total * max(w) / sum(w)` — the
-    /// deterministic, noise-robust estimate of the slowest rank under
+    /// Work-weighted superstep: run all ranks' local work through the
+    /// executor and charge `sum(per-rank measured) * max(w) / sum(w)` —
+    /// the deterministic, noise-robust estimate of the slowest rank under
     /// the known per-rank work distribution (e.g. block nnz). This is
     /// how load imbalance (paper Table 2) enters the reported times
     /// without per-rank timer jitter swamping microsecond-scale blocks.
-    pub fn superstep_weighted<T>(
+    pub fn superstep_weighted<T: Send>(
         &mut self,
         component: &'static str,
         weights: &[f64],
-        mut body: impl FnMut(usize) -> T,
+        body: impl Fn(usize) -> T + Sync,
     ) -> Vec<T> {
-        let t0 = Instant::now();
-        let out: Vec<T> = (0..weights.len()).map(&mut body).collect();
-        let total_t = t0.elapsed().as_secs_f64();
-        let sum: f64 = weights.iter().sum();
-        let max = weights.iter().copied().fold(0.0, f64::max);
-        let frac = if sum > 0.0 { max / sum } else { 1.0 / weights.len().max(1) as f64 };
-        *self.compute.entry(component).or_insert(0.0) += total_t * frac;
-        out
+        let run = exec::run_ranks(weights.len(), body);
+        let charge = run.total_seconds() * exec::slowest_share(weights);
+        *self.compute.entry(component).or_insert(0.0) += charge;
+        run.outputs
     }
 
     /// Charge a modeled collective to a component.

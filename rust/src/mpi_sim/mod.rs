@@ -3,9 +3,17 @@
 //! The paper ran on an MPI cluster with up to ~1000 cores; this module
 //! reproduces the *behaviour* of that environment on one machine:
 //!
-//! * every rank's local computation is actually executed (sequentially,
-//!   in lockstep supersteps) and its wall time measured — the maximum
-//!   over ranks is what a real lockstep step would cost;
+//! * every rank's local computation is actually executed — concurrently
+//!   on the scoped thread pool (`exec`, the rank-parallel superstep
+//!   executor; `CHEBDAV_SEQ_RANKS=1` restores the sequential loop) —
+//!   and its wall time measured per rank; the billing *formulas* (max
+//!   over ranks, or the slowest rank's share under a known work
+//!   distribution) and everything else observable (results, RNG stream,
+//!   modeled comm) are identical in both modes, while the measured
+//!   per-rank times themselves can differ: concurrent ranks share
+//!   caches and memory bandwidth, so parallel-mode measurements include
+//!   that contention — use the sequential mode for timing-sensitivity
+//!   checks;
 //! * every collective moves real data between rank states but is charged
 //!   through the alpha-beta tree cost model of cost.rs — the same model
 //!   the paper's §3 complexity analysis uses (Table 1, eqs. 7-18).
@@ -15,9 +23,11 @@
 //! figures (Figs. 5-9) read these ledgers.
 
 pub mod cost;
+pub mod exec;
 pub mod grid;
 pub mod ledger;
 
 pub use cost::{Charge, CostModel};
+pub use exec::{seq_ranks, set_seq_ranks};
 pub use grid::Grid;
 pub use ledger::Ledger;

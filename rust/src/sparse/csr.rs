@@ -5,7 +5,7 @@
 //! format; ELL (ell.rs) is the PJRT-artifact format.
 
 use crate::linalg::Mat;
-use crate::util::parallel_for_chunks;
+use crate::util::{parallel_for_chunks, SendPtr};
 
 #[derive(Clone, Debug)]
 pub struct Csr {
@@ -113,8 +113,11 @@ impl Csr {
         assert_eq!(x.rows, self.ncols);
         let k = x.cols;
         let mut y = Mat::zeros(self.nrows, k);
+        // thread_budget, not hardware_threads: inside a simulated-rank
+        // superstep this kernel runs single-threaded (the executor owns
+        // the cross-rank parallelism — see util::threadpool)
         let threads = if self.nnz() * k > 1 << 16 {
-            crate::util::hardware_threads().min(8)
+            crate::util::thread_budget().min(8)
         } else {
             1
         };
@@ -217,9 +220,6 @@ impl Csr {
         err
     }
 }
-
-struct SendPtr<T>(*mut T);
-unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {

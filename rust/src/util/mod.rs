@@ -7,5 +7,9 @@ pub mod timer;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use threadpool::{hardware_threads, parallel_for_chunks, parallel_map};
+pub use threadpool::{
+    configured_threads, hardware_threads, parallel_for_chunks, parallel_map, set_threads,
+    thread_budget,
+};
+pub(crate) use threadpool::SendPtr;
 pub use timer::{bench, time_it, BenchStat, ComponentTimers, Instrument};

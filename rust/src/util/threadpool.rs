@@ -1,16 +1,92 @@
 //! Tiny scoped parallel-for substrate (no rayon in the offline crate set).
 //!
 //! `parallel_for_chunks` splits an index range into contiguous chunks and
-//! runs them on `std::thread::scope` threads. Used by the native SpMM /
-//! GEMM hot paths; the simulated *distributed* runtime does NOT use this —
-//! rank-local work there is executed sequentially per rank and timed, by
-//! design (see mpi_sim).
+//! runs them on `std::thread::scope` threads. Two layers share it:
+//!
+//! * the native SpMM / GEMM hot paths chunk their row loops over it;
+//! * the simulated distributed runtime executes rank-local superstep
+//!   bodies concurrently through it (`mpi_sim::exec`).
+//!
+//! To keep those two layers from oversubscribing each other (outer ranks
+//! x inner row chunks), every data-parallel kernel sizes itself with
+//! [`thread_budget`] instead of [`hardware_threads`]: inside a superstep
+//! the budget is 1 — a simulated rank models one single-core MPI process,
+//! and the executor owns all cross-rank parallelism — while outside it is
+//! the configured worker count ([`set_threads`], the CLI `--threads` /
+//! config `[run] threads` knob; default [`hardware_threads`]). See
+//! DESIGN.md §Perf.
 
-/// Number of worker threads to use for data-parallel kernels.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of hardware threads available to this process.
 pub fn hardware_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Configured worker-thread count; 0 means "auto" (hardware_threads).
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Depth of simulated-rank scopes active on *this* thread (see
+    /// [`enter_rank_scope`]). Thread-local on purpose: the executor's
+    /// worker threads flag themselves while running a rank body, so the
+    /// budget rule confines exactly the kernels those bodies call —
+    /// unrelated threads (other tests in the same process, embedding
+    /// applications) keep their full budget.
+    static RANK_SCOPE_DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Set the worker-thread count for all data-parallel kernels and the
+/// rank-parallel superstep executor (the CLI `--threads` / config
+/// `[run] threads` knob). `0` restores the default (hardware_threads).
+pub fn set_threads(n: usize) {
+    CONFIGURED_THREADS.store(n, Ordering::SeqCst);
+}
+
+/// The configured worker-thread count (default: hardware_threads).
+pub fn configured_threads() -> usize {
+    match CONFIGURED_THREADS.load(Ordering::SeqCst) {
+        0 => hardware_threads(),
+        n => n,
+    }
+}
+
+/// How many threads a data-parallel kernel may use *right now*: 1 while
+/// the current thread is executing a simulated-rank body (a rank is one
+/// single-core process; cross-rank parallelism belongs to
+/// `mpi_sim::exec`), the configured count otherwise.
+pub fn thread_budget() -> usize {
+    if in_rank_scope() {
+        1
+    } else {
+        configured_threads()
+    }
+}
+
+/// True while the *current thread* is executing a superstep rank body.
+pub fn in_rank_scope() -> bool {
+    RANK_SCOPE_DEPTH.with(|d| d.get() > 0)
+}
+
+/// RAII marker for "this thread is executing a simulated rank body":
+/// native kernels called from it drop to a single thread until the
+/// guard is released. `mpi_sim::exec::run_ranks` holds one around every
+/// rank body — on the executor's worker threads when parallel, on the
+/// calling thread when sequential — so billed per-rank times mean the
+/// same thing in either mode.
+pub(crate) struct RankScopeGuard;
+
+impl Drop for RankScopeGuard {
+    fn drop(&mut self) {
+        RANK_SCOPE_DEPTH.with(|d| d.set(d.get() - 1));
+    }
+}
+
+pub(crate) fn enter_rank_scope() -> RankScopeGuard {
+    RANK_SCOPE_DEPTH.with(|d| d.set(d.get() + 1));
+    RankScopeGuard
 }
 
 /// Run `body(chunk_start, chunk_end)` over disjoint chunks of `0..n` on up
@@ -68,10 +144,12 @@ where
 }
 
 /// Shared raw pointer for handing disjoint output slots to scoped
-/// threads. Soundness: moving/sharing the wrapper across threads hands
-/// out the ability to write `T` values there, so both impls require
-/// `T: Send` — a `SendPtr<Rc<_>>` must not cross threads.
-struct SendPtr<T>(*mut T);
+/// threads — the one copy every kernel (CSR SpMM, GEMM, the rowwise
+/// superstep helpers) uses. Soundness: moving/sharing the wrapper across
+/// threads hands out the ability to write `T` values there, so both
+/// impls require `T: Send` — a `SendPtr<Rc<_>>` must not cross threads.
+/// Callers are responsible for writing disjoint regions only.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
@@ -105,5 +183,32 @@ mod tests {
         parallel_for_chunks(0, 4, |lo, hi| assert_eq!(lo, hi));
         let got = parallel_map(1, 8, |i| i + 1);
         assert_eq!(got, vec![1]);
+    }
+
+    #[test]
+    fn rank_scope_drops_budget_to_one() {
+        // the scope is thread-local, so this test's guards cannot be
+        // perturbed by (or perturb) supersteps in concurrent tests
+        assert!(!in_rank_scope());
+        let g = enter_rank_scope();
+        assert!(in_rank_scope());
+        assert_eq!(thread_budget(), 1);
+        let g2 = enter_rank_scope(); // nesting is counted
+        assert_eq!(thread_budget(), 1);
+        drop(g2);
+        assert!(in_rank_scope());
+        assert_eq!(thread_budget(), 1);
+        drop(g);
+        assert!(!in_rank_scope());
+        assert!(thread_budget() >= 1);
+    }
+
+    #[test]
+    fn rank_scope_is_thread_local() {
+        let _g = enter_rank_scope();
+        assert!(in_rank_scope());
+        std::thread::scope(|s| {
+            s.spawn(|| assert!(!in_rank_scope(), "scope must not leak across threads"));
+        });
     }
 }
