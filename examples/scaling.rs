@@ -1,11 +1,15 @@
 //! Distributed scaling demo (a compact Fig. 7): the simulated-grid
 //! Block Chebyshev-Davidson sweep with the per-component breakdown and
-//! the ~sqrt(p) speedup line for reference.
+//! the ~sqrt(p) speedup line for reference — then the same sweep run
+//! *end-to-end* through Algorithm 1 (a compact Fig. 10: eigensolver +
+//! row-normalized embedding + distributed K-means on the rank grid).
 //!
 //!     cargo run --release --example scaling [-- n]
 
 use dist_chebdav::config::ExperimentConfig;
-use dist_chebdav::coordinator::{apply_run_settings, dist_scaling_sweep, fmt_f, fmt_secs, Table};
+use dist_chebdav::coordinator::{
+    apply_run_settings, cluster_scaling, dist_scaling_sweep, fmt_f, fmt_secs, Table,
+};
 use dist_chebdav::graph::table2_matrix;
 
 fn main() {
@@ -66,4 +70,31 @@ fn main() {
             fmt_secs(*comm)
         );
     }
+
+    // End-to-end Algorithm 1 at a few grid sizes (compact Fig. 10):
+    // the clustering tail (embed + kmeans) is charged too, and must
+    // stay a small slice of the total at every p.
+    let e2e_cfg = ExperimentConfig {
+        ps: vec![1, 16, 121, 1024],
+        ..cfg
+    };
+    let e2e = cluster_scaling(&mat, &e2e_cfg);
+    let base = e2e[0].total;
+    let mut table = Table::new(
+        "end-to-end Algorithm 1 scaling (compact Fig. 10)",
+        &["p", "total", "eig", "embed", "kmeans", "speedup", "ARI"],
+    );
+    for r in &e2e {
+        table.row(&[
+            r.p.to_string(),
+            fmt_secs(r.total),
+            fmt_secs(r.eig),
+            fmt_secs(r.embed),
+            fmt_secs(r.kmeans),
+            fmt_f(base / r.total, 2),
+            r.ari.map(|a| fmt_f(a, 4)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!();
+    print!("{}", table.render());
 }

@@ -1,0 +1,59 @@
+//! Fig. 10 (repo extension — no direct paper figure) — *end-to-end*
+//! Algorithm 1 scaling: the Fig. 7 sweep continued past the eigensolver
+//! through the distributed clustering tail, with the per-p time split
+//! eig (the five Davidson components) vs embed (row normalization of
+//! the Ritz panel) vs kmeans (distributed Lloyd + k-means++ seeding).
+//!
+//! Shape to reproduce: the paper's end-to-end claim — steps 4-5 ride
+//! the 1D row layout (embed is comm-free, K-means pays one k*(d+1)-word
+//! allreduce per Lloyd iteration), so the clustering tail stays a small
+//! slice of the total at every p and the ~sqrt(p) whole-pipeline
+//! speedup of Fig. 7 survives the extra stages.
+
+mod common;
+
+use dist_chebdav::config::ExperimentConfig;
+use dist_chebdav::coordinator::{cluster_scaling, fmt_f, fmt_secs, Table};
+use dist_chebdav::graph::table2_matrix;
+
+fn main() {
+    common::apply_run_defaults();
+    let n = common::bench_n(8_192);
+    common::banner(
+        "Fig10",
+        "end-to-end Algorithm 1: clustering tail stays small, sqrt(p) speedup survives steps 4-5",
+    );
+    let cases = [("LBOLBSV", 16usize, 16usize), ("HBOHBSV", 4, 4)];
+    let ps = vec![1usize, 4, 16, 64, 121, 256, 576, 1024];
+    let mut table = Table::new(
+        &format!("Fig10: end-to-end spectral clustering scaling, n~{n}, m=15, tol=1e-3"),
+        &["matrix", "p", "total", "eig", "embed", "kmeans", "speedup", "ARI"],
+    );
+    for (name, k, k_b) in cases {
+        let mat = table2_matrix(name, n, 31);
+        let cfg = ExperimentConfig {
+            k,
+            k_b,
+            m: 15,
+            tol: 1e-3,
+            ps: ps.clone(),
+            ..Default::default()
+        };
+        let rows = cluster_scaling(&mat, &cfg);
+        let base = rows[0].total;
+        for r in &rows {
+            table.row(&[
+                mat.name.clone(),
+                r.p.to_string(),
+                fmt_secs(r.total),
+                fmt_secs(r.eig),
+                fmt_secs(r.embed),
+                fmt_secs(r.kmeans),
+                fmt_f(base / r.total, 2),
+                r.ari.map(|a| fmt_f(a, 4)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    common::save("fig10", &table);
+}

@@ -35,13 +35,75 @@ pub struct KmeansResult {
 }
 
 /// Squared distance between row `i` of `x` and row `c` of `cent`.
+/// Shared with the distributed twin (`dist::cluster`) so both sides
+/// compute the exact same arithmetic.
 #[inline]
-fn dist2(x: &Mat, i: usize, cent: &Mat, c: usize) -> f64 {
+pub(crate) fn dist2(x: &Mat, i: usize, cent: &Mat, c: usize) -> f64 {
     x.row(i)
         .iter()
         .zip(cent.row(c).iter())
         .map(|(a, b)| (a - b) * (a - b))
         .sum()
+}
+
+/// Nearest centroid of row `i`: (index, squared distance). Ties break to
+/// the lowest index (strict `<`). This is the one assignment rule — the
+/// sequential Lloyd loop and the distributed assign superstep both call
+/// it, which is what makes the p=1 bit-for-bit equivalence claim hold.
+#[inline]
+pub(crate) fn nearest(x: &Mat, i: usize, cent: &Mat) -> (u32, f64) {
+    let mut best = 0u32;
+    let mut bd = f64::INFINITY;
+    for c in 0..cent.rows {
+        let dd = dist2(x, i, cent, c);
+        if dd < bd {
+            bd = dd;
+            best = c as u32;
+        }
+    }
+    (best, bd)
+}
+
+/// k-means++ D^2-mass sampling: given the current d2 vector and its
+/// (possibly reduction-order-dependent) total mass, draw the next
+/// centroid index — the uniform fallback when the mass is zero, else the
+/// cumulative scan. One draw either way; shared by the sequential and
+/// distributed seeders so the replicated RNG streams stay in lockstep.
+pub(crate) fn sample_d2_index(d2: &[f64], total: f64, rng: &mut Rng) -> usize {
+    let n = d2.len();
+    if total <= 0.0 {
+        return rng.below(n);
+    }
+    let target = rng.f64() * total;
+    let mut acc = 0.0;
+    let mut pick = n - 1;
+    for (i, &w) in d2.iter().enumerate() {
+        acc += w;
+        if acc >= target {
+            pick = i;
+            break;
+        }
+    }
+    pick
+}
+
+/// Divide accumulated centroid sums by their counts, reseeding empty
+/// clusters at a random row of `x` — the one post-accumulation update
+/// rule, shared by the sequential Lloyd loop and the distributed
+/// replicated update (same draw order, same arithmetic).
+pub(crate) fn finalize_centroids(x: &Mat, sums: &mut Mat, counts: &[f64], rng: &mut Rng) {
+    let n = x.rows;
+    for c in 0..sums.rows {
+        let mut cnt = counts[c];
+        if cnt == 0.0 {
+            let pick = rng.below(n);
+            sums.row_mut(c).copy_from_slice(x.row(pick));
+            cnt = 1.0;
+        }
+        for t in 0..sums.cols {
+            sums[(c, t)] /= cnt;
+        }
+    }
 }
 
 /// k-means++ seeding.
@@ -52,26 +114,14 @@ fn seed_centroids(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
     cent.row_mut(0).copy_from_slice(x.row(first));
     let mut d2: Vec<f64> = (0..n).map(|i| dist2(x, i, &cent, 0)).collect();
     for c in 1..k {
-        // sample proportional to current d2
         let total: f64 = d2.iter().sum();
-        let pick = if total <= 0.0 {
-            rng.below(n)
-        } else {
-            let target = rng.f64() * total;
-            let mut acc = 0.0;
-            let mut pick = n - 1;
-            for (i, &w) in d2.iter().enumerate() {
-                acc += w;
-                if acc >= target {
-                    pick = i;
-                    break;
-                }
-            }
-            pick
-        };
+        let pick = sample_d2_index(&d2, total, rng);
         cent.row_mut(c).copy_from_slice(x.row(pick));
-        for i in 0..n {
-            d2[i] = d2[i].min(dist2(x, i, &cent, c));
+        // d2 is dead after the last pick — skip the final update
+        if c + 1 < k {
+            for i in 0..n {
+                d2[i] = d2[i].min(dist2(x, i, &cent, c));
+            }
         }
     }
     cent
@@ -87,15 +137,7 @@ fn lloyd(x: &Mat, mut cent: Mat, max_iters: usize, rng: &mut Rng) -> KmeansResul
         iterations += 1;
         let mut changed = false;
         for i in 0..n {
-            let mut best = 0u32;
-            let mut bd = f64::INFINITY;
-            for c in 0..k {
-                let dd = dist2(x, i, &cent, c);
-                if dd < bd {
-                    bd = dd;
-                    best = c as u32;
-                }
-            }
+            let (best, _) = nearest(x, i, &cent);
             if assign[i] != best {
                 assign[i] = best;
                 changed = true;
@@ -104,30 +146,33 @@ fn lloyd(x: &Mat, mut cent: Mat, max_iters: usize, rng: &mut Rng) -> KmeansResul
         if !changed && iterations > 1 {
             break;
         }
-        // update step
+        // update step (f64 counts: exact integers, and the same type the
+        // distributed twin's allreduced partials carry)
         let mut sums = Mat::zeros(k, d);
-        let mut counts = vec![0usize; k];
+        let mut counts = vec![0.0f64; k];
         for i in 0..n {
             let c = assign[i] as usize;
-            counts[c] += 1;
+            counts[c] += 1.0;
             for t in 0..d {
                 sums[(c, t)] += x[(i, t)];
             }
         }
-        for c in 0..k {
-            if counts[c] == 0 {
-                // empty cluster: reseed at a random point
-                let pick = rng.below(n);
-                sums.row_mut(c).copy_from_slice(x.row(pick));
-                counts[c] = 1;
-            }
-            for t in 0..d {
-                sums[(c, t)] /= counts[c] as f64;
-            }
-        }
+        finalize_centroids(x, &mut sums, &counts, rng);
         cent = sums;
     }
-    let inertia: f64 = (0..n).map(|i| dist2(x, i, &cent, assign[i] as usize)).sum();
+    // When the loop above exits via max_iters, `assign` was computed
+    // against the *pre-update* centroids; returning it with the updated
+    // `cent` would make the triple internally inconsistent and restart
+    // selection would compare stale inertias. Recompute the assignments
+    // against the final centroids and the inertia with them, in one
+    // pass. (On the converged-break path the recompute is a no-op: the
+    // assignments already are the argmins of `cent`.)
+    let mut inertia = 0.0;
+    for (i, a) in assign.iter_mut().enumerate() {
+        let (best, bd) = nearest(x, i, &cent);
+        *a = best;
+        inertia += bd;
+    }
     KmeansResult {
         assignments: assign,
         centroids: cent,
@@ -151,17 +196,36 @@ pub fn kmeans(x: &Mat, opts: &KmeansOptions) -> KmeansResult {
     best.unwrap()
 }
 
+/// Normalize one row in place per the step-4 convention: scale to unit
+/// L2 norm, mapping degenerate rows (norm <= 1e-12) to the exact zero
+/// row. Shared by the sequential `row_normalize` and the distributed
+/// `dist_row_normalize`, so the convention — and with it the p=1
+/// bit-identity of the two pipelines — lives in one place.
+pub(crate) fn normalize_row(row: &mut [f64]) {
+    let nrm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if nrm > 1e-12 {
+        for v in row.iter_mut() {
+            *v /= nrm;
+        }
+    } else {
+        for v in row.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
 /// Row-wise L2 normalization (step 4 of Algorithm 1) — native twin of
 /// the `rownorm` Pallas kernel.
+///
+/// Convention for degenerate rows: a row with norm <= 1e-12 maps to the
+/// exact zero row. (Leaving such rows unscaled — the previous behaviour
+/// — let them enter K-means at a scale all their own; mapping them to
+/// the origin puts every degenerate embedding row at one deterministic
+/// point, the same choice scikit-learn's `normalize` makes.)
 pub fn row_normalize(x: &Mat) -> Mat {
     let mut out = x.clone();
-    for i in 0..x.rows {
-        let nrm = x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
-        if nrm > 1e-12 {
-            for v in out.row_mut(i) {
-                *v /= nrm;
-            }
-        }
+    for i in 0..out.rows {
+        normalize_row(out.row_mut(i));
     }
     out
 }
@@ -231,5 +295,57 @@ mod tests {
             let n: f64 = y.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
             assert!((n - 1.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn row_normalize_zero_rows_map_to_origin() {
+        // regression: rows with norm <= 1e-12 used to pass through
+        // unscaled; the convention is now "degenerate row -> exact zero"
+        let mut rng = Rng::new(5);
+        let mut x = Mat::randn(6, 4, &mut rng);
+        for v in x.row_mut(2) {
+            *v = 0.0; // exactly-zero row
+        }
+        for v in x.row_mut(4) {
+            *v = 1e-20; // tiny but nonzero: norm 2e-20 << 1e-12
+        }
+        let y = row_normalize(&x);
+        assert!(y.row(2).iter().all(|&v| v == 0.0), "zero row must stay zero");
+        assert!(y.row(4).iter().all(|&v| v == 0.0), "sub-threshold row maps to zero");
+        for i in [0usize, 1, 3, 5] {
+            let n: f64 = y.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-12, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn lloyd_result_consistent_when_max_iters_exhausted() {
+        // regression: exiting via max_iters used to return assignments
+        // computed against the *pre-update* centroids. The returned
+        // triple must be internally consistent: every assignment is the
+        // argmin of the returned centroids and the inertia is the sum of
+        // those argmin distances.
+        let mut rng = Rng::new(6);
+        let (x, _) = blobs(4, 40, 1.5, &mut rng);
+        let opts = KmeansOptions {
+            max_iters: 1, // guarantees the max_iters exit path
+            restarts: 1,
+            ..KmeansOptions::new(4)
+        };
+        let res = kmeans(&x, &opts);
+        let mut inertia = 0.0;
+        for i in 0..x.rows {
+            let (best, bd) = nearest(&x, i, &res.centroids);
+            assert_eq!(
+                res.assignments[i], best,
+                "assignment {i} is not the argmin of the returned centroids"
+            );
+            inertia += bd;
+        }
+        assert_eq!(
+            res.inertia.to_bits(),
+            inertia.to_bits(),
+            "returned inertia must be computed against the returned pair"
+        );
     }
 }

@@ -147,6 +147,47 @@ mod tests {
     }
 
     #[test]
+    fn single_cluster_vs_single_cluster_scores_one() {
+        // both partitions trivial: ARI hits the max_index == expected
+        // guard, NMI the denom < 1e-300 guard — both must return 1
+        let a = vec![0u32; 10];
+        let b = vec![3u32; 10];
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+        assert_eq!(normalized_mutual_information(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn all_singletons_vs_all_singletons_scores_one() {
+        // every pair count is 0: sum_ij = sum_a = sum_b = 0, so ARI
+        // takes the degenerate-equality guard; NMI has mi = H = ln n
+        let a: Vec<u32> = (0..12).collect();
+        let b: Vec<u32> = (0..12).rev().collect();
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+        assert!((normalized_mutual_information(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singletons_vs_single_cluster_scores_zero() {
+        // maximal disagreement that is still chance-level: ARI numerator
+        // and expected index are both 0 while max_index > 0
+        let a: Vec<u32> = (0..20).collect();
+        let b = vec![0u32; 20];
+        assert_eq!(adjusted_rand_index(&a, &b), 0.0);
+        assert_eq!(normalized_mutual_information(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn length_one_labelings_use_total_guard() {
+        // n = 1: total = choose2(1) = 0, so `total.max(1e-300)` is what
+        // keeps `expected` finite — both indexes must return 1
+        let a = vec![7u32];
+        let b = vec![0u32];
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+        assert_eq!(normalized_mutual_information(&a, &b), 1.0);
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+    }
+
+    #[test]
     fn nmi_symmetry() {
         let mut rng = Rng::new(2);
         let a: Vec<u32> = (0..200).map(|_| rng.below(4) as u32).collect();

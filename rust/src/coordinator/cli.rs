@@ -2,8 +2,9 @@
 //! launcher. Subcommands:
 //!
 //!   chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --pjrt]
-//!   chebdav cluster [same flags]               # Algorithm 1 end-to-end
+//!   chebdav cluster [same flags]               # Algorithm 1, sequential
 //!   chebdav scale   <config.toml>              # Fig. 7-style sweep
+//!   chebdav cluster-scaling <config.toml>      # Fig. 10-style e2e sweep
 //!   chebdav table2  [--n N]                    # matrix properties
 //!   chebdav info                               # runtime / artifact info
 
@@ -81,6 +82,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
         "scale" => cmd_scale(&args),
+        "cluster-scaling" => cmd_cluster_scaling(&args),
         "table2" => cmd_table2(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -99,6 +101,9 @@ USAGE:
   chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --seed S --threads W --pjrt]
   chebdav cluster [--graph G --n N --k K --kb B --m M --tol T --seed S --threads W]
   chebdav scale   <config.toml> [--threads W]
+  chebdav cluster-scaling <config.toml> [--threads W]
+                end-to-end Algorithm 1 on the rank grid (eigensolver +
+                embedding + distributed K-means), per-stage breakdown
   chebdav table2  [--n N --seed S]
   chebdav info
 
@@ -225,6 +230,45 @@ fn cmd_scale(args: &Args) -> Result<()> {
             row.iterations.to_string(),
         ]);
         let _ = ledger_to_row(row.p, &crate::mpi_sim::Ledger::new(), 0, true);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_cluster_scaling(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: chebdav cluster-scaling <config.toml>")?;
+    let mut cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+    cfg.threads = args.get("threads", cfg.threads);
+    experiments::apply_run_settings(&cfg);
+    let mat = table2_matrix(&cfg.graph, cfg.n, cfg.seed);
+    println!(
+        "end-to-end Algorithm 1 sweep `{}` on {} (n={}, nnz={}), ps={:?}",
+        cfg.name,
+        mat.name,
+        mat.lap.nrows,
+        mat.lap.nnz(),
+        cfg.ps
+    );
+    let rows = experiments::cluster_scaling(&mat, &cfg);
+    let mut table = Table::new(
+        &format!("end-to-end spectral clustering scaling — {}", cfg.name),
+        &["p", "total", "eig", "embed", "kmeans", "speedup", "ARI"],
+    );
+    let mut base = None;
+    for r in &rows {
+        let base_t = *base.get_or_insert(r.total);
+        table.row(&[
+            r.p.to_string(),
+            fmt_secs(r.total),
+            fmt_secs(r.eig),
+            fmt_secs(r.embed),
+            fmt_secs(r.kmeans),
+            fmt_f(base_t / r.total, 2),
+            r.ari.map(|a| fmt_f(a, 4)).unwrap_or_else(|| "-".into()),
+        ]);
     }
     print!("{}", table.render());
     Ok(())

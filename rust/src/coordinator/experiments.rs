@@ -2,9 +2,9 @@
 //! every figure/table bench (DESIGN.md's per-experiment index maps each
 //! paper artifact to one of these functions).
 
-use crate::cluster::{quality, spectral_clustering, Eigensolver};
+use crate::cluster::{adjusted_rand_index, quality, spectral_clustering, Eigensolver};
 use crate::config::ExperimentConfig;
-use crate::dist::{dist_bchdav, DistMatrix};
+use crate::dist::{dist_bchdav, dist_spectral_clustering, DistMatrix};
 use crate::eig::{laplacian_opts, BchdavOptions};
 use crate::graph::{table2_matrix, TestMatrix};
 use crate::mpi_sim::{CostModel, Ledger};
@@ -198,6 +198,70 @@ pub fn component_scaling(
         }
     }
     rows
+}
+
+// ---------------------------------------------------------------------
+// End-to-end Algorithm 1 scaling (Fig. 10, a repo extension): the
+// eigensolver sweep above plus the distributed clustering tail
+// ---------------------------------------------------------------------
+
+/// One process count of the end-to-end sweep, with the time split the
+/// paper's per-figure breakdowns use extended past the eigensolver:
+/// eig = the five Davidson components, embed = row normalization,
+/// kmeans = Lloyd + seeding (all compute + comm, from one Ledger).
+#[derive(Clone, Debug)]
+pub struct E2eScalingRow {
+    pub p: usize,
+    pub total: f64,
+    pub eig: f64,
+    pub embed: f64,
+    pub kmeans: f64,
+    /// ARI against ground truth, when the graph has labels.
+    pub ari: Option<f64>,
+    pub eig_iterations: usize,
+    pub converged: bool,
+}
+
+/// The `cluster-scaling` experiment: run `dist_spectral_clustering`
+/// (Algorithm 1 end-to-end on the rank grid) at every `cfg.ps` process
+/// count. `cfg.clusters == 0` means "use the ground-truth block count"
+/// (falling back to `cfg.k` for unlabeled graphs).
+pub fn cluster_scaling(mat: &TestMatrix, cfg: &ExperimentConfig) -> Vec<E2eScalingRow> {
+    let clusters = if cfg.clusters > 0 {
+        cfg.clusters
+    } else {
+        mat.labels
+            .as_ref()
+            .map(|t| (*t.iter().max().unwrap() + 1) as usize)
+            .unwrap_or(cfg.k)
+    };
+    let cost = cfg.cost_model();
+    cfg.ps
+        .iter()
+        .map(|&p| {
+            let q = grid_side(p);
+            let dm = DistMatrix::new(&mat.lap, q);
+            let res = dist_spectral_clustering(
+                &dm, cfg.k, clusters, cfg.k_b, cfg.m, cfg.tol, cfg.seed, &cost,
+            );
+            let embed = res.ledger.time_of("embed");
+            let kmeans = res.ledger.time_of("kmeans");
+            let total = res.ledger.total_time();
+            E2eScalingRow {
+                p: q * q,
+                total,
+                eig: total - embed - kmeans,
+                embed,
+                kmeans,
+                ari: mat
+                    .labels
+                    .as_ref()
+                    .map(|t| adjusted_rand_index(&res.assignments, t)),
+                eig_iterations: res.eig_iterations,
+                converged: res.converged,
+            }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -485,6 +549,35 @@ mod tests {
             .iter()
             .filter(|r| r.p > 1)
             .any(|r| r.comm > 0.0));
+    }
+
+    #[test]
+    fn cluster_scaling_covers_the_tail_and_keeps_scaling() {
+        let mat = table2_matrix("LBOLBSV", 2048, 3);
+        let cfg = ExperimentConfig {
+            k: 8,
+            k_b: 4,
+            m: 11,
+            tol: 1e-2,
+            ps: vec![1, 16],
+            ..Default::default()
+        };
+        let rows = cluster_scaling(&mat, &cfg);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.converged, "p={}", r.p);
+            // the clustering tail is measured, not zero, at every p
+            assert!(r.embed > 0.0, "p={} embed", r.p);
+            assert!(r.kmeans > 0.0, "p={} kmeans", r.p);
+            let ari = r.ari.expect("SBM has ground truth");
+            assert!(ari > 0.8, "p={} ARI {ari}", r.p);
+        }
+        assert!(
+            rows[1].total < rows[0].total,
+            "end-to-end p=16 {} should beat p=1 {}",
+            rows[1].total,
+            rows[0].total
+        );
     }
 
     #[test]

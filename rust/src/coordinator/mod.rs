@@ -6,8 +6,8 @@ pub mod experiments;
 pub mod report;
 
 pub use experiments::{
-    apply_run_settings, component_scaling, dist_run, dist_scaling_sweep, grid_side,
-    paper_solver_set, quality_cell, table1, table2, vs_parsec, ComponentScalingRow, DistRunRow,
-    QualityRow, Table1Row, Table2Row, VsParsecRow,
+    apply_run_settings, cluster_scaling, component_scaling, dist_run, dist_scaling_sweep,
+    grid_side, paper_solver_set, quality_cell, table1, table2, vs_parsec, ComponentScalingRow,
+    DistRunRow, E2eScalingRow, QualityRow, Table1Row, Table2Row, VsParsecRow,
 };
 pub use report::{fmt_f, fmt_secs, save_json, Table};

@@ -1,0 +1,501 @@
+//! Distributed steps 4-5 of Algorithm 1: row-normalized spectral
+//! embedding and K-means on the rank grid — the clustering tail the
+//! paper's end-to-end claim covers but the eigensolver-only sweeps
+//! (Figs. 6-8) exclude.
+//!
+//! Layout: the Ritz panel leaves `dist_bchdav` in the 1D row layout
+//! (rank r owns the contiguous row range `row_partition` assigns it), so
+//!
+//! * [`dist_row_normalize`] — step 4 — is a pure `rowwise_update`
+//!   superstep (every embedding row is rank-local; **no communication**),
+//!   charged to the new `"embed"` component key;
+//! * [`dist_kmeans`] — step 5 — keeps the k x d centroids *replicated*:
+//!   each Lloyd iteration is one assign superstep (every rank assigns
+//!   its local rows and accumulates local centroid sums + counts into
+//!   one `k*(d+1)` buffer), the per-rank partials merge through the
+//!   shared ascending-rank [`merge_partials`] path, and the iteration is
+//!   billed as the alpha-beta allreduce of exactly `k*(d+1)` words that
+//!   a real replicated-centroid K-means pays (the Lloyd stop flag rides
+//!   in the same collective and is not billed separately). k-means++
+//!   seeding charges, per sampled centroid, the 1-word D^2-mass
+//!   allreduce its sampling step needs plus the d-word broadcast that
+//!   replicates the chosen point; the final assignment/inertia pass
+//!   charges the 1-word inertia allreduce restart selection needs.
+//!   Charged to the new `"kmeans"` component key.
+//!
+//! Semantics are the *fixed* sequential `cluster::kmeans` semantics,
+//! mirrored draw-for-draw: the same shared `nearest` assignment rule,
+//! the same k-means++ sampling and empty-cluster reseeding draws from
+//! one replicated RNG stream, the same restart selection — so at p = 1
+//! every float and every assignment is bit-for-bit identical to the
+//! sequential pipeline, and at any p parallel vs sequential rank
+//! execution is bit-identical (fixed ascending-rank merges only; pinned
+//! by tests/rank_parallel.rs). Across *different* p the float merge
+//! order changes, as it does for every other distributed kernel.
+//!
+//! [`dist_spectral_clustering`] chains `dist_bchdav` -> embed -> K-means
+//! into the full Algorithm 1 pipeline, returning one Ledger whose
+//! component keys cover the eigensolver's five plus `"embed"`/`"kmeans"`
+//! — what the Fig. 10 end-to-end scaling bench reads.
+
+use super::bchdav::dist_bchdav;
+use super::matrix::DistMatrix;
+use super::{merge_partials, rowwise_produce, rowwise_update};
+use crate::cluster::kmeans::{
+    dist2, finalize_centroids, nearest, normalize_row, sample_d2_index, KmeansOptions,
+};
+use crate::eig::laplacian_opts;
+use crate::linalg::Mat;
+use crate::mpi_sim::{CostModel, Ledger};
+use crate::util::Rng;
+
+/// Distributed row-wise L2 normalization of the 1D-layout panel
+/// (step 4 of Algorithm 1): one `rowwise_update` superstep under the
+/// `"embed"` component — rows are rank-local, so no collective is
+/// charged. Bit-identical to the sequential `row_normalize` (same
+/// per-row arithmetic, same degenerate-row -> exact-zero convention).
+pub fn dist_row_normalize(x: &Mat, p: usize, led: &mut Ledger) -> Mat {
+    let mut out = x.clone();
+    let cols = x.cols;
+    if cols == 0 {
+        return out;
+    }
+    rowwise_update(led, "embed", x.rows, p, cols, &mut out.data, |_lo, _hi, block| {
+        for row in block.chunks_exact_mut(cols) {
+            normalize_row(row);
+        }
+    });
+    out
+}
+
+/// What `dist_kmeans` returns: the sequential `KmeansResult` fields plus
+/// the raw draw count of the (replicated) K-means RNG stream — equal
+/// across parallel/sequential rank execution, and equal to the
+/// sequential `kmeans` consumption at p = 1.
+pub struct DistKmeansResult {
+    pub assignments: Vec<u32>,
+    pub centroids: Mat,
+    pub inertia: f64,
+    pub iterations: usize,
+    pub rng_draws: u64,
+}
+
+/// k-means++ seeding over the 1D row layout, mirroring the sequential
+/// `seed_centroids` draw-for-draw. Per sampled centroid: the local D^2
+/// partial sums are one produce superstep merged in ascending rank
+/// order, the total is charged as the 1-word sampling allreduce, and the
+/// chosen point's d-word broadcast replicates it. The cumulative scan
+/// that locates the sampled index runs over the (simulation-replicated)
+/// D^2 vector element-by-element — the same flat scan at every p, which
+/// is exactly the sequential scan at p = 1; its O(n/p) local share is
+/// part of the partial-sum superstep already billed.
+fn dist_seed_centroids(
+    x: &Mat,
+    k: usize,
+    rng: &mut Rng,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+) -> Mat {
+    let n = x.rows;
+    let d = x.cols;
+    let mut cent = Mat::zeros(k, d);
+    let first = rng.below(n);
+    cent.row_mut(0).copy_from_slice(x.row(first));
+    led.charge("kmeans", cost.bcast(d, p));
+    let mut d2 = vec![0.0f64; n];
+    {
+        let cent = &cent;
+        rowwise_update(led, "kmeans", n, p, 1, &mut d2, |lo, _hi, dd| {
+            for (i, v) in (lo..).zip(dd.iter_mut()) {
+                *v = dist2(x, i, cent, 0);
+            }
+        });
+    }
+    for c in 1..k {
+        let parts: Vec<f64> =
+            rowwise_produce(led, "kmeans", n, p, |lo, hi| d2[lo..hi].iter().sum::<f64>());
+        let total: f64 = parts.iter().sum();
+        led.charge("kmeans", cost.allreduce(1, p));
+        let pick = sample_d2_index(&d2, total, rng);
+        cent.row_mut(c).copy_from_slice(x.row(pick));
+        led.charge("kmeans", cost.bcast(d, p));
+        // d2 is dead after the last pick — skip (and don't bill) the
+        // final update superstep, exactly as the sequential seeder does
+        if c + 1 < k {
+            let cent = &cent;
+            rowwise_update(led, "kmeans", n, p, 1, &mut d2, |lo, _hi, dd| {
+                for (i, v) in (lo..).zip(dd.iter_mut()) {
+                    let old = *v;
+                    *v = old.min(dist2(x, i, cent, c));
+                }
+            });
+        }
+    }
+    cent
+}
+
+/// Lloyd iterations over the 1D row layout with replicated centroids,
+/// mirroring the fixed sequential `lloyd`. Each iteration: one assign
+/// superstep producing, per rank, (local assignments, changed flag, the
+/// packed `k*(d+1)` sums+counts partial); partials merge via the shared
+/// ascending-rank `merge_partials`; one `k*(d+1)`-word allreduce is
+/// charged; the replicated centroid update (with the sequential
+/// empty-cluster reseeding draws) is O(k d) post-allreduce work on every
+/// rank and is not billed, exactly like the merge adds the allreduce
+/// charge already models. The final pass recomputes assignments +
+/// inertia against the final centroids (the lloyd bugfix semantics) and
+/// charges the 1-word inertia allreduce.
+#[allow(clippy::too_many_arguments)]
+fn dist_lloyd(
+    x: &Mat,
+    mut cent: Mat,
+    max_iters: usize,
+    rng: &mut Rng,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+) -> (Vec<u32>, Mat, f64, usize) {
+    let n = x.rows;
+    let k = cent.rows;
+    let d = x.cols;
+    let mut assign = vec![0u32; n];
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        iterations += 1;
+        let parts: Vec<(Vec<u32>, bool, Vec<f64>)> = {
+            let cent = &cent;
+            let assign = &assign;
+            rowwise_produce(led, "kmeans", n, p, |lo, hi| {
+                let mut local = Vec::with_capacity(hi - lo);
+                let mut changed = false;
+                // packed [k*d centroid sums | k counts]: exactly the
+                // k*(d+1) words the per-iteration allreduce moves
+                let mut partial = vec![0.0f64; k * (d + 1)];
+                for i in lo..hi {
+                    let (best, _) = nearest(x, i, cent);
+                    if assign[i] != best {
+                        changed = true;
+                    }
+                    local.push(best);
+                    let c = best as usize;
+                    partial[k * d + c] += 1.0;
+                    let dst = &mut partial[c * d..(c + 1) * d];
+                    for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
+                        *s += v;
+                    }
+                }
+                (local, changed, partial)
+            })
+        };
+        let mut changed = false;
+        let mut buf = vec![0.0f64; k * (d + 1)];
+        let mut sum_parts = Vec::with_capacity(parts.len());
+        let mut off = 0;
+        for (local, ch, partial) in parts {
+            assign[off..off + local.len()].copy_from_slice(&local);
+            off += local.len();
+            changed |= ch;
+            sum_parts.push(partial);
+        }
+        merge_partials(&mut buf, &sum_parts);
+        led.charge("kmeans", cost.allreduce(k * (d + 1), p));
+        if !changed && iterations > 1 {
+            break;
+        }
+        // replicated centroid update from the allreduced sums/counts —
+        // the shared `finalize_centroids` rule, so the empty-cluster
+        // reseeding draws match the sequential Lloyd loop exactly
+        let mut sums = Mat::from_rows(k, d, buf[..k * d].to_vec());
+        finalize_centroids(x, &mut sums, &buf[k * d..], rng);
+        cent = sums;
+    }
+    // final assignments + inertia against the final centroids (the
+    // sequential lloyd's post-loop consistency pass, distributed)
+    let parts: Vec<(Vec<u32>, f64)> = {
+        let cent = &cent;
+        rowwise_produce(led, "kmeans", n, p, |lo, hi| {
+            let mut local = Vec::with_capacity(hi - lo);
+            let mut inertia = 0.0;
+            for i in lo..hi {
+                let (best, bd) = nearest(x, i, cent);
+                local.push(best);
+                inertia += bd;
+            }
+            (local, inertia)
+        })
+    };
+    let mut inertia = 0.0;
+    let mut off = 0;
+    for (local, li) in parts {
+        assign[off..off + local.len()].copy_from_slice(&local);
+        off += local.len();
+        inertia += li;
+    }
+    led.charge("kmeans", cost.allreduce(1, p));
+    (assign, cent, inertia, iterations)
+}
+
+/// Distributed K-means (step 5 of Algorithm 1) with k-means++ seeding
+/// and restarts, charging measured compute and modeled collectives into
+/// the Ledger under `"kmeans"`. Matches the fixed sequential
+/// `cluster::kmeans` bit-for-bit at p = 1 (same RNG stream, same
+/// arithmetic order, same restart selection).
+pub fn dist_kmeans(
+    x: &Mat,
+    opts: &KmeansOptions,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+) -> DistKmeansResult {
+    assert!(opts.k >= 1 && x.rows >= opts.k);
+    let mut rng = Rng::new(opts.seed);
+    let mut best: Option<(Vec<u32>, Mat, f64, usize)> = None;
+    for _ in 0..opts.restarts.max(1) {
+        let cent = dist_seed_centroids(x, opts.k, &mut rng, p, cost, led);
+        let run = dist_lloyd(x, cent, opts.max_iters, &mut rng, p, cost, led);
+        if best.as_ref().map(|b| run.2 < b.2).unwrap_or(true) {
+            best = Some(run);
+        }
+    }
+    let (assignments, centroids, inertia, iterations) = best.unwrap();
+    DistKmeansResult {
+        assignments,
+        centroids,
+        inertia,
+        iterations,
+        rng_draws: rng.draws(),
+    }
+}
+
+/// What the end-to-end distributed Algorithm 1 returns: clustering
+/// output, eigensolver output, both RNG draw counts (for the
+/// parallel-vs-sequential rank-execution identity tests), and the one
+/// merged Ledger covering eigensolver + embed + kmeans components.
+pub struct DistClusteringResult {
+    pub assignments: Vec<u32>,
+    pub centroids: Mat,
+    pub inertia: f64,
+    pub eigenvalues: Vec<f64>,
+    pub eig_iterations: usize,
+    pub kmeans_iterations: usize,
+    pub converged: bool,
+    /// Draws of the Davidson-core RNG stream (as `DistBchdavResult`).
+    pub eig_rng_draws: u64,
+    /// Draws of the replicated K-means RNG stream.
+    pub kmeans_rng_draws: u64,
+    /// Components: "filter", "spmm", "orth", "rayleigh", "residual"
+    /// (eigensolver) + "embed", "kmeans" (this module).
+    pub ledger: Ledger,
+}
+
+/// Algorithm 1 end-to-end on the rank grid: distributed Bchdav
+/// eigensolver -> distributed row-normalized embedding -> distributed
+/// K-means. Mirrors the sequential `cluster::spectral_clustering` Bchdav
+/// arm parameter-for-parameter (same `laplacian_opts`, same
+/// `seed ^ 0x5eed` K-means stream), so at p = 1 the assignments
+/// reproduce the sequential pipeline's bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_spectral_clustering(
+    dm: &DistMatrix,
+    k: usize,
+    clusters: usize,
+    k_b: usize,
+    m: usize,
+    tol: f64,
+    seed: u64,
+    cost: &CostModel,
+) -> DistClusteringResult {
+    let mut opts = laplacian_opts(k, k_b, m, tol);
+    opts.seed = seed;
+    let eig = dist_bchdav(dm, &opts, None, cost);
+    let mut led = eig.ledger;
+    let p = dm.p();
+    let k_got = eig.eigenvalues.len().min(k);
+    let vectors = eig.eigenvectors.cols_block(0, k_got);
+    let features = dist_row_normalize(&vectors, p, &mut led);
+    let mut kopts = KmeansOptions::new(clusters);
+    kopts.seed = seed ^ 0x5eed;
+    let km = dist_kmeans(&features, &kopts, p, cost, &mut led);
+    DistClusteringResult {
+        assignments: km.assignments,
+        centroids: km.centroids,
+        inertia: km.inertia,
+        eigenvalues: eig.eigenvalues[..k_got].to_vec(),
+        eig_iterations: eig.iterations,
+        kmeans_iterations: km.iterations,
+        converged: eig.converged,
+        eig_rng_draws: eig.rng_draws,
+        kmeans_rng_draws: km.rng_draws,
+        ledger: led,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{
+        adjusted_rand_index, kmeans, row_normalize, spectral_clustering, Eigensolver,
+    };
+    use crate::graph::sbm::{generate, Category, SbmParams};
+    use crate::sparse::normalized_laplacian;
+
+    fn sbm_case(n: usize, blocks: usize, seed: u64) -> (crate::sparse::Csr, Vec<u32>) {
+        let mut p = SbmParams::graph_challenge(n, Category::from_name("LBOLBSV").unwrap());
+        p.blocks = blocks;
+        let g = generate(&p, seed);
+        (normalized_laplacian(g.n, &g.edges), g.labels)
+    }
+
+    #[test]
+    fn dist_row_normalize_matches_sequential_bitwise() {
+        let mut rng = Rng::new(11);
+        let mut x = Mat::randn(103, 7, &mut rng);
+        for v in x.row_mut(41) {
+            *v = 0.0; // exercise the degenerate-row convention too
+        }
+        let want = row_normalize(&x);
+        for p in [1usize, 4, 16] {
+            let mut led = Ledger::new();
+            let got = dist_row_normalize(&x, p, &mut led);
+            assert_eq!(got.data.len(), want.data.len());
+            for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "p={p} entry {i}");
+            }
+            // rows are rank-local: compute is charged, comm is not
+            assert!(led.components().contains(&"embed"), "p={p}");
+            assert_eq!(led.comm_of("embed"), 0.0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn dist_kmeans_at_p1_matches_sequential_bitwise() {
+        // the distributed twin must reproduce the (fixed) sequential
+        // kmeans exactly at p = 1: same RNG stream, same assignments,
+        // same centroid bits, same inertia bits
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(90, 4, &mut rng);
+        let mut opts = KmeansOptions::new(5);
+        opts.seed = 0xfeed;
+        let seq = kmeans(&x, &opts);
+        let mut led = Ledger::new();
+        let dist = dist_kmeans(&x, &opts, 1, &CostModel::default(), &mut led);
+        assert_eq!(dist.assignments, seq.assignments);
+        assert_eq!(dist.iterations, seq.iterations);
+        assert_eq!(dist.inertia.to_bits(), seq.inertia.to_bits());
+        for (i, (a, b)) in dist
+            .centroids
+            .data
+            .iter()
+            .zip(seq.centroids.data.iter())
+            .enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "centroid entry {i}");
+        }
+        // p = 1 collectives are free, but the superstep compute is billed
+        assert_eq!(led.comm_of("kmeans"), 0.0);
+        assert!(led.components().contains(&"kmeans"));
+    }
+
+    #[test]
+    fn dist_kmeans_charges_lloyd_allreduces() {
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(120, 3, &mut rng);
+        let mut opts = KmeansOptions::new(4);
+        opts.restarts = 1;
+        let p = 16;
+        let cost = CostModel::default();
+        let mut led = Ledger::new();
+        let res = dist_kmeans(&x, &opts, p, &cost, &mut led);
+        assert!(led.comm_of("kmeans") > 0.0);
+        assert!(led.compute_of("kmeans") > 0.0);
+        // per Lloyd iteration: one k*(d+1)-word allreduce; plus per
+        // seeded centroid one 1-word allreduce + one d-word bcast; plus
+        // the final 1-word inertia allreduce — check the word total
+        let k = 4usize;
+        let d = 3usize;
+        let mut want_words = 0.0;
+        for _ in 0..res.iterations {
+            want_words += cost.allreduce(k * (d + 1), p).words;
+        }
+        want_words += cost.bcast(d, p).words; // first centroid
+        for _ in 1..k {
+            want_words += cost.allreduce(1, p).words + cost.bcast(d, p).words;
+        }
+        want_words += cost.allreduce(1, p).words; // inertia
+        let got = led.words.get("kmeans").copied().unwrap_or(0.0);
+        assert!(
+            (got - want_words).abs() < 1e-9,
+            "kmeans words {got} vs modeled {want_words}"
+        );
+    }
+
+    #[test]
+    fn dist_kmeans_quality_holds_across_p() {
+        // same data, same seed: every p must cluster the blobs; the
+        // float merge order (and so the exact result) may differ across
+        // p, but the quality must not
+        let mut rng = Rng::new(6);
+        let blocks = 4usize;
+        let per = 40usize;
+        let mut x = Mat::zeros(blocks * per, 2);
+        let mut truth = vec![0u32; blocks * per];
+        for b in 0..blocks {
+            for i in 0..per {
+                let r = b * per + i;
+                x[(r, 0)] = (b as f64) * 8.0 + 0.3 * rng.normal();
+                x[(r, 1)] = ((b % 2) as f64) * 8.0 + 0.3 * rng.normal();
+                truth[r] = b as u32;
+            }
+        }
+        let opts = KmeansOptions::new(blocks);
+        for p in [1usize, 4, 16] {
+            let mut led = Ledger::new();
+            let res = dist_kmeans(&x, &opts, p, &CostModel::default(), &mut led);
+            let ari = adjusted_rand_index(&res.assignments, &truth);
+            assert!(ari > 0.99, "p={p}: ARI {ari}");
+        }
+    }
+
+    #[test]
+    fn e2e_at_p1_reproduces_sequential_pipeline_assignments() {
+        // Algorithm 1 end-to-end: at p = 1 the distributed pipeline must
+        // return the exact assignment vector of the (fixed) sequential
+        // `spectral_clustering` with the same parameters
+        let (lap, truth) = sbm_case(700, 6, 13);
+        let (k, clusters, k_b, m, tol, seed) = (6usize, 6usize, 3usize, 11usize, 1e-8, 29u64);
+        let solver = Eigensolver::Bchdav { k_b, m, tol };
+        let seq = spectral_clustering(&lap, k, clusters, &solver, seed);
+        assert!(seq.converged);
+        let dm = DistMatrix::new(&lap, 1);
+        let cost = CostModel::default();
+        let res = dist_spectral_clustering(&dm, k, clusters, k_b, m, tol, seed, &cost);
+        assert!(res.converged);
+        assert_eq!(res.assignments, seq.assignments);
+        // and the clustering is actually good, not just consistent
+        let ari = adjusted_rand_index(&res.assignments, &truth);
+        assert!(ari > 0.85, "ARI {ari}");
+    }
+
+    #[test]
+    fn e2e_ledger_covers_all_pipeline_components() {
+        let (lap, truth) = sbm_case(500, 5, 21);
+        let dm = DistMatrix::new(&lap, 2);
+        let cost = CostModel::default();
+        let res = dist_spectral_clustering(&dm, 5, 5, 3, 11, 1e-6, 7, &cost);
+        assert!(res.converged);
+        let comps = res.ledger.components();
+        for want in ["filter", "spmm", "orth", "rayleigh", "residual", "embed", "kmeans"] {
+            assert!(comps.contains(&want), "missing component {want}: {comps:?}");
+        }
+        // the clustering tail is charged: kmeans pays real collectives,
+        // embed is compute-only by construction (rows are rank-local)
+        assert!(res.ledger.comm_of("kmeans") > 0.0);
+        assert!(res.ledger.messages.get("kmeans").copied().unwrap_or(0.0) > 0.0);
+        assert!(res.ledger.words.get("kmeans").copied().unwrap_or(0.0) > 0.0);
+        assert!(res.ledger.compute_of("embed") > 0.0);
+        assert_eq!(res.ledger.comm_of("embed"), 0.0);
+        let ari = adjusted_rand_index(&res.assignments, &truth);
+        assert!(ari > 0.8, "ARI {ari}");
+    }
+}

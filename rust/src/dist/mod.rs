@@ -26,6 +26,13 @@
 //!   [`Ledger`](crate::mpi_sim::Ledger) the figure benches read
 //!   (Figs. 6-8, Tables 1-2); `laplacian_opts` is re-exported from
 //!   `eig` (one options constructor for both backends);
+//! * [`dist_spectral_clustering`] — Algorithm 1 end-to-end: the
+//!   eigensolver above chained into the distributed clustering tail
+//!   ([`dist_row_normalize`] over the 1D panel, no comm, charged as
+//!   `"embed"`; [`dist_kmeans`] with replicated centroids, one
+//!   `k*(d+1)`-word allreduce per Lloyd iteration, charged as
+//!   `"kmeans"`) — bit-for-bit the fixed sequential `cluster` pipeline
+//!   at p = 1;
 //! * [`arpack_scaling`] / [`lobpcg_scaling`] — the Fig. 5 cost replays.
 //!
 //! Every collective is charged through the alpha-beta
@@ -38,6 +45,7 @@
 //! per-figure index.
 
 pub mod bchdav;
+pub mod cluster;
 pub mod filter;
 pub mod matrix;
 pub mod orth;
@@ -46,6 +54,10 @@ pub mod spmm;
 pub mod tsqr;
 
 pub use bchdav::{dist_bchdav, laplacian_opts, DistBackend, DistBchdavResult};
+pub use cluster::{
+    dist_kmeans, dist_row_normalize, dist_spectral_clustering, DistClusteringResult,
+    DistKmeansResult,
+};
 pub use filter::dist_cheb_filter;
 pub use matrix::DistMatrix;
 pub use orth::{dgks_orthonormalize, dist_atb};

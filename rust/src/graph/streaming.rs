@@ -11,6 +11,13 @@ use crate::util::Rng;
 /// Rewire `fraction` of the edges: each selected edge is replaced by a new
 /// edge whose endpoints are sampled within the same ground-truth blocks
 /// with probability `same_block_prob` (keeping communities stable).
+///
+/// The returned list never contains parallel edges: rewiring can
+/// resample a pair that already exists (or land two rewires on the same
+/// pair), and duplicates would inflate degrees in any consumer that does
+/// not collapse them. The output is deduplicated on the undirected
+/// (min, max) key, order-preserving (first occurrence wins) — so a
+/// duplicate already present in the *input* is collapsed too.
 pub fn evolve(
     n: usize,
     edges: &[(u32, u32)],
@@ -44,20 +51,39 @@ pub fn evolve(
             out.push((u, v));
         }
     }
-    out
+    dedup_undirected(out)
+}
+
+/// Order-preserving dedup on the undirected (min, max) edge key.
+fn dedup_undirected(mut edges: Vec<(u32, u32)>) -> Vec<(u32, u32)> {
+    let mut seen = std::collections::HashSet::with_capacity(edges.len());
+    edges.retain(|&(u, v)| seen.insert(if u < v { (u, v) } else { (v, u) }));
+    edges
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::sbm::{generate, Category, SbmParams};
+    use std::collections::HashSet;
+
+    fn key(u: u32, v: u32) -> (u32, u32) {
+        if u < v {
+            (u, v)
+        } else {
+            (v, u)
+        }
+    }
 
     #[test]
-    fn zero_fraction_is_identity() {
+    fn zero_fraction_only_dedups() {
+        // fraction 0 passes every edge through; the only change the
+        // output may show is the collapse of input parallel edges
         let p = SbmParams::graph_challenge(1000, Category::from_name("LBOLBSV").unwrap());
         let g = generate(&p, 1);
         let e2 = evolve(g.n, &g.edges, &g.labels, 0.0, 0.9, 2);
-        assert_eq!(e2, g.edges);
+        let expected = dedup_undirected(g.edges.clone());
+        assert_eq!(e2, expected);
     }
 
     #[test]
@@ -65,15 +91,29 @@ mod tests {
         let p = SbmParams::graph_challenge(1000, Category::from_name("LBOLBSV").unwrap());
         let g = generate(&p, 1);
         let e2 = evolve(g.n, &g.edges, &g.labels, 0.05, 0.9, 2);
-        assert_eq!(e2.len(), g.edges.len());
-        let changed = g
-            .edges
-            .iter()
-            .zip(e2.iter())
-            .filter(|(a, b)| a != b)
-            .count();
-        let frac = changed as f64 / g.edges.len() as f64;
-        assert!((0.02..0.09).contains(&frac), "changed fraction {frac}");
+        assert!(e2.len() <= g.edges.len());
+        let orig: HashSet<(u32, u32)> = g.edges.iter().map(|&(u, v)| key(u, v)).collect();
+        let novel = e2.iter().filter(|&&(u, v)| !orig.contains(&key(u, v))).count();
+        let frac = novel as f64 / g.edges.len() as f64;
+        assert!((0.015..0.09).contains(&frac), "novel-edge fraction {frac}");
+    }
+
+    #[test]
+    fn no_parallel_edges_survive_rewiring() {
+        // regression: rewiring used to emit duplicates of existing edges
+        // and duplicate rewired pairs, inflating degrees downstream
+        let p = SbmParams::graph_challenge(1000, Category::from_name("LBOLBSV").unwrap());
+        let g = generate(&p, 5);
+        for fraction in [0.0, 0.05, 0.5] {
+            let e2 = evolve(g.n, &g.edges, &g.labels, fraction, 0.9, 6);
+            let keys: HashSet<(u32, u32)> = e2.iter().map(|&(u, v)| key(u, v)).collect();
+            assert_eq!(
+                keys.len(),
+                e2.len(),
+                "parallel edges survived at fraction {fraction}"
+            );
+            assert!(e2.iter().all(|&(u, v)| u != v), "self-loop at fraction {fraction}");
+        }
     }
 
     #[test]

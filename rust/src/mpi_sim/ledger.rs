@@ -11,7 +11,10 @@
 //!
 //! Components use the paper's Fig. 7/8 vocabulary: "filter", "spmm",
 //! "orth", "rayleigh", "residual", "other", so the figure benches can
-//! read the breakdown straight out of the ledger.
+//! read the breakdown straight out of the ledger — plus the Algorithm 1
+//! clustering-tail keys "embed" (distributed row normalization, compute
+//! only) and "kmeans" (distributed K-means) that `dist::cluster` charges
+//! and the Fig. 10 end-to-end bench reads.
 
 use super::cost::Charge;
 use super::exec;

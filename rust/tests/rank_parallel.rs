@@ -7,7 +7,7 @@
 //! `set_seq_ranks` toggle (its tests serialize on a lock and no other
 //! test binary shares the process).
 
-use dist_chebdav::dist::{dist_bchdav, laplacian_opts, DistMatrix};
+use dist_chebdav::dist::{dist_bchdav, dist_spectral_clustering, laplacian_opts, DistMatrix};
 use dist_chebdav::graph::sbm::{generate, Category, SbmParams};
 use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
 use dist_chebdav::sparse::normalized_laplacian;
@@ -65,6 +65,66 @@ fn parallel_and_sequential_rank_execution_bit_identical() {
         assert_eq!(seq.ledger.comm, par.ledger.comm, "q={q} comm map");
         assert_eq!(seq.ledger.messages, par.ledger.messages, "q={q} messages map");
         assert_eq!(seq.ledger.words, par.ledger.words, "q={q} words map");
+    }
+}
+
+#[test]
+fn e2e_clustering_parallel_and_sequential_rank_execution_bit_identical() {
+    // Algorithm 1 end-to-end (eigensolver + embed + distributed
+    // K-means): flipping the executor mode must change nothing
+    // observable — assignments, centroid bits, both RNG streams, and
+    // the modeled communication ledger (now including the "embed" and
+    // "kmeans" component keys) all agree exactly at p = 4 and p = 16.
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let lap = sbm_lap(600, 23);
+    let cost = CostModel::default();
+    let (k, clusters, k_b, m, tol, seed) = (6usize, 6usize, 4usize, 11usize, 1e-8, 23u64);
+    for q in [2usize, 4] {
+        let dm = DistMatrix::new(&lap, q);
+        set_seq_ranks(Some(true));
+        let seq = dist_spectral_clustering(&dm, k, clusters, k_b, m, tol, seed, &cost);
+        set_seq_ranks(Some(false));
+        let par = dist_spectral_clustering(&dm, k, clusters, k_b, m, tol, seed, &cost);
+        set_seq_ranks(None);
+        assert!(seq.converged && par.converged, "q={q}");
+
+        // clustering output: assignments and centroids bit-for-bit
+        assert_eq!(seq.assignments, par.assignments, "q={q} assignments");
+        assert_eq!(
+            (seq.centroids.rows, seq.centroids.cols),
+            (par.centroids.rows, par.centroids.cols),
+            "q={q}"
+        );
+        for (i, (a, b)) in seq
+            .centroids
+            .data
+            .iter()
+            .zip(par.centroids.data.iter())
+            .enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "q={q} centroid entry {i}");
+        }
+        assert_eq!(seq.inertia.to_bits(), par.inertia.to_bits(), "q={q} inertia");
+
+        // identical control flow and RNG stream consumption, in both
+        // the Davidson core and the replicated K-means stream
+        assert_eq!(seq.eig_iterations, par.eig_iterations, "q={q}");
+        assert_eq!(seq.kmeans_iterations, par.kmeans_iterations, "q={q}");
+        assert_eq!(seq.eig_rng_draws, par.eig_rng_draws, "q={q}");
+        assert_eq!(seq.kmeans_rng_draws, par.kmeans_rng_draws, "q={q}");
+
+        // modeled communication agrees exactly across modes
+        assert_eq!(seq.ledger.comm, par.ledger.comm, "q={q} comm map");
+        assert_eq!(seq.ledger.messages, par.ledger.messages, "q={q} messages map");
+        assert_eq!(seq.ledger.words, par.ledger.words, "q={q} words map");
+
+        // and the clustering tail really is charged: K-means pays
+        // collectives, the embed superstep bills measured compute
+        // (comm-free by construction — rows are rank-local)
+        assert!(par.ledger.comm_of("kmeans") > 0.0, "q={q}");
+        assert!(par.ledger.words.get("kmeans").copied().unwrap_or(0.0) > 0.0, "q={q}");
+        assert!(par.ledger.compute_of("embed") > 0.0, "q={q}");
+        assert_eq!(par.ledger.comm_of("embed"), 0.0, "q={q}");
     }
 }
 
