@@ -156,4 +156,61 @@ fn main() {
     }
     print!("{}", table.render());
     common::save("kernels_superstep", &table);
+
+    // --- superstep executor: small supersteps (the pool's home turf) ---
+    // DGKS-per-column-sized rank bodies (a few hundred flops: two column
+    // dots over the rank's row slice of a tiny panel). At this scale the
+    // old spawn-per-superstep executor paid more in thread spawn than
+    // the bodies cost; the persistent pool's parked-worker handoff is
+    // what this table measures — measured per superstep over a batch,
+    // not asserted, since the realized win depends on core count.
+    let n_small = 2048usize;
+    let reps = 200usize;
+    let xs: Vec<f64> = (0..n_small).map(|i| (i as f64).sin()).collect();
+    let ys: Vec<f64> = (0..n_small).map(|i| (i as f64).cos()).collect();
+    let mut table = Table::new(
+        &format!("small supersteps (DGKS column dots), n={n_small}, {reps} supersteps/rep"),
+        &["q", "ranks", "serial/superstep", "pooled/superstep", "speedup"],
+    );
+    for q in [4usize, 8] {
+        let p = q * q;
+        let ranges = dist_chebdav::sparse::split_ranges(n_small, p);
+        let step = |led: &mut Ledger| {
+            let parts = led.superstep("orth", p, |r| {
+                let (lo, hi) = ranges[r];
+                let mut d0 = 0.0f64;
+                let mut d1 = 0.0f64;
+                for (x, y) in xs[lo..hi].iter().zip(&ys[lo..hi]) {
+                    d0 += x * y;
+                    d1 += y * y;
+                }
+                [d0, d1]
+            });
+            std::hint::black_box(parts);
+        };
+        set_seq_ranks(Some(true));
+        let s_seq = bench(1, 3, || {
+            let mut led = Ledger::new();
+            for _ in 0..reps {
+                step(&mut led);
+            }
+        });
+        set_seq_ranks(Some(false));
+        let s_par = bench(1, 3, || {
+            let mut led = Ledger::new();
+            for _ in 0..reps {
+                step(&mut led);
+            }
+        });
+        set_seq_ranks(None);
+        table.row(&[
+            q.to_string(),
+            p.to_string(),
+            fmt_secs(s_seq.min / reps as f64),
+            fmt_secs(s_par.min / reps as f64),
+            fmt_f(s_seq.min / s_par.min.max(1e-30), 2),
+        ]);
+    }
+    print!("{}", table.render());
+    common::save("kernels_superstep_small", &table);
 }

@@ -32,8 +32,8 @@ pub struct ExperimentConfig {
     pub beta: f64,
     /// execute the SpMM hot path through the PJRT artifacts
     pub use_pjrt: bool,
-    /// worker threads for the scoped pool (native kernels + the
-    /// rank-parallel superstep executor); 0 = auto (hardware_threads)
+    /// worker threads (native kernels + the rank-parallel superstep
+    /// executor's persistent pool); 0 = auto (hardware_threads)
     pub threads: usize,
     /// run simulated ranks sequentially (the pre-executor behaviour) —
     /// the config-side spelling of `CHEBDAV_SEQ_RANKS=1`, for debugging

@@ -1,12 +1,14 @@
 //! Hand-rolled CLI (no clap in the offline crate set): the `chebdav`
 //! launcher. Subcommands:
 //!
-//!   chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --pjrt]
-//!   chebdav cluster [same flags]               # Algorithm 1, sequential
-//!   chebdav scale   <config.toml>              # Fig. 7-style sweep
-//!   chebdav cluster-scaling <config.toml>      # Fig. 10-style e2e sweep
-//!   chebdav table2  [--n N]                    # matrix properties
-//!   chebdav info                               # runtime / artifact info
+//! ```text
+//! chebdav solve   [--graph G --n N --k K --kb B --m M --tol T --pjrt]
+//! chebdav cluster [same flags]               # Algorithm 1, sequential
+//! chebdav scale   <config.toml>              # Fig. 7-style sweep
+//! chebdav cluster-scaling <config.toml>      # Fig. 10-style e2e sweep
+//! chebdav table2  [--n N]                    # matrix properties
+//! chebdav info                               # runtime / artifact info
+//! ```
 
 use super::experiments::{self, ledger_to_row};
 use super::report::{fmt_f, fmt_secs, Table};
@@ -324,9 +326,10 @@ fn cmd_info() -> Result<()> {
     }
     println!("hardware threads: {}", crate::util::hardware_threads());
     println!(
-        "worker threads: {} | rank execution: {}",
+        "worker threads: {} | rank execution: {} | pool workers spawned: {}",
         crate::util::configured_threads(),
-        if crate::mpi_sim::seq_ranks() { "sequential (CHEBDAV_SEQ_RANKS)" } else { "parallel" }
+        if crate::mpi_sim::seq_ranks() { "sequential (CHEBDAV_SEQ_RANKS)" } else { "parallel" },
+        crate::util::pool_workers()
     );
     Ok(())
 }

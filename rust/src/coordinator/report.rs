@@ -94,7 +94,7 @@ pub fn fmt_f(x: f64, prec: usize) -> String {
     format!("{x:.prec$}")
 }
 
-/// Write a JSON report next to the bench output (results/<name>.json).
+/// Write a JSON report next to the bench output (`results/<name>.json`).
 pub fn save_json(name: &str, json: &Json) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
     std::fs::create_dir_all(&dir)?;

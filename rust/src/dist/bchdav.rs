@@ -42,13 +42,17 @@ use crate::util::Rng;
 // and distributed runs configure identically by construction.
 pub use crate::eig::laplacian_opts;
 
+/// What [`dist_bchdav`] returns: the sequential `BchdavResult` fields
+/// with the per-component [`Ledger`] in place of wall-clock timers.
 #[derive(Clone, Debug)]
 pub struct DistBchdavResult {
     /// Converged eigenvalues, ascending.
     pub eigenvalues: Vec<f64>,
     /// Corresponding eigenvectors (columns match `eigenvalues`).
     pub eigenvectors: Mat,
+    /// Outer (filter) iterations of the Davidson loop.
     pub iterations: usize,
+    /// Whether all k_want pairs converged within `itmax`.
     pub converged: bool,
     /// Total 1.5D SpMM applications (filter + block + residual).
     pub spmm_count: usize,
@@ -131,6 +135,7 @@ pub struct DistBackend<'a> {
 }
 
 impl<'a> DistBackend<'a> {
+    /// Back the five kernel slots with `dm`'s grid under `cost`.
     pub fn new(dm: &'a DistMatrix, cost: &'a CostModel) -> DistBackend<'a> {
         DistBackend { dm, cost }
     }

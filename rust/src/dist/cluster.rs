@@ -13,7 +13,7 @@
 //!   each Lloyd iteration is one assign superstep (every rank assigns
 //!   its local rows and accumulates local centroid sums + counts into
 //!   one `k*(d+1)` buffer), the per-rank partials merge through the
-//!   shared ascending-rank [`merge_partials`] path, and the iteration is
+//!   shared ascending-rank `merge_partials` path, and the iteration is
 //!   billed as the alpha-beta allreduce of exactly `k*(d+1)` words that
 //!   a real replicated-centroid K-means pays (the Lloyd stop flag rides
 //!   in the same collective and is not billed separately). k-means++
@@ -73,10 +73,15 @@ pub fn dist_row_normalize(x: &Mat, p: usize, led: &mut Ledger) -> Mat {
 /// across parallel/sequential rank execution, and equal to the
 /// sequential `kmeans` consumption at p = 1.
 pub struct DistKmeansResult {
+    /// Cluster id per row of the embedding.
     pub assignments: Vec<u32>,
+    /// Final k x d centroids (replicated on every rank).
     pub centroids: Mat,
+    /// Sum of squared distances to the assigned centroids.
     pub inertia: f64,
+    /// Lloyd iterations of the winning restart.
     pub iterations: usize,
+    /// Raw u64 draws consumed from the replicated K-means RNG stream.
     pub rng_draws: u64,
 }
 
@@ -273,12 +278,19 @@ pub fn dist_kmeans(
 /// parallel-vs-sequential rank-execution identity tests), and the one
 /// merged Ledger covering eigensolver + embed + kmeans components.
 pub struct DistClusteringResult {
+    /// Cluster id per graph node.
     pub assignments: Vec<u32>,
+    /// Final k x d centroids in the embedding space.
     pub centroids: Mat,
+    /// Sum of squared embedding distances to the assigned centroids.
     pub inertia: f64,
+    /// Converged eigenvalues of the Laplacian, ascending.
     pub eigenvalues: Vec<f64>,
+    /// Outer iterations of the distributed eigensolver.
     pub eig_iterations: usize,
+    /// Lloyd iterations of the winning K-means restart.
     pub kmeans_iterations: usize,
+    /// Whether the eigensolver converged within its iteration budget.
     pub converged: bool,
     /// Draws of the Davidson-core RNG stream (as `DistBchdavResult`).
     pub eig_rng_draws: u64,

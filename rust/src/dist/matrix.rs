@@ -9,8 +9,12 @@
 use crate::mpi_sim::Grid;
 use crate::sparse::{Csr, Partition2D};
 
+/// The 2D-partitioned sparse operator: grid index arithmetic plus the
+/// stationary per-process sub-matrices.
 pub struct DistMatrix {
+    /// Process-grid geometry (outer 2D ranges + nested 1D sub-blocks).
     pub grid: Grid,
+    /// The stored A[i, j] blocks (local row/column indices).
     pub part: Partition2D,
 }
 
@@ -25,10 +29,12 @@ impl DistMatrix {
         }
     }
 
+    /// Problem dimension (A is n x n).
     pub fn n(&self) -> usize {
         self.grid.n
     }
 
+    /// Grid side q (p = q^2 simulated processes).
     pub fn q(&self) -> usize {
         self.grid.q
     }
@@ -38,6 +44,7 @@ impl DistMatrix {
         self.grid.p()
     }
 
+    /// Stored nonzeros summed over all blocks.
     pub fn nnz(&self) -> usize {
         self.part.total_nnz()
     }

@@ -11,7 +11,7 @@
 //!   redistribution back to the V layout);
 //! * [`spmm_1d`] / [`rows_1d`] — the PARSEC-style 1D baseline whose
 //!   full-panel allgather volume is sqrt(p) times larger (Fig. 9);
-//! * [`tsqr`] — butterfly tall-skinny QR (Alg. 6), sign-normalized so it
+//! * [`tsqr`](fn@tsqr) — butterfly tall-skinny QR (Alg. 6), sign-normalized so it
 //!   agrees with the sequential Householder QR exactly;
 //! * [`dgks_orthonormalize`] — the PARSEC DGKS baseline whose per-column
 //!   allreduces stop scaling (Fig. 9's orthonormalization panel);
@@ -23,7 +23,7 @@
 //!   wrapper that runs the *shared* state machine
 //!   (`eig::core::davidson_core`) through [`DistBackend`], whose kernel
 //!   slots charge the per-component compute/comm
-//!   [`Ledger`](crate::mpi_sim::Ledger) the figure benches read
+//!   [`Ledger`] the figure benches read
 //!   (Figs. 6-8, Tables 1-2); `laplacian_opts` is re-exported from
 //!   `eig` (one options constructor for both backends);
 //! * [`dist_spectral_clustering`] — Algorithm 1 end-to-end: the
@@ -38,11 +38,13 @@
 //! Every collective is charged through the alpha-beta
 //! [`CostModel`](crate::mpi_sim::CostModel); every rank's local compute
 //! is actually executed — concurrently, through the rank-parallel
-//! superstep executor (`mpi_sim::exec`; kernels here are produce-then-
-//! merge with a fixed ascending-rank merge order, so parallel and
-//! sequential execution are bit-identical) — and billed at the slowest
-//! rank's share (see mpi_sim's ledger doc). See DESIGN.md for the
-//! per-figure index.
+//! superstep executor over the persistent worker pool (`mpi_sim::exec`;
+//! kernels here are produce-then-merge with a fixed ascending-rank
+//! merge order, so parallel and sequential execution are bit-identical)
+//! — and billed at the slowest rank's share (see mpi_sim's ledger doc).
+//! See DESIGN.md for the per-figure index.
+
+#![warn(missing_docs)]
 
 pub mod bchdav;
 pub mod cluster;

@@ -15,25 +15,35 @@ use crate::mpi_sim::CostModel;
 use crate::sparse::Csr;
 use crate::util::time_it;
 
+/// One process count of a Fig. 5 replay curve.
 #[derive(Clone, Copy, Debug)]
 pub struct ScalingPoint {
+    /// Simulated process count.
     pub p: usize,
     /// Modeled parallel time: compute + comm.
     pub time: f64,
+    /// T_seq / time (the Fig. 5 y-axis).
     pub speedup: f64,
+    /// Modeled compute share: T_seq / p.
     pub compute: f64,
+    /// Modeled per-iteration collectives summed over the run.
     pub comm: f64,
 }
 
+/// A baseline solver's whole Fig. 5 replay: one measured sequential
+/// run priced at every process count.
 #[derive(Clone, Debug)]
 pub struct SolverScaling {
+    /// Baseline name ("arpack" or "lobpcg").
     pub solver: &'static str,
     /// Measured sequential wall time (the p = 1 baseline).
     pub seq_compute: f64,
     /// Matvec/iteration count of the measured run (what the comm model
     /// multiplies).
     pub iterations: usize,
+    /// Whether the measured sequential run converged.
     pub converged: bool,
+    /// The priced curve, one entry per requested process count.
     pub points: Vec<ScalingPoint>,
 }
 

@@ -4,12 +4,12 @@
 //! 1.5D, per application (q x q grid, panel width k):
 //!
 //! 1. allgather — each column communicator j gathers its ranks' nested
-//!    1D V blocks into the full column range X[range_j]; per-process
+//!    1D V blocks into the full column range `X[range_j]`; per-process
 //!    cost `allgather((N/p) k, q)`, i.e. ~N k / sqrt(p) words;
-//! 2. local multiply — P(i, j) computes A[i, j] * X[range_j] (executed
+//! 2. local multiply — P(i, j) computes `A[i, j] * X[range_j]` (executed
 //!    for real; the slowest rank's share is what the ledger bills);
 //! 3. reduce-scatter — each row communicator i sums the q partial
-//!    U[range_i] panels and scatters the nested U blocks; per-process
+//!    `U[range_i]` panels and scatters the nested U blocks; per-process
 //!    cost `reduce_scatter((N/q) k, q)`, again ~N k / sqrt(p) words;
 //! 4. redistribution (the paper's remedy (b)) — the U-layout result is
 //!    sent back to the V layout for the next filter degree: one
@@ -28,7 +28,7 @@ use crate::util::SendPtr;
 
 /// A-Stationary 1.5D SpMM: Y = A X (or A^T X with `transposed`, using
 /// the transposed-ownership exchange pattern). Each rank produces its
-/// A[i, j] * X[range_j] partial concurrently; the partials are then
+/// `A[i, j] * X[range_j]` partial concurrently; the partials are then
 /// merged sequentially in ascending rank order (for each output row
 /// block, ascending column-block order), so the result is deterministic
 /// and exact: Y matches the sequential `Csr::spmm` to machine precision

@@ -14,9 +14,11 @@
 use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
 use crate::sparse::Csr;
 
+/// Two-level unsmoothed-aggregation preconditioner (see module doc).
 pub struct AmgLite {
     /// aggregate id per node
     pub agg_of: Vec<u32>,
+    /// number of aggregates (coarse dimension)
     pub n_agg: usize,
     /// lower Cholesky factor of the (shifted) coarse operator
     chol: Mat,

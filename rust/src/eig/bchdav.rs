@@ -18,6 +18,8 @@ use super::op::SpmmOp;
 use crate::linalg::{atb, matmul, qr_thin, Mat};
 use crate::util::{ComponentTimers, Rng};
 
+/// Options of Algorithm 2 (shared verbatim by the sequential and
+/// distributed drivers; see [`laplacian_opts`] for the paper defaults).
 #[derive(Clone, Debug)]
 pub struct BchdavOptions {
     /// Number of wanted (smallest) eigenpairs.
@@ -36,6 +38,8 @@ pub struct BchdavOptions {
     pub dim_max: usize,
     /// Outer spectrum bounds (analytic [0,2] for normalized Laplacians).
     pub bounds: SpectrumBounds,
+    /// Seed of the solver-owned RNG stream (initial block, replacement
+    /// draws for rank-deficient columns).
     pub seed: u64,
 }
 
@@ -66,13 +70,16 @@ pub fn laplacian_opts(k_want: usize, k_b: usize, m: usize, tol: f64) -> BchdavOp
     BchdavOptions::for_laplacian(k_want, k_b, m, tol)
 }
 
+/// What [`bchdav`] returns.
 #[derive(Clone, Debug)]
 pub struct BchdavResult {
     /// Converged eigenvalues, ascending (k_want of them on success).
     pub eigenvalues: Vec<f64>,
     /// Corresponding eigenvectors (n x k columns match `eigenvalues`).
     pub eigenvectors: Mat,
+    /// Outer (filter) iterations performed.
     pub iterations: usize,
+    /// Whether all k_want pairs converged within `itmax`.
     pub converged: bool,
     /// Total SpMM applications (filter + residual), for cost accounting.
     pub spmm_count: usize,
@@ -90,6 +97,7 @@ pub struct SeqBackend<'a, Op: SpmmOp + ?Sized> {
 }
 
 impl<'a, Op: SpmmOp + ?Sized> SeqBackend<'a, Op> {
+    /// Wrap an operator as the sequential backend.
     pub fn new(op: &'a Op) -> SeqBackend<'a, Op> {
         SeqBackend { op }
     }

@@ -11,6 +11,7 @@ use super::op::SpmmOp;
 use crate::linalg::Mat;
 use crate::util::Rng;
 
+/// Outer bounds [lower, upper] of the operator's whole spectrum.
 #[derive(Clone, Copy, Debug)]
 pub struct SpectrumBounds {
     /// Lower bound of the whole spectrum (Alg. 3's a0).

@@ -110,7 +110,9 @@ pub struct CoreResult<I> {
     pub eigenvalues: Vec<f64>,
     /// Corresponding eigenvectors (n x k columns match `eigenvalues`).
     pub eigenvectors: Mat,
+    /// Outer (filter) iterations performed.
     pub iterations: usize,
+    /// Whether all k_want pairs converged within `itmax`.
     pub converged: bool,
     /// Total SpMM applications (filter + block + residual).
     pub spmm_count: usize,

@@ -14,18 +14,23 @@ use super::op::SpmmOp;
 use crate::linalg::{atb, eigh, matmul, Mat};
 use crate::util::{ComponentTimers, Rng};
 
+/// Options of the thick-restart Lanczos baseline.
 #[derive(Clone, Debug)]
 pub struct LanczosOptions {
+    /// Number of wanted (smallest) eigenpairs.
     pub k_want: usize,
     /// Max basis size before a thick restart (ARPACK's ncv); default 2k+16.
     pub m_max: usize,
     /// Residual tolerance (absolute, like Bchdav's).
     pub tol: f64,
+    /// Total matvec cap (see [`LanczosOptions::new`]).
     pub itmax: usize,
+    /// Seed of the random start vector.
     pub seed: u64,
 }
 
 impl LanczosOptions {
+    /// ARPACK-shaped defaults: ncv = 2k + 16, capped total matvecs.
     pub fn new(k_want: usize, tol: f64) -> LanczosOptions {
         LanczosOptions {
             k_want,
@@ -41,15 +46,20 @@ impl LanczosOptions {
     }
 }
 
+/// What [`lanczos_smallest`] returns.
 #[derive(Clone, Debug)]
 pub struct LanczosResult {
+    /// Converged eigenvalues, ascending.
     pub eigenvalues: Vec<f64>,
+    /// Corresponding eigenvectors (columns match `eigenvalues`).
     pub eigenvectors: Mat,
     /// Total SpMV applications.
     pub matvecs: usize,
     /// Restart cycles.
     pub restarts: usize,
+    /// Whether all k_want pairs converged within the matvec cap.
     pub converged: bool,
+    /// Per-component wall time ("spmm", "orth", "rayleigh").
     pub timers: ComponentTimers,
 }
 

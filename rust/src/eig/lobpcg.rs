@@ -13,15 +13,21 @@ use super::op::SpmmOp;
 use crate::linalg::{atb, eigh, matmul, qr_thin, Mat};
 use crate::util::{ComponentTimers, Rng};
 
+/// Options of the LOBPCG baseline.
 #[derive(Clone, Debug)]
 pub struct LobpcgOptions {
+    /// Number of wanted (smallest) eigenpairs.
     pub k_want: usize,
+    /// Residual tolerance (absolute, like Bchdav's).
     pub tol: f64,
+    /// Maximum iterations.
     pub itmax: usize,
+    /// Seed of the random initial block.
     pub seed: u64,
 }
 
 impl LobpcgOptions {
+    /// Library-shaped defaults (1000-iteration cap).
     pub fn new(k_want: usize, tol: f64) -> LobpcgOptions {
         LobpcgOptions {
             k_want,
@@ -32,14 +38,20 @@ impl LobpcgOptions {
     }
 }
 
+/// What [`lobpcg`] returns.
 #[derive(Clone, Debug)]
 pub struct LobpcgResult {
+    /// Converged eigenvalues, ascending.
     pub eigenvalues: Vec<f64>,
+    /// Corresponding eigenvectors (columns match `eigenvalues`).
     pub eigenvectors: Mat,
+    /// Iterations performed.
     pub iterations: usize,
+    /// Whether all k_want pairs converged within `itmax`.
     pub converged: bool,
     /// SpMM block applications.
     pub spmm_count: usize,
+    /// Per-component wall time ("spmm", "orth", "rayleigh").
     pub timers: ComponentTimers,
 }
 

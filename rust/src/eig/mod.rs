@@ -2,10 +2,12 @@
 //! it is compared against (ARPACK-like thick-restart Lanczos, LOBPCG with
 //! optional AMG-lite preconditioning, power iteration for PIC).
 //!
-//! The Algorithm 2 state machine lives once in [`core`] as
-//! `davidson_core<B: DavidsonBackend>`; [`bchdav`] is its sequential
+//! The Algorithm 2 state machine lives once, as [`davidson_core`] in
+//! the `core` submodule; [`bchdav()`] is its sequential
 //! `SeqBackend<Op: SpmmOp>` instantiation and `dist::dist_bchdav` its
 //! distributed one, so solver variants land once instead of twice.
+
+#![warn(missing_docs)]
 
 pub mod amg;
 pub mod bchdav;

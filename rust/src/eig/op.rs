@@ -8,6 +8,8 @@
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 
+/// A symmetric operator exposed through its sparse panel product —
+/// everything the eigensolvers require of A.
 pub trait SpmmOp {
     /// Problem dimension (A is n x n symmetric).
     fn n(&self) -> usize;

@@ -12,17 +12,21 @@ use super::op::SpmmOp;
 use crate::linalg::Mat;
 use crate::util::Rng;
 
+/// Options of the PIC baseline.
 #[derive(Clone, Debug)]
 pub struct PicOptions {
     /// Embedding dimension (number of pseudo-eigenvectors).
     pub dim: usize,
     /// Velocity threshold: stop when the per-step change stalls.
     pub eps: f64,
+    /// Maximum power-iteration steps.
     pub itmax: usize,
+    /// Seed of the random initial block.
     pub seed: u64,
 }
 
 impl PicOptions {
+    /// MLlib-shaped defaults (eps = 1e-5, 200-step cap).
     pub fn new(dim: usize) -> PicOptions {
         PicOptions {
             dim,
@@ -33,9 +37,11 @@ impl PicOptions {
     }
 }
 
+/// What [`pic_embedding`] returns.
 pub struct PicResult {
     /// n x dim pseudo-eigenvector embedding.
     pub embedding: Mat,
+    /// Power-iteration steps performed.
     pub iterations: usize,
     /// SpMM applications (for cost comparisons).
     pub spmm_count: usize,

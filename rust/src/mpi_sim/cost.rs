@@ -12,15 +12,21 @@
 /// (bandwidth terms) and the resulting modeled wall-clock seconds.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Charge {
+    /// Latency-term message count of the collective.
     pub messages: f64,
+    /// Bandwidth-term word count (f64 words) of the collective.
     pub words: f64,
+    /// Modeled wall-clock seconds: `alpha * messages + beta * words`
+    /// under the collective's closed form.
     pub seconds: f64,
 }
 
 impl Charge {
+    /// A free charge (what collectives cost at p = 1).
     pub fn zero() -> Charge {
         Charge::default()
     }
+    /// Accumulate another charge into this one, term by term.
     pub fn add(&mut self, other: Charge) {
         self.messages += other.messages;
         self.words += other.words;
@@ -28,6 +34,8 @@ impl Charge {
     }
 }
 
+/// The alpha-beta machine constants and the closed-form collective
+/// costs built from them (Chan et al.; the paper's §3 analysis).
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     /// Message setup latency, seconds (paper's alpha).

@@ -1,22 +1,35 @@
-//! Rank-parallel superstep executor.
+//! Rank-parallel superstep executor over the persistent worker pool.
 //!
 //! A lockstep SPMD superstep runs every simulated rank's local work and
-//! bills the ledger from the per-rank measured times. Until this module
-//! existed the ranks ran *sequentially*, so a p = 121 sweep paid 121x
-//! serial wall-clock; here the rank bodies execute concurrently on the
-//! scoped thread pool — which is what a real cluster does — while the
-//! billing stays deterministic because it is computed from the per-rank
-//! measurements, not from the superstep's own wall time:
+//! bills the ledger from the per-rank measured times. Two generations of
+//! executor preceded this one: the original sequential loop (a p = 121
+//! sweep paid 121x serial wall-clock), then a scoped-thread executor
+//! that spawned fresh threads *per superstep* — fine for panel-sized
+//! supersteps, a net loss for microsecond-scale ones (a DGKS per-column
+//! pass, a small-n K-means seeding allreduce), where per-rank spawn cost
+//! exceeded the body itself. Rank bodies now go to the process-global
+//! persistent pool (`util::threadpool::WorkerPool`): workers park
+//! between supersteps and receive each superstep through an epoch
+//! handoff, so the small-superstep path pays a condvar wake instead of a
+//! thread spawn (measured by the small-superstep table of
+//! `benches/kernels.rs`). The executor's observable contract is
+//! unchanged from the scoped generation:
 //!
 //! * rank bodies are `Fn(rank) -> T + Sync` with no shared `&mut`
-//!   capture; each rank is timed individually inside its thread;
+//!   capture; each rank is timed individually inside whichever thread
+//!   executes it, so billing never includes pool wake latency;
 //! * outputs come back in ascending rank order (the *merge* phase every
 //!   caller runs afterwards is sequential and deterministic, so parallel
 //!   and sequential execution produce bit-identical results);
-//! * while rank bodies execute, the native kernels' thread budget drops
+//! * while a rank body executes, the thread running it is inside the
+//!   thread-local rank scope and the native kernels' thread budget drops
 //!   to 1 (`util::thread_budget`) in *both* modes — a simulated rank
 //!   models one single-core MPI process, so per-rank times mean the same
-//!   thing parallel or sequential and never oversubscribe the machine.
+//!   thing parallel or sequential and never oversubscribe the machine;
+//! * a panicking rank body aborts the superstep: remaining unclaimed
+//!   ranks are skipped, the superstep quiesces, and the **original
+//!   panic payload** is re-thrown on the submitting thread with no pool
+//!   state held — the next superstep reuses the pool normally.
 //!
 //! `CHEBDAV_SEQ_RANKS=1` (or config `[run] seq_ranks`, or
 //! [`set_seq_ranks`] programmatically) restores the sequential loop for
@@ -24,8 +37,7 @@
 //! measured compute — solver output, RNG stream, modeled comm — is
 //! identical across modes (pinned by `tests/rank_parallel.rs`).
 
-use crate::util::parallel_map;
-use crate::util::threadpool::{configured_threads, enter_rank_scope, in_rank_scope};
+use crate::util::threadpool::{configured_threads, enter_rank_scope, in_rank_scope, WorkerPool};
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -50,6 +62,26 @@ fn env_seq_ranks() -> bool {
 /// execution, overriding `CHEBDAV_SEQ_RANKS`; `None` restores
 /// environment control. Process-global — meant for the config
 /// `[run] seq_ranks` escape hatch and for tests that compare modes.
+///
+/// Everything observable except measured wall-clock is identical across
+/// modes, so flipping it mid-run only changes how the remaining
+/// supersteps are scheduled:
+///
+/// ```
+/// use dist_chebdav::mpi_sim::{set_seq_ranks, Ledger};
+///
+/// set_seq_ranks(Some(true)); // force the pre-pool sequential loop
+/// let mut seq = Ledger::new();
+/// let a = seq.superstep("orth", 3, |rank| rank + 1);
+///
+/// set_seq_ranks(Some(false)); // force the persistent-pool path
+/// let mut par = Ledger::new();
+/// let b = par.superstep("orth", 3, |rank| rank + 1);
+///
+/// set_seq_ranks(None); // back to CHEBDAV_SEQ_RANKS control
+/// assert_eq!(a, b); // outputs are mode-independent, in rank order
+/// assert_eq!(a, vec![1, 2, 3]);
+/// ```
 pub fn set_seq_ranks(mode: Option<bool>) {
     MODE.store(
         match mode {
@@ -74,7 +106,9 @@ pub fn seq_ranks() -> bool {
 /// One executed superstep: per-rank outputs and measured seconds, both
 /// in ascending rank order.
 pub struct RankRun<T> {
+    /// `body(r)` for every rank, index = rank.
     pub outputs: Vec<T>,
+    /// Measured seconds of each rank's body, index = rank.
     pub seconds: Vec<f64>,
 }
 
@@ -104,8 +138,9 @@ pub fn slowest_share(weights: &[f64]) -> f64 {
 }
 
 /// Execute one superstep's rank-local work: `body(r)` for every rank in
-/// `0..ranks`, each timed individually, concurrently on the scoped pool
-/// unless sequential mode is active (or only one worker / rank exists).
+/// `0..ranks`, each timed individually, concurrently on the persistent
+/// worker pool unless sequential mode is active (or only one worker /
+/// rank exists, or this is a nested superstep — those run inline).
 /// While bodies run, nested native kernels see a thread budget of 1.
 pub fn run_ranks<T: Send>(ranks: usize, body: impl Fn(usize) -> T + Sync) -> RankRun<T> {
     run_ranks_mode(ranks, body, seq_ranks())
@@ -124,9 +159,11 @@ fn run_ranks_mode<T: Send>(
     let outer = if in_rank_scope() { 1 } else { configured_threads() };
     let timed = |r: usize| {
         // The rank scope is entered on the thread that executes the
-        // body — the executor's worker thread when parallel, this
-        // thread when sequential — so the budget rule confines exactly
-        // the kernels the body calls and nothing else in the process.
+        // body — a pool worker or the submitting thread when parallel,
+        // this thread when sequential — so the budget rule confines
+        // exactly the kernels the body calls and nothing else in the
+        // process. Timing starts inside the executing thread: pool
+        // handoff latency is never billed.
         let _scope = enter_rank_scope();
         let t0 = Instant::now();
         let out = body(r);
@@ -135,7 +172,7 @@ fn run_ranks_mode<T: Send>(
     let pairs: Vec<(T, f64)> = if ranks <= 1 || outer <= 1 || seq {
         (0..ranks).map(timed).collect()
     } else {
-        parallel_map(ranks, outer.min(ranks), timed)
+        WorkerPool::global().run(ranks, outer.min(ranks), timed)
     };
     let mut outputs = Vec::with_capacity(ranks);
     let mut seconds = Vec::with_capacity(ranks);
@@ -170,6 +207,54 @@ mod tests {
         for seq in [true, false] {
             let budgets = run_ranks_mode(4, |_| crate::util::thread_budget(), seq);
             assert_eq!(budgets.outputs, vec![1, 1, 1, 1], "seq={seq}");
+        }
+    }
+
+    #[test]
+    fn nested_supersteps_run_inline() {
+        use crate::util::thread_budget;
+        // a rank body that opens its own superstep must not re-enter the
+        // pool (the inner ranks run inline on the budgeted thread)
+        for seq in [true, false] {
+            let run = run_ranks_mode(
+                3,
+                |r| {
+                    let inner = run_ranks_mode(4, move |i| (r, i, thread_budget()), seq);
+                    inner.outputs
+                },
+                seq,
+            );
+            for (r, inner) in run.outputs.iter().enumerate() {
+                let want: Vec<(usize, usize, usize)> = (0..4).map(|i| (r, i, 1)).collect();
+                assert_eq!(inner, &want, "seq={seq} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_rank_aborts_with_original_payload_then_pool_is_reusable() {
+        for seq in [false, true] {
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_ranks_mode(
+                    8,
+                    |r| {
+                        if r == 5 {
+                            panic!("rank 5 body failed");
+                        }
+                        r
+                    },
+                    seq,
+                )
+            }))
+            .unwrap_err();
+            let msg = crate::util::panic_message(&*err);
+            assert_eq!(msg, "rank 5 body failed", "seq={seq}");
+            // the next superstep must be unaffected, in either mode
+            let ok = run_ranks_mode(8, |r| r * 10, seq);
+            assert_eq!(ok.outputs, (0..8).map(|r| r * 10).collect::<Vec<_>>());
+            // and the rank-scope flag must not have leaked from the
+            // panicking bodies (the guard unwinds with them)
+            assert!(!crate::util::threadpool::in_rank_scope(), "seq={seq}");
         }
     }
 

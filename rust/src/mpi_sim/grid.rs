@@ -10,6 +10,7 @@
 
 use crate::sparse::split_ranges;
 
+/// The q x q process grid and its nested 1D dense-panel partition.
 #[derive(Clone, Debug)]
 pub struct Grid {
     /// grid side; p = q * q
@@ -23,6 +24,8 @@ pub struct Grid {
 }
 
 impl Grid {
+    /// Build the grid for problem dimension `n` on a q x q layout,
+    /// including the nested 1D partition of Fig. 1.
     pub fn new(n: usize, q: usize) -> Grid {
         assert!(q >= 1);
         let outer = split_ranges(n, q);
@@ -35,6 +38,7 @@ impl Grid {
         Grid { q, n, outer, flat }
     }
 
+    /// Simulated process count p = q^2.
     pub fn p(&self) -> usize {
         self.q * self.q
     }

@@ -20,6 +20,13 @@ use super::cost::Charge;
 use super::exec;
 use std::collections::BTreeMap;
 
+/// Per-component cost accumulator of one simulated distributed run:
+/// measured compute (billed from per-rank times by [`superstep`] /
+/// [`superstep_weighted`]) plus modeled communication ([`charge`]).
+///
+/// [`superstep`]: Ledger::superstep
+/// [`superstep_weighted`]: Ledger::superstep_weighted
+/// [`charge`]: Ledger::charge
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     /// measured local compute per component (sum over supersteps of
@@ -34,16 +41,29 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// An empty ledger (no components charged yet).
     pub fn new() -> Ledger {
         Ledger::default()
     }
 
-    /// Execute one lockstep superstep through the rank-parallel executor:
-    /// run `body(rank)` for every rank, time each, and charge the
-    /// max-over-ranks measured time to `component`. The body must be
-    /// free of shared `&mut` capture (ranks may run concurrently);
-    /// outputs come back in ascending rank order for the caller's
-    /// deterministic merge.
+    /// Execute one lockstep superstep through the rank-parallel executor
+    /// (rank bodies dispatch to the persistent worker pool unless
+    /// sequential mode is active): run `body(rank)` for every rank, time
+    /// each, and charge the max-over-ranks measured time to `component`.
+    /// The body must be free of shared `&mut` capture (ranks may run
+    /// concurrently); outputs come back in ascending rank order for the
+    /// caller's deterministic merge.
+    ///
+    /// ```
+    /// use dist_chebdav::mpi_sim::Ledger;
+    ///
+    /// let mut led = Ledger::new();
+    /// // one superstep over 4 simulated ranks; outputs in rank order
+    /// let squares = led.superstep("spmm", 4, |rank| rank * rank);
+    /// assert_eq!(squares, vec![0, 1, 4, 9]);
+    /// // the max-over-ranks measured time landed on this component
+    /// assert_eq!(led.components(), vec!["spmm"]);
+    /// ```
     pub fn superstep<T: Send>(
         &mut self,
         component: &'static str,
@@ -86,10 +106,12 @@ impl Ledger {
         *self.words.entry(component).or_insert(0.0) += c.words;
     }
 
+    /// Accumulated measured compute seconds of one component.
     pub fn compute_of(&self, component: &str) -> f64 {
         self.compute.get(component).copied().unwrap_or(0.0)
     }
 
+    /// Accumulated modeled communication seconds of one component.
     pub fn comm_of(&self, component: &str) -> f64 {
         self.comm.get(component).copied().unwrap_or(0.0)
     }
@@ -99,18 +121,22 @@ impl Ledger {
         self.compute_of(component) + self.comm_of(component)
     }
 
+    /// Measured compute summed over all components.
     pub fn total_compute(&self) -> f64 {
         self.compute.values().sum()
     }
 
+    /// Modeled communication summed over all components.
     pub fn total_comm(&self) -> f64 {
         self.comm.values().sum()
     }
 
+    /// Total modeled wall time of the run (compute + comm).
     pub fn total_time(&self) -> f64 {
         self.total_compute() + self.total_comm()
     }
 
+    /// All component keys charged so far, sorted and deduplicated.
     pub fn components(&self) -> Vec<&'static str> {
         let mut keys: Vec<&'static str> = self
             .compute
@@ -123,6 +149,7 @@ impl Ledger {
         keys
     }
 
+    /// Add every charge of `other` into this ledger, key by key.
     pub fn merge(&mut self, other: &Ledger) {
         for (k, v) in &other.compute {
             *self.compute.entry(k).or_insert(0.0) += v;

@@ -4,9 +4,10 @@
 //! reproduces the *behaviour* of that environment on one machine:
 //!
 //! * every rank's local computation is actually executed — concurrently
-//!   on the scoped thread pool (`exec`, the rank-parallel superstep
-//!   executor; `CHEBDAV_SEQ_RANKS=1` restores the sequential loop) —
-//!   and its wall time measured per rank; the billing *formulas* (max
+//!   on the persistent rank worker pool (`exec`, the rank-parallel
+//!   superstep executor; `CHEBDAV_SEQ_RANKS=1` restores the sequential
+//!   loop) — and its wall time measured per rank; the billing *formulas*
+//!   (max
 //!   over ranks, or the slowest rank's share under a known work
 //!   distribution) and everything else observable (results, RNG stream,
 //!   modeled comm) are identical in both modes, while the measured
@@ -21,6 +22,8 @@
 //! The reported "parallel time" of a run is measured-compute +
 //! modeled-comm per component, accumulated in the Ledger. The scalability
 //! figures (Figs. 5-9) read these ledgers.
+
+#![warn(missing_docs)]
 
 pub mod cost;
 pub mod exec;

@@ -33,7 +33,7 @@ pub struct Partition2D {
     pub n: usize,
     pub row_ranges: Vec<(usize, usize)>,
     pub col_ranges: Vec<(usize, usize)>,
-    /// blocks[i][j] = A[i, j] (local indices).
+    /// `blocks[i][j]` = A[i, j] (local indices).
     pub blocks: Vec<Vec<Csr>>,
 }
 

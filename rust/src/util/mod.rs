@@ -1,4 +1,6 @@
-//! Shared substrates: PRNG, timing, JSON writing, scoped thread pool.
+//! Shared substrates: PRNG, timing, JSON writing, and the thread
+//! substrate (scoped parallel-for + the persistent superstep worker
+//! pool; see `threadpool`).
 
 pub mod json;
 pub mod rng;
@@ -8,8 +10,8 @@ pub mod timer;
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{
-    configured_threads, hardware_threads, parallel_for_chunks, parallel_map, set_threads,
-    thread_budget,
+    configured_threads, hardware_threads, panic_message, parallel_for_chunks, parallel_map,
+    pool_workers, set_threads, thread_budget,
 };
 pub(crate) use threadpool::SendPtr;
 pub use timer::{bench, time_it, BenchStat, ComponentTimers, Instrument};

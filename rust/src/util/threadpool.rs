@@ -1,13 +1,26 @@
-//! Tiny scoped parallel-for substrate (no rayon in the offline crate set).
+//! Thread substrate (no rayon in the offline crate set): a scoped
+//! parallel-for for the native kernels and a persistent worker pool for
+//! the simulated distributed runtime.
 //!
-//! `parallel_for_chunks` splits an index range into contiguous chunks and
-//! runs them on `std::thread::scope` threads. Two layers share it:
+//! Two layers, two mechanisms:
 //!
-//! * the native SpMM / GEMM hot paths chunk their row loops over it;
-//! * the simulated distributed runtime executes rank-local superstep
-//!   bodies concurrently through it (`mpi_sim::exec`).
+//! * the native SpMM / GEMM hot paths chunk their row loops over
+//!   [`parallel_for_chunks`] — scoped threads, spawned per call. Those
+//!   kernels run for long enough (past a size cutoff) that spawn cost
+//!   is noise;
+//! * the simulated distributed runtime (`mpi_sim::exec`) dispatches
+//!   every superstep's rank bodies to the process-global `WorkerPool`:
+//!   `configured_threads() - 1` workers, spawned lazily on the first
+//!   parallel superstep, that **park between supersteps** and receive
+//!   work through an epoch-numbered handoff (the submitting thread is
+//!   the remaining participant). Supersteps in this codebase can be
+//!   microsecond-scale — a DGKS per-column pass, a small-n K-means
+//!   seeding allreduce — and a parked-worker wake costs ~1-10 us where
+//!   a thread spawn costs tens of microseconds per rank, which is the
+//!   difference between the executor winning and losing on those paths
+//!   (`benches/kernels.rs`, the small-superstep table).
 //!
-//! To keep those two layers from oversubscribing each other (outer ranks
+//! To keep the two layers from oversubscribing each other (outer ranks
 //! x inner row chunks), every data-parallel kernel sizes itself with
 //! [`thread_budget`] instead of [`hardware_threads`]: inside a superstep
 //! the budget is 1 — a simulated rank models one single-core MPI process,
@@ -16,7 +29,9 @@
 //! config `[run] threads` knob; default [`hardware_threads`]). See
 //! DESIGN.md §Perf.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
 /// Number of hardware threads available to this process.
 pub fn hardware_threads() -> usize {
@@ -30,7 +45,7 @@ static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
     /// Depth of simulated-rank scopes active on *this* thread (see
-    /// [`enter_rank_scope`]). Thread-local on purpose: the executor's
+    /// [`enter_rank_scope`]). Thread-local on purpose: the pool's
     /// worker threads flag themselves while running a rank body, so the
     /// budget rule confines exactly the kernels those bodies call —
     /// unrelated threads (other tests in the same process, embedding
@@ -41,6 +56,8 @@ thread_local! {
 /// Set the worker-thread count for all data-parallel kernels and the
 /// rank-parallel superstep executor (the CLI `--threads` / config
 /// `[run] threads` knob). `0` restores the default (hardware_threads).
+/// The persistent pool re-reads this per superstep: lowering it idles
+/// the excess workers (they stay parked), raising it grows the pool.
 pub fn set_threads(n: usize) {
     CONFIGURED_THREADS.store(n, Ordering::SeqCst);
 }
@@ -73,7 +90,7 @@ pub fn in_rank_scope() -> bool {
 /// RAII marker for "this thread is executing a simulated rank body":
 /// native kernels called from it drop to a single thread until the
 /// guard is released. `mpi_sim::exec::run_ranks` holds one around every
-/// rank body — on the executor's worker threads when parallel, on the
+/// rank body — on the pool's worker threads when parallel, on the
 /// calling thread when sequential — so billed per-rank times mean the
 /// same thing in either mode.
 pub(crate) struct RankScopeGuard;
@@ -87,6 +104,293 @@ impl Drop for RankScopeGuard {
 pub(crate) fn enter_rank_scope() -> RankScopeGuard {
     RANK_SCOPE_DEPTH.with(|d| d.set(d.get() + 1));
     RankScopeGuard
+}
+
+/// Best-effort extraction of a panic payload's human-readable message —
+/// the `&str` / `String` payloads `panic!` produces (empty string for
+/// anything else). Pairs with the pool's abort semantics: the payload a
+/// superstep re-throws is the original one, so tests assert on exactly
+/// the message the rank body panicked with.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .map(String::from)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default()
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// The pool's invariants are restored before any panic propagates (the
+/// payload travels through `Job::panic`, not through poisoning), so a
+/// poisoned flag carries no information here and must not wedge later
+/// supersteps.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Type-erased handle to the current superstep's [`Job`], published to
+/// the workers under the pool mutex. `run` is the monomorphized
+/// claim-loop entry; `data` points at a `Job` pinned on the submitting
+/// thread's stack.
+#[derive(Clone, Copy)]
+struct RawJob {
+    data: *const (),
+    run: unsafe fn(*const ()),
+}
+
+// Safety: the pointed-at Job is Sync (shared &-access only: atomics, a
+// mutex, a Sync closure, and disjoint raw slot writes), and the submit
+// protocol keeps it alive until every participating worker has
+// decremented `remaining` — no worker touches the pointer after that.
+unsafe impl Send for RawJob {}
+
+/// One superstep's shared state: a claim counter handing each index to
+/// exactly one participant, the output slots, and the first panic
+/// payload if any rank body panicked.
+struct Job<'body, T, F: Fn(usize) -> T + Sync> {
+    /// Next unclaimed index; `fetch_add` hands each out exactly once.
+    next: AtomicUsize,
+    n: usize,
+    /// Disjoint output slots, index i written by whoever claimed i.
+    slots: SendPtr<std::mem::MaybeUninit<T>>,
+    body: &'body F,
+    /// Set on the first panic: participants stop claiming new indices.
+    aborted: AtomicBool,
+    /// First panic payload, re-thrown by the submitter once the
+    /// superstep has fully quiesced.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl<T, F: Fn(usize) -> T + Sync> Job<'_, T, F> {
+    /// Claim and run indices until they run out or a panic aborts the
+    /// job. Runs on every participant: the pool workers and the
+    /// submitting thread alike.
+    fn claim_loop(&self) {
+        while !self.aborted.load(Ordering::Relaxed) {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| (self.body)(i))) {
+                Ok(out) => {
+                    // Safety: the fetch_add above hands out each index
+                    // exactly once, so slot writes are disjoint.
+                    unsafe { (*self.slots.0.add(i)).write(out) };
+                }
+                Err(payload) => {
+                    self.aborted.store(true, Ordering::Relaxed);
+                    let mut first = lock_unpoisoned(&self.panic);
+                    if first.is_none() {
+                        *first = Some(payload);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Monomorphized claim-loop entry the type-erased [`RawJob`] stores.
+///
+/// Safety: `data` must point at a live `Job<'_, T, F>` (upheld by the
+/// submit protocol: the submitter blocks until all participants are
+/// done before the Job leaves scope).
+unsafe fn run_job_erased<T, F: Fn(usize) -> T + Sync>(data: *const ()) {
+    let job = &*(data as *const Job<'_, T, F>);
+    job.claim_loop();
+}
+
+struct PoolShared {
+    /// Bumped once per submitted superstep; workers key their handoff
+    /// on "epoch changed and a job is published".
+    epoch: u64,
+    /// The in-flight superstep, cleared by the submitter once every
+    /// participant has finished (so no stale pointer outlives its job).
+    job: Option<RawJob>,
+    /// Workers with id < limit participate in the current epoch; the
+    /// rest stay parked (this is how a lowered `set_threads` takes
+    /// effect without killing threads).
+    limit: usize,
+    /// Participating workers that have not yet finished the current
+    /// epoch. The submitter waits for 0 before releasing the job.
+    remaining: usize,
+    /// Worker threads created so far (monotone; the pool never shrinks).
+    spawned: usize,
+}
+
+/// The persistent rank-worker pool behind `mpi_sim::exec`: lazily
+/// spawned worker threads that park on a condvar between supersteps and
+/// receive each superstep's rank bodies through an epoch-numbered
+/// handoff — no thread spawn on the superstep path.
+///
+/// Protocol, per superstep (one at a time, serialized on `submit`):
+///
+/// 1. the submitter ensures `width - 1` workers exist, publishes a
+///    type-erased [`RawJob`] under the mutex, bumps `epoch`, sets
+///    `remaining = width - 1`, and wakes the workers;
+/// 2. workers with id < limit run the job's claim loop (an atomic
+///    counter hands each rank index to exactly one participant); the
+///    submitter runs the same loop itself, so `width` threads
+///    participate in total;
+/// 3. each worker decrements `remaining` when its claim loop exits; the
+///    submitter waits for 0, unpublishes the job, and only then returns
+///    (or re-throws a rank body's panic) — the Job can sit on the
+///    submitter's stack because nothing can outlive this handshake.
+///
+/// Panic semantics: a panicking rank body marks the job aborted (no new
+/// claims), its payload is stashed, the superstep quiesces, and the
+/// submitter re-throws the **original payload** with no lock held — the
+/// pool is immediately reusable for the next superstep.
+pub(crate) struct WorkerPool {
+    shared: Mutex<PoolShared>,
+    /// Workers park here between supersteps.
+    work_cv: Condvar,
+    /// The submitter parks here while the last participants finish.
+    done_cv: Condvar,
+    /// One superstep in flight at a time; nested supersteps never get
+    /// here (`mpi_sim::exec` runs them inline on the already-budgeted
+    /// thread), so this cannot self-deadlock.
+    submit: Mutex<()>,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Number of persistent superstep workers spawned so far (0 until the
+/// first parallel superstep). Exposed for the pool-lifecycle tests and
+/// `chebdav info`: repeated supersteps at a fixed thread configuration
+/// must not grow this.
+pub fn pool_workers() -> usize {
+    POOL.get().map_or(0, |p| lock_unpoisoned(&p.shared).spawned)
+}
+
+impl WorkerPool {
+    /// The process-global pool, created (empty) on first use.
+    pub(crate) fn global() -> &'static WorkerPool {
+        POOL.get_or_init(|| WorkerPool {
+            shared: Mutex::new(PoolShared {
+                epoch: 0,
+                job: None,
+                limit: 0,
+                remaining: 0,
+                spawned: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        })
+    }
+
+    /// A worker's whole life: park until a new epoch publishes a job,
+    /// join it if this worker's id is below the epoch's limit, run the
+    /// claim loop, report done, park again.
+    fn worker_loop(&self, id: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut g = lock_unpoisoned(&self.shared);
+                while g.epoch == seen || g.job.is_none() {
+                    g = self.work_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+                seen = g.epoch;
+                if id < g.limit {
+                    g.job
+                } else {
+                    None
+                }
+            };
+            let Some(job) = job else { continue };
+            // Safety: the submitter keeps the Job alive until every
+            // participant has decremented `remaining`, which happens
+            // strictly after this call returns.
+            unsafe { (job.run)(job.data) };
+            let mut g = lock_unpoisoned(&self.shared);
+            g.remaining -= 1;
+            if g.remaining == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Run `body(i)` for every `i in 0..n` on `width` participants (the
+    /// calling thread plus `width - 1` pool workers), returning outputs
+    /// in index order. If a body panics, the superstep quiesces, every
+    /// already-written output is leaked (not dropped) and the original
+    /// payload is re-thrown on the calling thread. Callers guarantee
+    /// `n >= 2` and `width >= 2` (smaller supersteps run inline in
+    /// `mpi_sim::exec`).
+    pub(crate) fn run<T, F>(&'static self, n: usize, width: usize, body: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        debug_assert!(n >= 2 && width >= 2, "inline path handles n/width < 2");
+        let helpers = width.min(n) - 1;
+        let mut slots: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, std::mem::MaybeUninit::uninit);
+        let job = Job {
+            next: AtomicUsize::new(0),
+            n,
+            slots: SendPtr(slots.as_mut_ptr()),
+            body: &body,
+            aborted: AtomicBool::new(false),
+            panic: Mutex::new(None),
+        };
+        let raw = RawJob {
+            data: &job as *const Job<'_, T, F> as *const (),
+            run: run_job_erased::<T, F>,
+        };
+
+        let turn = lock_unpoisoned(&self.submit);
+        {
+            let mut g = lock_unpoisoned(&self.shared);
+            while g.spawned < helpers {
+                let id = g.spawned;
+                let this: &'static WorkerPool = self;
+                let _ = std::thread::Builder::new()
+                    .name(format!("chebdav-rank-{id}"))
+                    .spawn(move || this.worker_loop(id))
+                    .expect("failed to spawn a persistent superstep worker");
+                g.spawned += 1;
+            }
+            g.epoch = g.epoch.wrapping_add(1);
+            g.limit = helpers;
+            g.remaining = helpers;
+            g.job = Some(raw);
+            self.work_cv.notify_all();
+        }
+
+        // The submitter is a participant too: it claims ranks instead of
+        // idling, so `width` bodies run concurrently in total and the
+        // first rank needs no handoff at all.
+        job.claim_loop();
+
+        {
+            let mut g = lock_unpoisoned(&self.shared);
+            while g.remaining > 0 {
+                g = self.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            g.job = None;
+        }
+        drop(turn);
+
+        if let Some(payload) = lock_unpoisoned(&job.panic).take() {
+            // Initialized slots are leaked, not dropped (MaybeUninit),
+            // while the buffer itself is freed — same caveat as
+            // `parallel_map`. No pool lock is held: the next superstep
+            // proceeds normally.
+            resume_unwind(payload);
+        }
+        // Safety: no recorded panic means the claim loop never aborted,
+        // so every index in 0..n was claimed and its slot written
+        // exactly once; MaybeUninit<T> has the same layout as T. The
+        // worker's final `remaining` decrement under the shared mutex
+        // happens-before our read of 0, which orders their slot writes
+        // before this read.
+        unsafe {
+            let mut slots = std::mem::ManuallyDrop::new(slots);
+            Vec::from_raw_parts(slots.as_mut_ptr() as *mut T, n, slots.capacity())
+        }
+    }
 }
 
 /// Run `body(chunk_start, chunk_end)` over disjoint chunks of `0..n` on up
@@ -115,12 +419,14 @@ where
     });
 }
 
-/// Map `f` over `0..n` in parallel writing into the returned Vec.
-/// Results are written through `MaybeUninit`, so `T` needs neither
-/// `Clone` nor `Default` and no placeholder values are constructed.
-/// Caveat: if `f` panics, elements already written are leaked (not
-/// dropped) while the panic unwinds — safe, but don't rely on `Drop`
-/// side effects of `T` across a panicking map.
+/// Map `f` over `0..n` in parallel writing into the returned Vec, on
+/// *scoped* (per-call) threads — the spawn-per-call counterpart of
+/// `WorkerPool::run`, kept for one-shot call sites that should not
+/// touch the persistent pool. Results are written through `MaybeUninit`,
+/// so `T` needs neither `Clone` nor `Default` and no placeholder values
+/// are constructed. Caveat: if `f` panics, elements already written are
+/// leaked (not dropped) while the panic unwinds — safe, but don't rely
+/// on `Drop` side effects of `T` across a panicking map.
 pub fn parallel_map<T: Send, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Sync,
@@ -183,6 +489,52 @@ mod tests {
         parallel_for_chunks(0, 4, |lo, hi| assert_eq!(lo, hi));
         let got = parallel_map(1, 8, |i| i + 1);
         assert_eq!(got, vec![1]);
+    }
+
+    #[test]
+    fn pool_run_matches_serial_and_is_in_order() {
+        // non-Copy, non-Default outputs through the persistent pool
+        let got = WorkerPool::global().run(97, 4, |i| vec![i; 3]);
+        let want: Vec<Vec<usize>> = (0..97).map(|i| vec![i; 3]).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pool_run_uses_worker_threads() {
+        // Whoever claims rank 0 sleeps: if that is the submitter, the
+        // parked workers have tens of milliseconds to wake and claim the
+        // remaining ranks; if it is a worker, the assertion is already
+        // satisfied. Either way pool threads must execute rank bodies.
+        let ids = WorkerPool::global().run(64, 8, |i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            std::thread::current().name().map(String::from)
+        });
+        assert_eq!(ids.len(), 64);
+        let pooled = ids
+            .iter()
+            .filter(|n| n.as_deref().is_some_and(|s| s.starts_with("chebdav-rank-")))
+            .count();
+        assert!(pooled > 0, "no rank body ran on a pool worker: {ids:?}");
+    }
+
+    #[test]
+    fn pool_panic_rethrows_original_payload_and_pool_survives() {
+        let pool = WorkerPool::global();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, 4, |i| {
+                if i == 7 {
+                    panic!("rank 7 exploded");
+                }
+                i
+            })
+        }))
+        .unwrap_err();
+        assert_eq!(panic_message(&*err), "rank 7 exploded");
+        // the pool must be immediately reusable after the abort
+        let got = pool.run(16, 4, |i| i + 1);
+        assert_eq!(got, (1..=16).collect::<Vec<_>>());
     }
 
     #[test]

@@ -129,6 +129,74 @@ fn e2e_clustering_parallel_and_sequential_rank_execution_bit_identical() {
 }
 
 #[test]
+fn pool_reuses_workers_across_many_supersteps() {
+    // Persistent-pool lifecycle: the first parallel superstep spawns the
+    // workers, every later superstep reuses them. 150 consecutive
+    // supersteps (both billing forms, mixed rank counts <= the warm-up
+    // width) must not grow the thread count, must keep outputs in rank
+    // order, and must keep the thread-budget rule (budget 1 inside every
+    // pooled rank body).
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_seq_ranks(Some(false));
+    let mut led = Ledger::new();
+    // warm-up at the widest shape this test uses
+    let out = led.superstep("spmm", 64, |r| r);
+    assert_eq!(out.len(), 64);
+    let spawned = dist_chebdav::util::pool_workers();
+    for step in 0..150 {
+        let ranks = [64usize, 16, 9][step % 3];
+        if step % 2 == 0 {
+            let budgets = led.superstep("spmm", ranks, |_| dist_chebdav::util::thread_budget());
+            assert!(budgets.iter().all(|&b| b == 1), "step {step}");
+        } else {
+            let weights = vec![1.0; ranks];
+            let out = led.superstep_weighted("orth", &weights, |r| r * r);
+            let want: Vec<usize> = (0..ranks).map(|r| r * r).collect();
+            assert_eq!(out, want, "step {step}");
+        }
+        assert_eq!(
+            dist_chebdav::util::pool_workers(),
+            spawned,
+            "worker count grew at step {step}"
+        );
+    }
+    set_seq_ranks(None);
+}
+
+#[test]
+fn panicking_superstep_aborts_then_pool_serves_the_next_one() {
+    // A panicking rank body must abort the superstep with the original
+    // payload, leave the ledger unbilled for that superstep, and leave
+    // the pool fully usable for the next superstep — in the pooled mode
+    // and in the sequential escape hatch alike.
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for seq in [false, true] {
+        set_seq_ranks(Some(seq));
+        let mut led = Ledger::new();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            led.superstep("residual", 8, |r| {
+                if r == 2 {
+                    panic!("superstep rank failure");
+                }
+                r
+            })
+        }))
+        .unwrap_err();
+        let msg = dist_chebdav::util::panic_message(&*err);
+        assert_eq!(msg, "superstep rank failure", "seq={seq}");
+        // the aborted superstep billed nothing
+        assert_eq!(led.compute_of("residual"), 0.0, "seq={seq}");
+        // the pool serves the next supersteps normally
+        let out = led.superstep("residual", 8, |r| r + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>(), "seq={seq}");
+        let out = led.superstep_weighted("orth", &[2.0, 1.0, 1.0], |r| r);
+        assert_eq!(out, vec![0, 1, 2], "seq={seq}");
+        assert!(led.compute_of("residual") >= 0.0, "seq={seq}");
+    }
+    set_seq_ranks(None);
+}
+
+#[test]
 fn parallel_superstep_is_faster_with_enough_cores() {
     // the realized executor win on a q=8 grid (64 ranks of equal CPU-
     // bound work). Skip-not-fail below 4 hardware threads: with fewer
