@@ -6,10 +6,12 @@
 #                     everything else works without it — PJRT-gated
 #                     tests and benches skip when artifacts are absent).
 #   make tier1      — the repository's tier-1 verification.
+#   make lint       — the repo-invariant lint pass (cargo xtask lint).
+#   make loom       — model-check the worker-pool handoff protocol.
 
 ARTIFACT_DIR := rust/artifacts
 
-.PHONY: artifacts tier1 test build clean-artifacts
+.PHONY: artifacts tier1 test build lint loom clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACT_DIR)
@@ -22,6 +24,12 @@ build:
 
 test:
 	cargo test -q
+
+lint:
+	cargo xtask lint
+
+loom:
+	cargo test -q -p dist_chebdav --lib --features loom-tests
 
 clean-artifacts:
 	rm -rf $(ARTIFACT_DIR)

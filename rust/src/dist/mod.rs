@@ -136,8 +136,9 @@ pub(crate) fn rowwise_update(
     led.superstep_weighted(comp, &weights, |r| {
         let ptr = &ptr; // capture the Sync wrapper, not the raw field
         let (lo, hi) = ranges[r];
-        // Safety: split_ranges yields disjoint [lo, hi) row ranges, so
-        // every rank writes a disjoint region of `data`.
+        // SAFETY: row_partition yields disjoint [lo, hi) row ranges, so
+        // every rank writes a disjoint region of `data`; the superstep
+        // quiesces before `data` is touched again by the caller.
         let block =
             unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * stride), (hi - lo) * stride) };
         body(lo, hi, block);

@@ -144,7 +144,9 @@ pub fn spmm_1d(
         let part = blocks[r].spmm(x);
         let (lo, hi) = ranges[r];
         assert_eq!(part.rows, hi - lo);
-        // Safety: row ranges are disjoint (asserted above).
+        // SAFETY: rows_1d yields disjoint [lo, hi) row ranges (the
+        // shape is asserted above), so each rank writes its own region
+        // of y; the superstep quiesces before y is read or dropped.
         let dst = unsafe { std::slice::from_raw_parts_mut(yptr.0.add(lo * k), (hi - lo) * k) };
         dst.copy_from_slice(&part.data);
     });

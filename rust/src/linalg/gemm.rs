@@ -73,7 +73,9 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     parallel_for_chunks(m, threads, |lo, hi| {
         let cptr = &cptr;
         for i in lo..hi {
-            // Safety: rows are disjoint across chunks.
+            // SAFETY: parallel_for_chunks hands out disjoint [lo, hi)
+            // row ranges, so row i of c has exactly one writer; c
+            // outlives the scoped threads.
             let crow =
                 unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
             let arow = a.row(i);

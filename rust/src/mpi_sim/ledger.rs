@@ -15,6 +15,15 @@
 //! clustering-tail keys "embed" (distributed row normalization, compute
 //! only) and "kmeans" (distributed K-means) that `dist::cluster` charges
 //! and the Fig. 10 end-to-end bench reads.
+//!
+//! Component key vocabulary (machine-read by `cargo xtask lint`; the
+//! lint rejects any ledger charge site whose key literal is not listed
+//! here — extend this list when a new component is introduced):
+//!
+//! "filter", "spmm", "orth", "rayleigh", "residual", "other",
+//! "embed", "kmeans"
+//!
+//! (end of vocabulary)
 
 use super::cost::Charge;
 use super::exec;

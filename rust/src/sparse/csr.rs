@@ -150,7 +150,10 @@ impl Csr {
                     acc[t] += v * xrow[t];
                 }
             }
-            // Safety: row chunks are disjoint across threads.
+            // SAFETY: parallel_for_chunks hands each thread a disjoint
+            // [lo, hi) row range, so row i's K-wide slice of y is
+            // written by exactly one thread; yptr stays valid for the
+            // scoped-thread lifetime (y outlives the spmm call).
             let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * K), K) };
             yrow.copy_from_slice(&acc);
         }
@@ -161,7 +164,8 @@ impl Csr {
             let (s, e) = (self.indptr[i], self.indptr[i + 1]);
             let vals = &self.values[s..e];
             let idxs = &self.indices[s..e];
-            // Safety: row chunks are disjoint across threads.
+            // SAFETY: same argument as spmm_rows_fixed — disjoint row
+            // chunks, one writer per row slice, y outlives the scope.
             let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * k), k) };
             for (v, &c) in vals.iter().zip(idxs.iter()) {
                 let xrow = x.row(c as usize);

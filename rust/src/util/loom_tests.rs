@@ -1,0 +1,157 @@
+//! Exhaustive model checks of the `WorkerPool` epoch handoff
+//! (`cargo test --features loom-tests`, see DESIGN.md §Verification).
+//!
+//! Each scenario runs under `loom::model`, which executes it once per
+//! thread interleaving — exhaustively up to the model's preemption
+//! bound — with the pool's mutex/condvar/atomic traffic routed through
+//! the modeled primitives (the `sync` facade in `threadpool`). These
+//! are the four protocol arguments PR 5 made in prose, now machine
+//! checked:
+//!
+//! * **lost wakeup**: publishing a job and parking on `work_cv` can
+//!   never miss each other, whichever side gets there first;
+//! * **late worker**: a worker still in the previous epoch's epilogue
+//!   joins the next superstep exactly once (epoch numbering);
+//! * **double claim**: the `fetch_add` claim counter hands each rank
+//!   index to exactly one participant;
+//! * **panic abort**: a panicking rank body quiesces the superstep,
+//!   rethrows the original payload, and leaves the pool reusable;
+//! * plus the `set_threads`-lowering case: a superstep narrower than
+//!   the pool leaves the excess worker parked without corrupting the
+//!   done-count.
+//!
+//! Every scenario leaks a fresh pool (`run` needs `&'static self`) and
+//! retires it with `shutdown()`; the model's drain then *proves* the
+//! workers exit — a worker still parked when the scenario returns is
+//! reported as a deadlock.
+
+use super::threadpool::{panic_message, WorkerPool};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn fresh_pool() -> &'static WorkerPool {
+    Box::leak(Box::new(WorkerPool::new()))
+}
+
+/// Silence the default panic hook while `f` runs: scenarios that
+/// exercise *expected* panics would otherwise print a backtrace per
+/// model iteration.
+fn quiet<R>(f: impl FnOnce() -> R) -> R {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = catch_unwind(AssertUnwindSafe(f));
+    std::panic::set_hook(prev);
+    match out {
+        Ok(v) => v,
+        Err(p) => std::panic::resume_unwind(p),
+    }
+}
+
+#[test]
+fn handoff_never_loses_a_wakeup() {
+    // The minimal handoff: one submitter, one worker, two ranks. The
+    // interesting interleavings are (a) the worker parks before the job
+    // is published (must be woken) and (b) the job is published before
+    // the worker first locks the pool (the predicate, not the notify,
+    // must admit it). Losing either wakeup deadlocks, which the model
+    // detects rather than hangs on.
+    loom::model(|| {
+        let pool = fresh_pool();
+        let out = pool.run(2, 2, |i| i + 10);
+        assert_eq!(out, vec![10, 11]);
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn stale_epoch_worker_joins_the_next_superstep_exactly_once() {
+    // Two consecutive supersteps through the same worker: a worker
+    // still in superstep 1's epilogue (it has not yet re-parked, its
+    // `seen` counter is stale) must neither miss superstep 2 nor run
+    // its job twice. The per-index hit counters catch both failure
+    // shapes; the output vector pins rank order.
+    loom::model(|| {
+        let pool = fresh_pool();
+        let first = pool.run(2, 2, |i| i);
+        assert_eq!(first, vec![0, 1]);
+        let hits = [AtomicUsize::new(0), AtomicUsize::new(0)];
+        let second = pool.run(2, 2, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            i * 7
+        });
+        assert_eq!(second, vec![0, 7]);
+        assert_eq!(hits[0].load(Ordering::Relaxed), 1);
+        assert_eq!(hits[1].load(Ordering::Relaxed), 1);
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn claim_counter_hands_each_rank_to_exactly_one_participant() {
+    // Three ranks, two participants (submitter + one worker) racing on
+    // the claim counter: every index must be executed exactly once and
+    // land in its own slot regardless of who claims what.
+    loom::model(|| {
+        let pool = fresh_pool();
+        let hits = [
+            AtomicUsize::new(0),
+            AtomicUsize::new(0),
+            AtomicUsize::new(0),
+        ];
+        let out = pool.run(3, 2, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2]);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "rank {i} claim count");
+        }
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn panic_abort_quiesces_then_pool_is_reusable() {
+    // A panicking rank body in any interleaving: the superstep must
+    // quiesce (worker done-count intact), rethrow the original payload
+    // on the submitter, and leave the pool serving the next superstep —
+    // including the interleaving where the *worker* claims the
+    // panicking rank and the submitter is already waiting on done_cv.
+    quiet(|| {
+        loom::model(|| {
+            let pool = fresh_pool();
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(2, 2, |i| {
+                    if i == 1 {
+                        panic!("rank 1 failed");
+                    }
+                    i
+                })
+            }))
+            .expect_err("a rank panicked: run must rethrow");
+            assert_eq!(panic_message(&*err), "rank 1 failed");
+            let out = pool.run(2, 2, |i| i + 1);
+            assert_eq!(out, vec![1, 2]);
+            pool.shutdown();
+        });
+    });
+}
+
+#[test]
+fn lowered_width_parks_the_excess_worker() {
+    // set_threads lowering, modeled directly via run's width argument:
+    // after a width-3 superstep spawns two workers, a width-2 superstep
+    // sets `limit = 1` — worker 1 wakes, sees the epoch, and must park
+    // again WITHOUT claiming ranks or touching `remaining` (a stray
+    // decrement would underflow it or release the submitter early).
+    // Three model threads: bound to one preemption to keep the schedule
+    // tree small while still covering the wake-but-ineligible path.
+    loom::model_with_preemptions(1, || {
+        let pool = fresh_pool();
+        let wide = pool.run(3, 3, |i| i);
+        assert_eq!(wide, vec![0, 1, 2]);
+        let narrow = pool.run(2, 2, |i| i + 5);
+        assert_eq!(narrow, vec![5, 6]);
+        pool.shutdown();
+    });
+}

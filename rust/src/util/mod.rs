@@ -7,6 +7,12 @@ pub mod rng;
 pub mod threadpool;
 pub mod timer;
 
+/// Exhaustive interleaving checks of the WorkerPool handoff protocol,
+/// compiled only for `cargo test --features loom-tests` (see DESIGN.md
+/// §Verification).
+#[cfg(all(test, feature = "loom-tests"))]
+mod loom_tests;
+
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{

@@ -29,9 +29,35 @@
 //! config `[run] threads` knob; default [`hardware_threads`]). See
 //! DESIGN.md §Perf.
 
+use self::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use self::sync::{Condvar, Mutex, MutexGuard};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::OnceLock;
+
+/// The pool's handoff primitives, switchable between `std` and the
+/// in-tree `loom` model checker (`--features loom-tests`). Everything
+/// the epoch-handoff protocol relies on for correctness — the shared
+/// mutex, both condvars, the claim/abort atomics, and worker spawning —
+/// goes through this facade so the `util::loom_tests` suite can explore
+/// its interleavings exhaustively; incidental machinery (the scoped
+/// `parallel_for_chunks` threads, `hardware_threads`) stays on `std`.
+/// Outside `loom::model` the loom types degrade to plain `std`
+/// behavior, so the ordinary test suite also passes under the feature.
+pub(crate) mod sync {
+    #[cfg(not(feature = "loom-tests"))]
+    pub(crate) use std::sync::atomic;
+    #[cfg(not(feature = "loom-tests"))]
+    pub(crate) use std::sync::{Condvar, Mutex, MutexGuard};
+    #[cfg(not(feature = "loom-tests"))]
+    pub(crate) use std::thread;
+
+    #[cfg(feature = "loom-tests")]
+    pub(crate) use loom::sync::atomic;
+    #[cfg(feature = "loom-tests")]
+    pub(crate) use loom::sync::{Condvar, Mutex, MutexGuard};
+    #[cfg(feature = "loom-tests")]
+    pub(crate) use loom::thread;
+}
 
 /// Number of hardware threads available to this process.
 pub fn hardware_threads() -> usize {
@@ -136,10 +162,13 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 #[derive(Clone, Copy)]
 struct RawJob {
     data: *const (),
+    // SAFETY: an `unsafe fn` pointer ([`run_job_erased`]): callers must
+    // pass the matching `data` while the Job it points at is alive —
+    // see that function's Safety section.
     run: unsafe fn(*const ()),
 }
 
-// Safety: the pointed-at Job is Sync (shared &-access only: atomics, a
+// SAFETY: the pointed-at Job is Sync (shared &-access only: atomics, a
 // mutex, a Sync closure, and disjoint raw slot writes), and the submit
 // protocol keeps it alive until every participating worker has
 // decremented `remaining` — no worker touches the pointer after that.
@@ -174,8 +203,10 @@ impl<T, F: Fn(usize) -> T + Sync> Job<'_, T, F> {
             }
             match catch_unwind(AssertUnwindSafe(|| (self.body)(i))) {
                 Ok(out) => {
-                    // Safety: the fetch_add above hands out each index
-                    // exactly once, so slot writes are disjoint.
+                    // SAFETY: the fetch_add above hands out each index
+                    // exactly once, so slot writes are disjoint, and the
+                    // submitter keeps the slot buffer alive until the
+                    // superstep quiesces.
                     unsafe { (*self.slots.0.add(i)).write(out) };
                 }
                 Err(payload) => {
@@ -192,10 +223,14 @@ impl<T, F: Fn(usize) -> T + Sync> Job<'_, T, F> {
 
 /// Monomorphized claim-loop entry the type-erased [`RawJob`] stores.
 ///
-/// Safety: `data` must point at a live `Job<'_, T, F>` (upheld by the
-/// submit protocol: the submitter blocks until all participants are
-/// done before the Job leaves scope).
+/// # Safety
+///
+/// `data` must point at a live `Job<'_, T, F>` (upheld by the submit
+/// protocol: the submitter blocks until all participants are done
+/// before the Job leaves scope).
 unsafe fn run_job_erased<T, F: Fn(usize) -> T + Sync>(data: *const ()) {
+    // SAFETY: the caller contract above — `data` is the RawJob pointer
+    // the submitter published, alive until the superstep quiesces.
     let job = &*(data as *const Job<'_, T, F>);
     job.claim_loop();
 }
@@ -216,6 +251,11 @@ struct PoolShared {
     remaining: usize,
     /// Worker threads created so far (monotone; the pool never shrinks).
     spawned: usize,
+    /// Terminal "workers, exit" flag. Never set on the process-global
+    /// pool; the loom/unit tests set it on private pool instances so a
+    /// model iteration (or a test) can retire its workers instead of
+    /// leaking parked threads.
+    shutdown: bool,
 }
 
 /// The persistent rank-worker pool behind `mpi_sim::exec`: lazily
@@ -264,31 +304,61 @@ pub fn pool_workers() -> usize {
 }
 
 impl WorkerPool {
-    /// The process-global pool, created (empty) on first use.
-    pub(crate) fn global() -> &'static WorkerPool {
-        POOL.get_or_init(|| WorkerPool {
+    /// An empty pool. Everything but the process-global [`global`]
+    /// instance is test machinery: the loom scenarios model a fresh
+    /// pool per iteration and retire it with [`shutdown`].
+    ///
+    /// [`global`]: WorkerPool::global
+    /// [`shutdown`]: WorkerPool::shutdown
+    pub(crate) fn new() -> WorkerPool {
+        WorkerPool {
             shared: Mutex::new(PoolShared {
                 epoch: 0,
                 job: None,
                 limit: 0,
                 remaining: 0,
                 spawned: 0,
+                shutdown: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             submit: Mutex::new(()),
-        })
+        }
+    }
+
+    /// The process-global pool, created (empty) on first use.
+    pub(crate) fn global() -> &'static WorkerPool {
+        POOL.get_or_init(WorkerPool::new)
+    }
+
+    /// Ask every worker (parked or about to park) to exit; terminal for
+    /// this pool instance. Test-only: production code never retires the
+    /// process-global pool, but the loom models and the pool unit tests
+    /// create private pools whose threads must not outlive the test.
+    #[cfg(any(test, feature = "loom-tests"))]
+    pub(crate) fn shutdown(&self) {
+        let mut g = lock_unpoisoned(&self.shared);
+        g.shutdown = true;
+        self.work_cv.notify_all();
     }
 
     /// A worker's whole life: park until a new epoch publishes a job,
     /// join it if this worker's id is below the epoch's limit, run the
-    /// claim loop, report done, park again.
+    /// claim loop, report done, park again — until [`shutdown`].
+    ///
+    /// [`shutdown`]: WorkerPool::shutdown
     fn worker_loop(&self, id: usize) {
         let mut seen = 0u64;
         loop {
             let job = {
                 let mut g = lock_unpoisoned(&self.shared);
-                while g.epoch == seen || g.job.is_none() {
+                loop {
+                    if g.shutdown {
+                        return;
+                    }
+                    if g.epoch != seen && g.job.is_some() {
+                        break;
+                    }
                     g = self.work_cv.wait(g).unwrap_or_else(|e| e.into_inner());
                 }
                 seen = g.epoch;
@@ -299,7 +369,7 @@ impl WorkerPool {
                 }
             };
             let Some(job) = job else { continue };
-            // Safety: the submitter keeps the Job alive until every
+            // SAFETY: the submitter keeps the Job alive until every
             // participant has decremented `remaining`, which happens
             // strictly after this call returns.
             unsafe { (job.run)(job.data) };
@@ -346,7 +416,7 @@ impl WorkerPool {
             while g.spawned < helpers {
                 let id = g.spawned;
                 let this: &'static WorkerPool = self;
-                let _ = std::thread::Builder::new()
+                let _ = sync::thread::Builder::new()
                     .name(format!("chebdav-rank-{id}"))
                     .spawn(move || this.worker_loop(id))
                     .expect("failed to spawn a persistent superstep worker");
@@ -373,14 +443,16 @@ impl WorkerPool {
         }
         drop(turn);
 
-        if let Some(payload) = lock_unpoisoned(&job.panic).take() {
+        // Take the payload and *drop the guard* before rethrowing: no
+        // lock (pool or job) is held while unwinding.
+        let payload = lock_unpoisoned(&job.panic).take();
+        if let Some(payload) = payload {
             // Initialized slots are leaked, not dropped (MaybeUninit),
             // while the buffer itself is freed — same caveat as
-            // `parallel_map`. No pool lock is held: the next superstep
-            // proceeds normally.
+            // `parallel_map`. The next superstep proceeds normally.
             resume_unwind(payload);
         }
-        // Safety: no recorded panic means the claim loop never aborted,
+        // SAFETY: no recorded panic means the claim loop never aborted,
         // so every index in 0..n was claimed and its slot written
         // exactly once; MaybeUninit<T> has the same layout as T. The
         // worker's final `remaining` decrement under the shared mutex
@@ -437,11 +509,11 @@ where
     parallel_for_chunks(n, threads, |lo, hi| {
         let ptr = &ptr;
         for i in lo..hi {
-            // Safety: chunks are disjoint, each index written exactly once.
+            // SAFETY: chunks are disjoint, each index written exactly once.
             unsafe { (*ptr.0.add(i)).write(f(i)) };
         }
     });
-    // Safety: parallel_for_chunks covers 0..n exactly, so every slot is
+    // SAFETY: parallel_for_chunks covers 0..n exactly, so every slot is
     // initialized; MaybeUninit<T> has the same layout as T.
     unsafe {
         let mut out = std::mem::ManuallyDrop::new(out);
@@ -456,7 +528,13 @@ where
 /// impls require `T: Send` — a `SendPtr<Rc<_>>` must not cross threads.
 /// Callers are responsible for writing disjoint regions only.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: SendPtr only confers the ability to *write T values* through
+// the pointer from another thread (callers uphold disjointness), so
+// both impls are sound exactly when T itself may move between threads —
+// hence the T: Send bound on each.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
+// SAFETY: see the Sync impl above — same argument for moving the
+// wrapper itself across threads.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
 #[cfg(test)]
@@ -535,6 +613,19 @@ mod tests {
         // the pool must be immediately reusable after the abort
         let got = pool.run(16, 4, |i| i + 1);
         assert_eq!(got, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn private_pool_runs_then_shuts_down() {
+        // run() needs &'static self (worker threads hold the reference
+        // for the life of the process-global pool); a private test pool
+        // gets it by leaking — the loom models do the same per
+        // iteration, where the drain proves the workers actually exit.
+        let pool: &'static WorkerPool = Box::leak(Box::new(WorkerPool::new()));
+        let got = pool.run(8, 2, |i| i * 3);
+        assert_eq!(got, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        pool.shutdown();
+        pool.shutdown(); // idempotent: terminal flag, workers already told
     }
 
     #[test]

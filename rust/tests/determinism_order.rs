@@ -1,0 +1,101 @@
+//! Regression tests for the repo's stable-serialization invariant: the
+//! order in which components are charged, merged, or inserted must
+//! never leak into reported output. The ledger stores BTreeMaps (sorted
+//! iteration), `Json::Obj` preserves insertion order exactly, and the
+//! figure benches build their reports by iterating `components()` — so
+//! two runs that charge the same totals in different orders must render
+//! byte-identical reports. `cargo xtask lint` (rule R4) keeps
+//! randomized-iteration maps off these paths; this file pins the
+//! observable consequence.
+
+use dist_chebdav::coordinator::Table;
+use dist_chebdav::mpi_sim::{CostModel, Ledger};
+use dist_chebdav::util::Json;
+
+/// Serialize a ledger the way the figure benches do: one object per
+/// component, in `components()` order.
+fn ledger_json(led: &Ledger) -> String {
+    let rows: Vec<Json> = led
+        .components()
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .put("component", *c)
+                .put("compute", led.compute_of(c))
+                .put("comm", led.comm_of(c))
+                .put("time", led.time_of(c))
+        })
+        .collect();
+    Json::obj().put("components", rows).render()
+}
+
+#[test]
+fn ledger_iteration_order_is_insertion_order_independent() {
+    let m = CostModel::default();
+    let charge = |led: &mut Ledger, keys: &[&'static str]| {
+        for &k in keys {
+            led.add_compute(k, 0.25);
+            led.charge(k, m.allreduce(64, 4));
+        }
+    };
+    let mut fwd = Ledger::new();
+    charge(&mut fwd, &["filter", "spmm", "orth", "embed", "kmeans"]);
+    let mut rev = Ledger::new();
+    charge(&mut rev, &["kmeans", "embed", "orth", "spmm", "filter"]);
+
+    assert_eq!(fwd.components(), rev.components());
+    // sorted, regardless of charge order
+    let mut sorted = fwd.components();
+    sorted.sort_unstable();
+    assert_eq!(fwd.components(), sorted);
+    // the underlying maps iterate identically (keys and values)
+    assert_eq!(fwd.compute, rev.compute);
+    assert_eq!(fwd.comm, rev.comm);
+    assert_eq!(fwd.messages, rev.messages);
+    assert_eq!(fwd.words, rev.words);
+}
+
+#[test]
+fn ledger_serialization_is_byte_stable_across_charge_orders() {
+    let m = CostModel::default();
+    let mut a = Ledger::new();
+    a.add_compute("spmm", 1.5);
+    a.charge("spmm", m.allgather(100, 4));
+    a.add_compute("filter", 0.5);
+    a.charge("orth", m.allreduce(32, 4));
+
+    // same totals, charged in a different order and in two steps
+    let mut b = Ledger::new();
+    b.charge("orth", m.allreduce(32, 4));
+    b.add_compute("filter", 0.25);
+    let mut rest = Ledger::new();
+    rest.add_compute("filter", 0.25);
+    rest.add_compute("spmm", 1.5);
+    rest.charge("spmm", m.allgather(100, 4));
+    b.merge(&rest);
+
+    assert_eq!(ledger_json(&a), ledger_json(&b));
+}
+
+#[test]
+fn json_objects_render_insertion_order_exactly() {
+    let j = Json::obj().put("b", 1i64).put("a", 2i64).put("c", 3i64);
+    // insertion order, not sorted: the renderer must not reorder
+    assert_eq!(j.render(), "{\"b\":1,\"a\":2,\"c\":3}");
+    // two identical constructions render byte-identically
+    let again = Json::obj().put("b", 1i64).put("a", 2i64).put("c", 3i64);
+    assert_eq!(j.render(), again.render());
+}
+
+#[test]
+fn table_reports_render_byte_stable() {
+    let build = || {
+        let mut t = Table::new("fig", &["component", "time"]);
+        t.row(&["filter".into(), "1.000".into()]);
+        t.row(&["spmm".into(), "0.500".into()]);
+        t
+    };
+    let (t1, t2) = (build(), build());
+    assert_eq!(t1.render(), t2.render());
+    assert_eq!(t1.to_json().render(), t2.to_json().render());
+}

@@ -1,0 +1,202 @@
+//! Fast tests that execute every `unsafe` path in the crate, sized for
+//! the Miri interpreter (the CI `miri` leg runs exactly this file):
+//!
+//! ```text
+//! MIRIFLAGS="-Zmiri-disable-isolation -Zmiri-ignore-leaks" \
+//!     cargo +nightly miri test -p dist_chebdav --test miri_unsafe
+//! ```
+//!
+//! * `-Zmiri-disable-isolation` — the kernels time themselves with
+//!   `Instant::now()`, which isolated Miri rejects;
+//! * `-Zmiri-ignore-leaks` — the persistent worker pool's threads (and
+//!   its leaked global state) are alive at process exit by design.
+//!
+//! Covered unsafe sites (the R2 whitelist of `cargo xtask lint`):
+//! * `util/threadpool.rs` — RawJob type-erased dispatch, the claim
+//!   loop's MaybeUninit slot writes, `parallel_map`'s SendPtr slots,
+//!   `parallel_for_chunks`' scoped threads, panic abort + rethrow;
+//! * `sparse/csr.rs` — `spmm_rows_fixed` (panel width 4) and
+//!   `spmm_rows_dyn` (width 3) disjoint-row writes;
+//! * `linalg/gemm.rs` — `matmul`'s disjoint-row writes;
+//! * `dist/spmm.rs` — `spmm_1d`'s per-rank disjoint row-block writes
+//!   (on pool workers when rank execution is parallel);
+//! * `dist/mod.rs` — `rowwise_update` via `dist_row_normalize`.
+//!
+//! Every test also passes under plain `cargo test` — the file is part
+//! of the normal tier-1 suite.
+//!
+//! Tests that flip the global rank-execution mode or thread count
+//! serialize on MODE_LOCK (the harness runs tests concurrently).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use dist_chebdav::dist::{dist_row_normalize, rows_1d, spmm_1d, spmm_1p5d, DistMatrix};
+use dist_chebdav::linalg::{matmul, Mat};
+use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
+use dist_chebdav::sparse::{normalized_laplacian, Csr};
+use dist_chebdav::util::{panic_message, parallel_for_chunks, parallel_map, set_threads, Rng};
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Small sparse test matrix (a path graph plus a few chords).
+fn small_laplacian(n: usize) -> Csr {
+    let mut edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+    edges.push((0, n as u32 - 1));
+    edges.push((1, n as u32 / 2));
+    normalized_laplacian(n, &edges)
+}
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+#[test]
+fn parallel_map_fills_every_slot_exactly_once() {
+    let out = parallel_map(9, 3, |i| i * i + 1);
+    assert_eq!(out, (0..9).map(|i| i * i + 1).collect::<Vec<_>>());
+    // n smaller than the thread count: excess workers get empty chunks
+    let out = parallel_map(2, 8, |i| i);
+    assert_eq!(out, vec![0, 1]);
+    // n == 0: no slots, no writes
+    let out: Vec<usize> = parallel_map(0, 4, |i| i);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn parallel_for_chunks_tiles_the_range() {
+    let seen = Mutex::new(vec![0u32; 23]);
+    parallel_for_chunks(23, 4, |lo, hi| {
+        let mut g = seen.lock().unwrap();
+        for i in lo..hi {
+            g[i] += 1;
+        }
+    });
+    assert!(seen.into_inner().unwrap().iter().all(|&c| c == 1));
+}
+
+#[test]
+fn pooled_superstep_runs_every_rank() {
+    let _g = lock();
+    set_threads(2);
+    set_seq_ranks(Some(false)); // force the pool dispatch path
+    let mut led = Ledger::new();
+    let out = led.superstep("other", 3, |r| r + 1);
+    set_seq_ranks(None);
+    set_threads(0);
+    assert_eq!(out, vec![1, 2, 3]);
+    assert!(led.compute_of("other") >= 0.0);
+}
+
+#[test]
+fn panicking_pooled_superstep_aborts_and_rethrows() {
+    let _g = lock();
+    set_threads(2);
+    set_seq_ranks(Some(false));
+    let mut led = Ledger::new();
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        led.superstep("other", 2, |r| {
+            if r == 1 {
+                panic!("rank 1 down");
+            }
+            r
+        })
+    }))
+    .unwrap_err();
+    assert_eq!(panic_message(err.as_ref()), "rank 1 down");
+    // the pool must still serve the next superstep
+    let out = led.superstep("other", 2, |r| r * 10);
+    set_seq_ranks(None);
+    set_threads(0);
+    assert_eq!(out, vec![0, 10]);
+}
+
+#[test]
+fn csr_spmm_fixed_and_dyn_panel_widths_match_dense() {
+    let a = small_laplacian(6);
+    let ad = a.to_dense();
+    let mut rng = Rng::new(7);
+    for k in [4usize, 3] {
+        // k = 4 takes spmm_rows_fixed::<4>, k = 3 takes spmm_rows_dyn
+        let x = Mat::randn(6, k, &mut rng);
+        let got = a.spmm(&x);
+        let want = naive_matmul(&ad, &x);
+        assert!(got.max_abs_diff(&want) < 1e-12, "k={k}");
+    }
+}
+
+#[test]
+fn gemm_matmul_matches_naive() {
+    let mut rng = Rng::new(8);
+    let a = Mat::randn(7, 5, &mut rng);
+    let b = Mat::randn(5, 4, &mut rng);
+    assert!(matmul(&a, &b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-12);
+}
+
+#[test]
+fn dist_spmm_kernels_match_serial_in_both_rank_modes() {
+    let _g = lock();
+    let a = small_laplacian(12);
+    let mut rng = Rng::new(9);
+    let x = Mat::randn(12, 3, &mut rng);
+    let want = a.spmm(&x);
+    let cost = CostModel::default();
+    set_threads(2);
+    for seq in [true, false] {
+        set_seq_ranks(Some(seq));
+        // 1D: each rank writes its own disjoint row block of y
+        let (blocks, ranges) = rows_1d(&a, 3);
+        let mut led = Ledger::new();
+        let got = spmm_1d(&blocks, &ranges, &x, &cost, &mut led, "spmm");
+        assert_eq!(got, want, "1D seq={seq}");
+        // 1.5D on a 2x2 grid: produce-then-merge in fixed rank order
+        let dm = DistMatrix::new(&a, 2);
+        let mut led = Ledger::new();
+        let got = spmm_1p5d(&dm, &x, false, &cost, &mut led, "spmm");
+        assert!(got.max_abs_diff(&want) < 1e-12, "1.5D seq={seq}");
+    }
+    set_seq_ranks(None);
+    set_threads(0);
+}
+
+#[test]
+fn dist_row_normalize_rowwise_update_matches_serial() {
+    let _g = lock();
+    let mut rng = Rng::new(10);
+    let x = Mat::randn(11, 3, &mut rng);
+    // serial reference: unit-normalize each row (same guard and op
+    // order as cluster::kmeans::normalize_row, so equality is exact)
+    let mut want = x.clone();
+    for i in 0..want.rows {
+        let norm = want.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for j in 0..want.cols {
+                want[(i, j)] /= norm;
+            }
+        }
+    }
+    set_threads(2);
+    for seq in [true, false] {
+        set_seq_ranks(Some(seq));
+        let mut led = Ledger::new();
+        let got = dist_row_normalize(&x, 3, &mut led);
+        assert_eq!(got, want, "seq={seq}");
+        assert!(led.comm_of("embed") == 0.0);
+    }
+    set_seq_ranks(None);
+    set_threads(0);
+}

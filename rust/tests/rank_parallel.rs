@@ -197,6 +197,49 @@ fn panicking_superstep_aborts_then_pool_serves_the_next_one() {
 }
 
 #[test]
+fn pool_survives_a_panic_submitted_from_another_thread() {
+    // Poisoning regression: the submitting thread unwinds through the
+    // pool's shared mutex when a rank body panics. `lock_unpoisoned`
+    // must make that invisible — a *different* thread (and the original
+    // one) can keep driving supersteps afterwards. A poisoned-mutex bug
+    // would surface here as a panic inside the pool, not the payload
+    // rethrow.
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for seq in [false, true] {
+        set_seq_ranks(Some(seq));
+        // the panic happens on a thread that is neither a pool worker
+        // nor the main test thread
+        let submitter = std::thread::spawn(move || {
+            let mut led = Ledger::new();
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                led.superstep("residual", 6, |r| {
+                    if r == 3 {
+                        panic!("cross-thread rank failure");
+                    }
+                    r
+                })
+            }))
+            .unwrap_err();
+            dist_chebdav::util::panic_message(&*err)
+        });
+        assert_eq!(submitter.join().unwrap(), "cross-thread rank failure", "seq={seq}");
+
+        // reuse from the main thread
+        let mut led = Ledger::new();
+        let out = led.superstep("residual", 6, |r| r + 1);
+        assert_eq!(out, (1..=6).collect::<Vec<_>>(), "seq={seq}");
+
+        // and from a third, fresh thread
+        let third = std::thread::spawn(move || {
+            let mut led = Ledger::new();
+            led.superstep_weighted("orth", &[1.0, 1.0, 1.0, 1.0], |r| r * 2)
+        });
+        assert_eq!(third.join().unwrap(), vec![0, 2, 4, 6], "seq={seq}");
+    }
+    set_seq_ranks(None);
+}
+
+#[test]
 fn parallel_superstep_is_faster_with_enough_cores() {
     // the realized executor win on a q=8 grid (64 ranks of equal CPU-
     // bound work). Skip-not-fail below 4 hardware threads: with fewer

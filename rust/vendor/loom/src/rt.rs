@@ -1,0 +1,425 @@
+//! The token-passing scheduler behind [`crate::model`].
+//!
+//! Model threads are real OS threads, but exactly one of them runs at a
+//! time: every visible operation (atomic access, mutex lock/unlock,
+//! condvar wait/notify, spawn, join, yield) is a *schedule point* that
+//! hands the logical token to the next thread the explorer picks. The
+//! explorer records each multi-way pick on a path of [`Choice`]s and
+//! replays/extends that path depth-first across iterations, so the set
+//! of executed interleavings is exhaustive up to the configured
+//! preemption bound (see `crate::model_with_preemptions`).
+//!
+//! Failure handling: a deadlock (no runnable thread while some thread is
+//! still unfinished) or a watchdog timeout records a failure message and
+//! wakes everyone; threads parked in the scheduler observe it and panic,
+//! which unwinds the whole model iteration.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Path length cap: a modeled execution that takes more scheduling
+/// decisions than this is assumed to be a livelock in the code under
+/// test (or a scheduler bug) and fails the model instead of spinning.
+const MAX_DEPTH: usize = 20_000;
+
+/// How long a parked model thread waits before suspecting the scheduler
+/// lost it, and the total budget before the watchdog fails the model.
+/// These exist so a scheduler bug surfaces as a test failure rather
+/// than a hung CI job.
+const WATCHDOG_TICK: Duration = Duration::from_secs(15);
+const WATCHDOG_LIMIT: Duration = Duration::from_secs(120);
+
+/// Scheduling state of one model thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum TState {
+    Runnable,
+    /// Parked on `Mutex::lock` for the mutex at this address.
+    BlockedMutex(usize),
+    /// Parked in `Condvar::wait` on the condvar at this address.
+    BlockedCv(usize),
+    /// Parked in `JoinHandle::join` on this thread id.
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// One recorded scheduling decision: candidate `index` out of `n` ran.
+/// Only multi-way decisions are recorded — one-candidate picks are a
+/// deterministic function of prior choices, so replay stays aligned.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Choice {
+    pub(crate) index: usize,
+    pub(crate) n: usize,
+}
+
+pub(crate) struct SchedState {
+    /// State per thread id; tid 0 is the thread that called `model`.
+    threads: Vec<TState>,
+    /// The thread currently holding the execution token.
+    current: usize,
+    /// Decision path: a replayed prefix plus choices appended this run.
+    path: Vec<Choice>,
+    /// Number of recorded decisions consumed/made so far this run.
+    depth: usize,
+    /// Preemptive switches taken so far (bounded exploration).
+    preemptions: usize,
+    /// Deadlock / watchdog / depth-cap diagnostic; terminal once set.
+    failure: Option<String>,
+    /// FIFO of (condvar address, waiting tid).
+    cv_waiters: Vec<(usize, usize)>,
+}
+
+pub(crate) struct Rt {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    max_preemptions: usize,
+}
+
+thread_local! {
+    /// (runtime, my thread id) while the current OS thread is executing
+    /// inside a model; `None` makes every shim primitive fall back to
+    /// plain `std` behavior.
+    static CURRENT: RefCell<Option<(Arc<Rt>, usize)>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn set_current(v: Option<(Arc<Rt>, usize)>) {
+    CURRENT.with(|c| *c.borrow_mut() = v);
+}
+
+pub(crate) fn current() -> Option<(Arc<Rt>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+impl Rt {
+    pub(crate) fn new(replay: Vec<Choice>, max_preemptions: usize) -> Rt {
+        Rt {
+            state: Mutex::new(SchedState {
+                threads: vec![TState::Runnable],
+                current: 0,
+                path: replay,
+                depth: 0,
+                preemptions: 0,
+                failure: None,
+                cv_waiters: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            max_preemptions,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SchedState> {
+        // The scheduler lock is never held across a panic on purpose
+        // (every panic path drops it first), but a panicking *user*
+        // closure can still poison it via guard drops on unwind paths;
+        // the state itself stays consistent, so recover.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The recorded decision path after a run (replayed prefix plus any
+    /// newly appended choices) — the explorer advances this for the
+    /// next iteration.
+    pub(crate) fn final_path(&self) -> Vec<Choice> {
+        self.lock().path.clone()
+    }
+
+    pub(crate) fn take_failure(&self) -> Option<String> {
+        self.lock().failure.take()
+    }
+
+    fn fail_now(&self, mut g: MutexGuard<'_, SchedState>, msg: String) -> ! {
+        if g.failure.is_none() {
+            g.failure = Some(msg);
+        }
+        let text = g.failure.clone().unwrap_or_default();
+        self.cv.notify_all();
+        drop(g);
+        panic!("loom model failure: {text}");
+    }
+
+    /// Record or replay one multi-way scheduling decision.
+    fn decide(g: &mut SchedState, n: usize) -> usize {
+        debug_assert!(n >= 1);
+        if n == 1 {
+            return 0;
+        }
+        if g.depth < g.path.len() {
+            let c = g.path[g.depth];
+            g.depth += 1;
+            // `n` can only differ from `c.n` if the code under test is
+            // nondeterministic beyond scheduling (time, OS randomness);
+            // clamping keeps the run well-defined instead of panicking.
+            return c.index.min(n - 1);
+        }
+        if g.path.len() >= MAX_DEPTH {
+            if g.failure.is_none() {
+                g.failure = Some(format!(
+                    "decision path exceeded {MAX_DEPTH} choices — livelock in the modeled code?"
+                ));
+            }
+            return 0;
+        }
+        g.path.push(Choice { index: 0, n });
+        g.depth += 1;
+        0
+    }
+
+    /// Pick the next token holder. `me` is the thread at this schedule
+    /// point, whose state has already been updated (it may no longer be
+    /// runnable). Returns false iff the model deadlocked (failure set).
+    fn pick_next(&self, g: &mut SchedState, me: usize) -> bool {
+        let runnable: Vec<usize> = (0..g.threads.len())
+            .filter(|&t| g.threads[t] == TState::Runnable)
+            .collect();
+        if runnable.is_empty() {
+            if g.threads.iter().all(|&t| t == TState::Finished) {
+                return true; // clean completion, nothing left to run
+            }
+            g.failure = Some(format!(
+                "deadlock: no runnable thread (states {:?})",
+                g.threads
+            ));
+            return false;
+        }
+        let chosen = if g.threads[me] == TState::Runnable {
+            if g.preemptions >= self.max_preemptions {
+                // at the bound: only the non-preemptive continuation
+                me
+            } else {
+                // candidate 0 = keep running `me` (free); any other
+                // runnable thread costs one preemption
+                let mut cands = vec![me];
+                cands.extend(runnable.iter().copied().filter(|&t| t != me));
+                let idx = Self::decide(g, cands.len());
+                if idx != 0 {
+                    g.preemptions += 1;
+                }
+                cands[idx]
+            }
+        } else {
+            // `me` just blocked or finished: switching away is free
+            let idx = Self::decide(g, runnable.len());
+            runnable[idx]
+        };
+        g.current = chosen;
+        true
+    }
+
+    /// Park until this thread holds the token and is runnable again.
+    fn wait_for_turn(&self, mut g: MutexGuard<'_, SchedState>, me: usize) {
+        let mut waited = Duration::ZERO;
+        loop {
+            if let Some(f) = g.failure.clone() {
+                drop(g);
+                panic!("loom model failure: {f}");
+            }
+            if g.current == me && g.threads[me] == TState::Runnable {
+                return;
+            }
+            let (ng, timeout) = self
+                .cv
+                .wait_timeout(g, WATCHDOG_TICK)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+            if timeout.timed_out() {
+                waited += WATCHDOG_TICK;
+                if waited >= WATCHDOG_LIMIT && g.failure.is_none() {
+                    g.failure = Some(format!(
+                        "watchdog: thread {me} starved for {WATCHDOG_LIMIT:?} \
+                         (current {}, states {:?})",
+                        g.current, g.threads
+                    ));
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// A schedule point. `update` mutates the state under the scheduler
+    /// lock first (block the caller, register a waiter, ...), then the
+    /// explorer picks the next token holder and the caller parks until
+    /// the token comes back to it.
+    pub(crate) fn schedule_with(&self, me: usize, update: impl FnOnce(&mut SchedState)) {
+        let mut g = self.lock();
+        if let Some(f) = g.failure.clone() {
+            drop(g);
+            panic!("loom model failure: {f}");
+        }
+        update(&mut g);
+        if !self.pick_next(&mut g, me) {
+            let msg = g.failure.clone().unwrap_or_default();
+            self.fail_now(g, msg);
+        }
+        self.cv.notify_all();
+        self.wait_for_turn(g, me);
+    }
+
+    /// The plain schedule point: let any eligible thread run next.
+    pub(crate) fn schedule(&self, me: usize) {
+        self.schedule_with(me, |_| {});
+    }
+
+    /// Register a newly spawned model thread; it starts runnable but
+    /// does not run until the explorer grants it the token.
+    pub(crate) fn register_thread(&self) -> usize {
+        let mut g = self.lock();
+        g.threads.push(TState::Runnable);
+        g.threads.len() - 1
+    }
+
+    /// First park of a freshly spawned OS thread: wait to be scheduled.
+    pub(crate) fn wait_first_grant(&self, me: usize) {
+        let g = self.lock();
+        self.wait_for_turn(g, me);
+    }
+
+    /// Mark `me` finished, wake its joiners, and pass the token on.
+    /// Never panics: it runs on thread exit paths (possibly during
+    /// unwind), so a deadlock here only records the failure.
+    pub(crate) fn finish_thread(&self, me: usize) {
+        let mut g = self.lock();
+        g.threads[me] = TState::Finished;
+        for t in 0..g.threads.len() {
+            if g.threads[t] == TState::BlockedJoin(me) {
+                g.threads[t] = TState::Runnable;
+            }
+        }
+        if g.failure.is_none() {
+            let _ = self.pick_next(&mut g, me);
+        }
+        self.cv.notify_all();
+    }
+
+    /// `join` as one atomic schedule point: block on the target unless
+    /// it already finished (checking and blocking under one lock, so the
+    /// target cannot finish in between and strand the joiner).
+    pub(crate) fn join_thread(&self, me: usize, target: usize) {
+        self.schedule_with(me, |g| {
+            if g.threads[target] != TState::Finished {
+                g.threads[me] = TState::BlockedJoin(target);
+            }
+        });
+    }
+
+    /// Mutex release: wake every thread parked on this mutex, then (on
+    /// non-unwind paths) yield a schedule point so a waiter can win the
+    /// lock before the releasing thread retakes it.
+    pub(crate) fn unlock_mutex(&self, me: usize, addr: usize, panicking: bool) {
+        {
+            let mut g = self.lock();
+            for t in 0..g.threads.len() {
+                if g.threads[t] == TState::BlockedMutex(addr) {
+                    g.threads[t] = TState::Runnable;
+                }
+            }
+        }
+        if !panicking {
+            self.schedule(me);
+        }
+        // During unwind the token stays with `me`; it is passed on by
+        // `finish_thread` (spawned threads) or the explorer's drain.
+    }
+
+    /// Failed `try_lock`: park on the mutex and yield the token.
+    pub(crate) fn block_on_mutex(&self, me: usize, addr: usize) {
+        self.schedule_with(me, |g| g.threads[me] = TState::BlockedMutex(addr));
+    }
+
+    /// Condvar wait, modeled as the atomic release-and-park it promises:
+    /// register as a waiter, wake the mutex's blocked threads (the
+    /// caller already released the underlying mutex while holding the
+    /// token, so nothing ran in between), and park on the condvar — all
+    /// under one schedule point, which is what makes a wakeup between
+    /// release and park impossible to lose.
+    pub(crate) fn cv_wait(&self, me: usize, cv_addr: usize, mutex_addr: usize) {
+        self.schedule_with(me, |g| {
+            g.cv_waiters.push((cv_addr, me));
+            for t in 0..g.threads.len() {
+                if g.threads[t] == TState::BlockedMutex(mutex_addr) {
+                    g.threads[t] = TState::Runnable;
+                }
+            }
+            g.threads[me] = TState::BlockedCv(cv_addr);
+        });
+    }
+
+    /// Wake one waiter (an explored decision when several are parked);
+    /// a notify with no waiters is lost, exactly like the real thing.
+    /// No schedule point: the wake becomes visible at the next one.
+    pub(crate) fn cv_notify_one(&self, cv_addr: usize) {
+        let mut g = self.lock();
+        if g.failure.is_some() {
+            let f = g.failure.clone().unwrap_or_default();
+            drop(g);
+            panic!("loom model failure: {f}");
+        }
+        let slots: Vec<usize> = g
+            .cv_waiters
+            .iter()
+            .enumerate()
+            .filter(|(_, &(a, _))| a == cv_addr)
+            .map(|(i, _)| i)
+            .collect();
+        if slots.is_empty() {
+            return;
+        }
+        let pick = slots[Self::decide(&mut g, slots.len())];
+        let (_, tid) = g.cv_waiters.remove(pick);
+        g.threads[tid] = TState::Runnable;
+    }
+
+    /// Wake every waiter parked on this condvar.
+    pub(crate) fn cv_notify_all(&self, cv_addr: usize) {
+        let mut g = self.lock();
+        let mut kept = Vec::with_capacity(g.cv_waiters.len());
+        let mut woken = Vec::new();
+        for &(a, tid) in &g.cv_waiters {
+            if a == cv_addr {
+                woken.push(tid);
+            } else {
+                kept.push((a, tid));
+            }
+        }
+        g.cv_waiters = kept;
+        for tid in woken {
+            g.threads[tid] = TState::Runnable;
+        }
+    }
+
+    /// Called by `model` once the user closure has returned on tid 0:
+    /// mark it finished, hand the token to any leftover thread, and
+    /// wait until every model thread has finished (or the model fails —
+    /// e.g. a leaked thread parks forever, which the deadlock detector
+    /// reports instead of hanging).
+    pub(crate) fn drain_main(&self) {
+        let mut g = self.lock();
+        g.threads[0] = TState::Finished;
+        if g.failure.is_none() {
+            let _ = self.pick_next(&mut g, 0);
+        }
+        self.cv.notify_all();
+        let mut waited = Duration::ZERO;
+        loop {
+            if g.failure.is_some() {
+                return;
+            }
+            if g.threads.iter().all(|&t| t == TState::Finished) {
+                return;
+            }
+            let (ng, timeout) = self
+                .cv
+                .wait_timeout(g, WATCHDOG_TICK)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+            if timeout.timed_out() {
+                waited += WATCHDOG_TICK;
+                if waited >= WATCHDOG_LIMIT && g.failure.is_none() {
+                    g.failure = Some(format!(
+                        "watchdog: drain starved for {WATCHDOG_LIMIT:?} (states {:?})",
+                        g.threads
+                    ));
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+}

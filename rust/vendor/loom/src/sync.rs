@@ -1,0 +1,266 @@
+//! Modeled `Mutex`, `Condvar`, and atomics with `std`-shaped APIs.
+//!
+//! Every type is dual-mode: inside [`crate::model`] each operation is a
+//! schedule point driven by the explorer in `rt`; outside a model it
+//! delegates straight to `std`, so code built against these types (the
+//! worker pool under `--features loom-tests`) behaves identically in
+//! the ordinary test suite.
+//!
+//! Modeling notes:
+//! * the model explores sequentially consistent interleavings — the
+//!   `Ordering` argument on atomics is accepted but not weakened (real
+//!   loom models the C11 memory model; this shim does not);
+//! * modeled condvars have no spurious wakeups, and a modeled mutex is
+//!   never poisoned (`lock` still returns `LockResult` so callers'
+//!   poison handling compiles unchanged).
+
+use crate::rt;
+use std::sync::{LockResult, PoisonError, TryLockError};
+
+pub use std::sync::Arc;
+
+/// A mutex whose lock/unlock points are explored by the model.
+///
+/// The payload lives in a real `std::sync::Mutex`; inside a model the
+/// token-passing scheduler serializes threads, so a `try_lock` failure
+/// is exactly an interleaving where another (suspended) model thread
+/// holds the lock, and the loser parks in the scheduler instead of the
+/// OS.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    /// `None` only transiently (condvar wait) and after drop.
+    guard: Option<std::sync::MutexGuard<'a, T>>,
+    /// The underlying mutex, kept for condvar re-acquisition; its
+    /// address is also the model's identity for the lock.
+    lock: &'a std::sync::Mutex<T>,
+    /// True iff acquired inside a model (decides the drop protocol).
+    modeled: bool,
+}
+
+impl<T> MutexGuard<'_, T> {
+    fn addr(&self) -> usize {
+        self.lock as *const std::sync::Mutex<T> as usize
+    }
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex {
+            inner: std::sync::Mutex::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const std::sync::Mutex<T> as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match rt::current() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    guard: Some(g),
+                    lock: &self.inner,
+                    modeled: false,
+                }),
+                Err(e) => Err(PoisonError::new(MutexGuard {
+                    guard: Some(e.into_inner()),
+                    lock: &self.inner,
+                    modeled: false,
+                })),
+            },
+            Some((rtm, me)) => {
+                rtm.schedule(me); // decision point before the acquire
+                let guard = loop {
+                    match self.inner.try_lock() {
+                        Ok(g) => break g,
+                        // A modeled holder that panicked poisons the std
+                        // mutex; the model treats the data as intact
+                        // (the code under test restores its invariants
+                        // before any panic propagates).
+                        Err(TryLockError::Poisoned(e)) => break e.into_inner(),
+                        Err(TryLockError::WouldBlock) => {
+                            rtm.block_on_mutex(me, self.addr());
+                        }
+                    }
+                };
+                Ok(MutexGuard {
+                    guard: Some(guard),
+                    lock: &self.inner,
+                    modeled: true,
+                })
+            }
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard taken")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard taken")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let was_held = self.guard.take().is_some();
+        if self.modeled && was_held {
+            if let Some((rtm, me)) = rt::current() {
+                rtm.unlock_mutex(me, self.addr(), std::thread::panicking());
+            }
+        }
+    }
+}
+
+/// A condvar whose wait is the atomic release-and-park the real one
+/// promises, and whose notify picks among waiters as an explored
+/// decision (a notify with no waiters is lost).
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar {
+            inner: std::sync::Condvar::new(),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const std::sync::Condvar as usize
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        if !guard.modeled {
+            let inner = guard.guard.take().expect("guard taken");
+            return match self.inner.wait(inner) {
+                Ok(g) => Ok(MutexGuard {
+                    guard: Some(g),
+                    lock,
+                    modeled: false,
+                }),
+                Err(e) => Err(PoisonError::new(MutexGuard {
+                    guard: Some(e.into_inner()),
+                    lock,
+                    modeled: false,
+                })),
+            };
+        }
+        let (rtm, me) = rt::current().expect("modeled guard outside a model");
+        let mutex_addr = guard.addr();
+        // Release the real mutex while still holding the token, then
+        // register + park in one schedule point: no other model thread
+        // runs in between, so the release-and-wait is atomic and a
+        // notify in that window cannot be lost.
+        drop(guard.guard.take().expect("guard taken"));
+        rtm.cv_wait(me, self.addr(), mutex_addr);
+        // Woken and scheduled: re-acquire like `lock`, minus the extra
+        // pre-acquire decision point (we just came from one).
+        let reacquired = loop {
+            match lock.try_lock() {
+                Ok(g) => break g,
+                Err(TryLockError::Poisoned(e)) => break e.into_inner(),
+                Err(TryLockError::WouldBlock) => rtm.block_on_mutex(me, mutex_addr),
+            }
+        };
+        Ok(MutexGuard {
+            guard: Some(reacquired),
+            lock,
+            modeled: true,
+        })
+    }
+
+    pub fn notify_one(&self) {
+        match rt::current() {
+            None => self.inner.notify_one(),
+            Some((rtm, _)) => rtm.cv_notify_one(self.addr()),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match rt::current() {
+            None => self.inner.notify_all(),
+            Some((rtm, _)) => rtm.cv_notify_all(self.addr()),
+        }
+    }
+}
+
+pub mod atomic {
+    //! Atomics whose accesses are schedule points inside a model.
+
+    use crate::rt;
+    pub use std::sync::atomic::Ordering;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    fn schedule_point() {
+        if let Some((rtm, me)) = rt::current() {
+            rtm.schedule(me);
+        }
+    }
+
+    #[derive(Debug, Default)]
+    pub struct AtomicUsize {
+        v: std::sync::atomic::AtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub const fn new(v: usize) -> AtomicUsize {
+            AtomicUsize {
+                v: std::sync::atomic::AtomicUsize::new(v),
+            }
+        }
+
+        pub fn load(&self, _order: Ordering) -> usize {
+            schedule_point();
+            self.v.load(SeqCst)
+        }
+
+        pub fn store(&self, val: usize, _order: Ordering) {
+            schedule_point();
+            self.v.store(val, SeqCst)
+        }
+
+        pub fn fetch_add(&self, val: usize, _order: Ordering) -> usize {
+            schedule_point();
+            self.v.fetch_add(val, SeqCst)
+        }
+    }
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        v: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> AtomicBool {
+            AtomicBool {
+                v: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        pub fn load(&self, _order: Ordering) -> bool {
+            schedule_point();
+            self.v.load(SeqCst)
+        }
+
+        pub fn store(&self, val: bool, _order: Ordering) {
+            schedule_point();
+            self.v.store(val, SeqCst)
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Modeled thread spawn/join with a `std::thread`-shaped API.
+//!
+//! Inside a model, a spawned closure runs on a real OS thread that is
+//! registered with the scheduler and only ever executes while it holds
+//! the token; spawn and join are schedule points. Outside a model the
+//! types delegate to `std::thread` unchanged.
+
+use crate::rt;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Mutex};
+
+enum Inner<T> {
+    Std(std::thread::JoinHandle<T>),
+    Model {
+        tid: usize,
+        rtm: Arc<rt::Rt>,
+        /// The closure's result (or panic payload), written before the
+        /// model thread reports itself finished.
+        result: Arc<Mutex<Option<std::thread::Result<T>>>>,
+        os: std::thread::JoinHandle<()>,
+    },
+}
+
+pub struct JoinHandle<T> {
+    inner: Inner<T>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.inner {
+            Inner::Std(h) => h.join(),
+            Inner::Model {
+                tid,
+                rtm,
+                result,
+                os,
+            } => {
+                let me = rt::current()
+                    .expect("joining a model thread from outside its model")
+                    .1;
+                rtm.join_thread(me, tid);
+                let out = result
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
+                    .expect("model thread finished without storing a result");
+                // The model thread has passed `finish_thread`; reap the
+                // OS thread (it exits without needing the token again).
+                let _ = os.join();
+                out
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder { name: None }
+    }
+
+    pub fn name(mut self, name: String) -> Builder {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match rt::current() {
+            None => {
+                let mut b = std::thread::Builder::new();
+                if let Some(n) = self.name {
+                    b = b.name(n);
+                }
+                b.spawn(f).map(|h| JoinHandle {
+                    inner: Inner::Std(h),
+                })
+            }
+            Some((rtm, me)) => {
+                let tid = rtm.register_thread();
+                let result: Arc<Mutex<Option<std::thread::Result<T>>>> =
+                    Arc::new(Mutex::new(None));
+                let result2 = Arc::clone(&result);
+                let rtm2 = Arc::clone(&rtm);
+                let mut b = std::thread::Builder::new();
+                if let Some(n) = self.name {
+                    b = b.name(n);
+                }
+                let os = b.spawn(move || {
+                    rt::set_current(Some((Arc::clone(&rtm2), tid)));
+                    // The first park is inside the catch so a model
+                    // failure surfacing there still reaches
+                    // `finish_thread` and cannot strand the drain.
+                    let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        rtm2.wait_first_grant(tid);
+                        f()
+                    }));
+                    *result2.lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+                    rtm2.finish_thread(tid);
+                    rt::set_current(None);
+                })?;
+                // The spawn itself is a visible operation: the child is
+                // now a candidate, and the explorer may run it first.
+                rtm.schedule(me);
+                Ok(JoinHandle {
+                    inner: Inner::Model {
+                        tid,
+                        rtm,
+                        result,
+                        os,
+                    },
+                })
+            }
+        }
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Builder::new().spawn(f).expect("failed to spawn thread")
+}
+
+pub fn yield_now() {
+    match rt::current() {
+        None => std::thread::yield_now(),
+        Some((rtm, me)) => rtm.schedule(me),
+    }
+}

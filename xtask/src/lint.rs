@@ -1,0 +1,752 @@
+//! Repo-specific invariants the standard toolchain cannot express.
+//!
+//! Five rules, each guarding a property the rest of the codebase's
+//! correctness arguments lean on:
+//!
+//! * **R1** — every `unsafe` site in a whitelisted file carries a
+//!   `SAFETY` argument within the 8 lines above it (or a `# Safety`
+//!   doc section for `unsafe fn` declarations). The raw-split kernels'
+//!   soundness is argued in those comments; an uncommented site is an
+//!   unreviewed one.
+//! * **R2** — `unsafe` appears *only* in the five whitelisted files
+//!   (the disjoint-row raw-split kernels and the worker pool). Every
+//!   other module is additionally compiled with `deny(unsafe_code)` in
+//!   `rust/src/lib.rs`; this rule keeps the whitelist and the deny list
+//!   in agreement and covers tests/benches/examples, which the
+//!   module-level attribute does not reach.
+//! * **R3** — no `thread::spawn` outside `rust/src/util/threadpool.rs`:
+//!   all rank-level parallelism must go through the persistent worker
+//!   pool so the sequential-mode switch, the thread-budget accounting,
+//!   and the loom model stay authoritative. (Integration tests under
+//!   `rust/tests/` may spawn probe threads.)
+//! * **R4** — no `HashMap`/`HashSet` on the determinism-critical paths
+//!   (`mpi_sim`, `dist`, `coordinator`, `eig`, `util/json.rs`): the
+//!   bit-identical parallel/sequential claim and the stable report
+//!   output both assume no randomized iteration order feeds a float
+//!   merge or serialized output.
+//! * **R5** — every ledger charge site whose component key is a string
+//!   literal uses a key from the vocabulary block in
+//!   `rust/src/mpi_sim/ledger.rs` (the figure benches read those exact
+//!   keys back; a typoed key silently drops a bar from a figure).
+//!
+//! The scanner works on a *code view* of each file: comments and
+//! string/char literal bodies are blanked so rule patterns never match
+//! prose, and comment text / string literals are kept per line for R1
+//! and R5. A file's trailing test region (from the first `#[cfg(...)]`
+//! attribute mentioning `test` to end of file — the repo convention
+//! puts unit tests last) is exempt from R3-R5; R1/R2 apply everywhere.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a file:line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id: "R1".."R5" (or "IO" for unreadable inputs).
+    pub rule: &'static str,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Files allowed to contain `unsafe` (R2), each a disjoint-row raw
+/// split or the worker-pool machinery. Keep in sync with the
+/// `deny(unsafe_code)` module list in rust/src/lib.rs.
+const UNSAFE_WHITELIST: &[&str] = &[
+    "rust/src/util/threadpool.rs",
+    "rust/src/sparse/csr.rs",
+    "rust/src/dist/spmm.rs",
+    "rust/src/dist/mod.rs",
+    "rust/src/linalg/gemm.rs",
+];
+
+/// How far above an `unsafe` token R1 looks for a SAFETY comment.
+const SAFETY_WINDOW: usize = 8;
+
+/// Call patterns whose first string-literal argument is a ledger
+/// component key (R5). Sites passing a variable instead of a literal
+/// are skipped — the literal is checked where it is written down.
+const LEDGER_PATTERNS: &[&str] = &[
+    ".superstep(",
+    ".superstep_weighted(",
+    ".charge(",
+    ".add_compute(",
+    ".compute_of(",
+    ".comm_of(",
+    ".time_of(",
+    ".time(",
+    ".time_panel(",
+    "spmm_1d(",
+];
+
+/// Per-line decomposition of one source file.
+struct FileView {
+    /// Source lines with comments and string/char bodies blanked.
+    code: Vec<String>,
+    /// Concatenated comment text per line (line + block + doc).
+    comments: Vec<String>,
+    /// String literals *starting* on each line, in order.
+    strings: Vec<Vec<String>>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split a source file into code / comment / string views. Handles
+/// line and nested block comments, plain and raw (`r#"..."#`) strings,
+/// byte strings, char literals, and lifetimes (`'a` is not a char).
+fn scan(src: &str) -> FileView {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut strings: Vec<Vec<String>> = vec![Vec::new()];
+    let newline =
+        |code: &mut Vec<String>, comments: &mut Vec<String>, strings: &mut Vec<Vec<String>>| {
+            code.push(String::new());
+            comments.push(String::new());
+            strings.push(Vec::new());
+        };
+
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            newline(&mut code, &mut comments, &mut strings);
+            i += 1;
+            continue;
+        }
+        // line comment (covers ///, //!)
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                comments.last_mut().unwrap().push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            comments.last_mut().unwrap().push_str("/*");
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '\n' {
+                    newline(&mut code, &mut comments, &mut strings);
+                    i += 1;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    comments.last_mut().unwrap().push_str("/*");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    comments.last_mut().unwrap().push_str("*/");
+                    i += 2;
+                } else {
+                    comments.last_mut().unwrap().push(chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r", r#"..., b", br#"...
+        if c == 'r' || c == 'b' {
+            let prev_ident = i > 0 && is_ident(chars[i - 1]);
+            if !prev_ident {
+                let mut j = i + 1;
+                if c == 'b' && chars.get(j) == Some(&'r') {
+                    j += 1;
+                }
+                let raw = c == 'r' || (c == 'b' && j > i + 1);
+                let mut hashes = 0usize;
+                if raw {
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                }
+                if chars.get(j) == Some(&'"') && (raw || c == 'b') {
+                    // consume the literal; record its body
+                    let start_line = code.len() - 1;
+                    let mut lit = String::new();
+                    i = j + 1;
+                    'lit: while i < chars.len() {
+                        if chars[i] == '\n' {
+                            lit.push('\n');
+                            newline(&mut code, &mut comments, &mut strings);
+                            i += 1;
+                            continue;
+                        }
+                        if !raw && chars[i] == '\\' {
+                            lit.push(chars[i]);
+                            if let Some(&n) = chars.get(i + 1) {
+                                lit.push(n);
+                                if n == '\n' {
+                                    newline(&mut code, &mut comments, &mut strings);
+                                }
+                            }
+                            i += 2;
+                            continue;
+                        }
+                        if chars[i] == '"' {
+                            if raw {
+                                // need `"` followed by `hashes` hashes
+                                let mut ok = true;
+                                for h in 0..hashes {
+                                    if chars.get(i + 1 + h) != Some(&'#') {
+                                        ok = false;
+                                        break;
+                                    }
+                                }
+                                if ok {
+                                    i += 1 + hashes;
+                                    break 'lit;
+                                }
+                            } else {
+                                i += 1;
+                                break 'lit;
+                            }
+                        }
+                        lit.push(chars[i]);
+                        i += 1;
+                    }
+                    strings[start_line].push(lit);
+                    continue;
+                }
+            }
+            // plain identifier character
+            code.last_mut().unwrap().push(c);
+            i += 1;
+            continue;
+        }
+        // plain string
+        if c == '"' {
+            let start_line = code.len() - 1;
+            let mut lit = String::new();
+            i += 1;
+            while i < chars.len() {
+                let ch = chars[i];
+                if ch == '\\' {
+                    lit.push(ch);
+                    if let Some(&n) = chars.get(i + 1) {
+                        lit.push(n);
+                        if n == '\n' {
+                            newline(&mut code, &mut comments, &mut strings);
+                        }
+                    }
+                    i += 2;
+                    continue;
+                }
+                if ch == '"' {
+                    i += 1;
+                    break;
+                }
+                if ch == '\n' {
+                    lit.push('\n');
+                    newline(&mut code, &mut comments, &mut strings);
+                    i += 1;
+                    continue;
+                }
+                lit.push(ch);
+                i += 1;
+            }
+            strings[start_line].push(lit);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // escaped char literal: skip to closing quote
+                i += 2;
+                while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                    i += 1;
+                }
+                i += 1;
+            } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                i += 3; // 'x'
+            } else {
+                // lifetime: keep the tick so generics stay readable
+                code.last_mut().unwrap().push('\'');
+                i += 1;
+            }
+            continue;
+        }
+        code.last_mut().unwrap().push(c);
+        i += 1;
+    }
+    FileView { code, comments, strings }
+}
+
+/// First occurrence of `word` in `line` at identifier boundaries.
+fn has_word(line: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !line[..p].chars().next_back().map(is_ident).unwrap_or(false);
+        let after = p + word.len();
+        let after_ok =
+            after >= line.len() || !line[after..].chars().next().map(is_ident).unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + word.len();
+    }
+    false
+}
+
+/// Line index (0-based) where the file's trailing test region begins:
+/// the first `#[cfg(...)]` attribute that mentions `test` in code. The
+/// repo convention keeps unit tests as the last item of a file, so
+/// everything from there on is test code. Returns `len` if absent.
+fn test_region_start(code: &[String]) -> usize {
+    for (idx, line) in code.iter().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("#[cfg(") && has_word(line, "test") {
+            return idx;
+        }
+    }
+    code.len()
+}
+
+/// R5 scope: files where ledger component keys are charged or read on
+/// the real reporting path. `eig/lobpcg.rs` and `eig/lanczos.rs` bill a
+/// different sink (`ComponentTimers` with its own "rr"/"spmv" keys) and
+/// are deliberately out of scope.
+fn ledger_scope(path: &str) -> bool {
+    path.starts_with("rust/src/dist/")
+        || path.starts_with("rust/src/mpi_sim/")
+        || path.starts_with("rust/src/coordinator/")
+        || path == "rust/src/eig/core.rs"
+        || path == "rust/src/eig/bchdav.rs"
+        || path.starts_with("rust/benches/")
+        || path.starts_with("examples/")
+}
+
+/// R4 scope: the determinism-critical paths (float merges and
+/// serialized report output).
+fn map_scope(path: &str) -> bool {
+    path.starts_with("rust/src/mpi_sim/")
+        || path.starts_with("rust/src/coordinator/")
+        || path.starts_with("rust/src/dist/")
+        || path.starts_with("rust/src/eig/")
+        || path == "rust/src/util/json.rs"
+}
+
+/// Lint one file. `rel` is the repo-relative path with forward
+/// slashes; `vocab` is the ledger component-key vocabulary.
+pub fn lint_file(rel: &str, src: &str, vocab: &BTreeSet<String>) -> Vec<Violation> {
+    let view = scan(src);
+    let mut out = Vec::new();
+    let whitelisted = UNSAFE_WHITELIST.contains(&rel);
+    let tests_from = test_region_start(&view.code);
+
+    for (idx, line) in view.code.iter().enumerate() {
+        let lineno = idx + 1;
+        let in_tests = idx >= tests_from;
+
+        // R1 / R2: unsafe discipline (applies in test regions too)
+        if has_word(line, "unsafe") {
+            if !whitelisted {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "R2",
+                    message: format!(
+                        "`unsafe` outside the whitelist ({}); move the raw \
+                         operation behind one of the audited kernels or extend \
+                         the whitelist *and* rust/src/lib.rs deliberately",
+                        UNSAFE_WHITELIST.join(", ")
+                    ),
+                });
+            } else {
+                let lo = idx.saturating_sub(SAFETY_WINDOW);
+                let documented = view.comments[lo..=idx]
+                    .iter()
+                    .any(|c| c.contains("SAFETY") || c.contains("# Safety"));
+                if !documented {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "R1",
+                        message: format!(
+                            "`unsafe` without a SAFETY comment within {SAFETY_WINDOW} \
+                             lines above; state the aliasing/lifetime argument"
+                        ),
+                    });
+                }
+            }
+        }
+
+        if in_tests {
+            continue;
+        }
+
+        // R3: thread::spawn quarantine
+        if rel != "rust/src/util/threadpool.rs"
+            && !rel.starts_with("rust/tests/")
+            && line.contains("thread::spawn")
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "R3",
+                message: "`thread::spawn` outside util/threadpool.rs; route the \
+                          work through the worker pool (parallel_map / \
+                          parallel_for_chunks) so sequential mode, the thread \
+                          budget, and the loom model stay authoritative"
+                    .to_string(),
+            });
+        }
+
+        // R4: randomized-iteration maps on determinism paths
+        if map_scope(rel) && (has_word(line, "HashMap") || has_word(line, "HashSet")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "R4",
+                message: "HashMap/HashSet on a determinism-critical path; use \
+                          BTreeMap/BTreeSet (or an index-keyed Vec) so iteration \
+                          order cannot leak into merged floats or report output"
+                    .to_string(),
+            });
+        }
+
+        // R5: ledger component keys
+        if ledger_scope(rel) && LEDGER_PATTERNS.iter().any(|p| line.contains(p)) {
+            if let Some(key) = view.strings[idx].first() {
+                if !vocab.contains(key.as_str()) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "R5",
+                        message: format!(
+                            "ledger component key {key:?} is not in the vocabulary \
+                             block of rust/src/mpi_sim/ledger.rs ({}); fix the typo \
+                             or extend the vocabulary",
+                            vocab.iter().map(|k| format!("{k:?}")).collect::<Vec<_>>().join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse the component-key vocabulary block out of ledger.rs: every
+/// quoted token between the `Component key vocabulary` marker and the
+/// `(end of vocabulary)` terminator.
+pub fn parse_vocab(ledger_src: &str) -> Result<BTreeSet<String>, Violation> {
+    let missing = |msg: &str| Violation {
+        file: "rust/src/mpi_sim/ledger.rs".to_string(),
+        line: 1,
+        rule: "R5",
+        message: msg.to_string(),
+    };
+    let mut lines = ledger_src.lines();
+    for l in lines.by_ref() {
+        if l.contains("Component key vocabulary") {
+            break;
+        }
+    }
+    let mut vocab = BTreeSet::new();
+    let mut terminated = false;
+    for l in lines {
+        if l.contains("(end of vocabulary)") {
+            terminated = true;
+            break;
+        }
+        // odd-indexed segments of a split on '"' are the quoted tokens
+        for (seg_idx, seg) in l.split('"').enumerate() {
+            if seg_idx % 2 == 1 {
+                vocab.insert(seg.to_string());
+            }
+        }
+    }
+    if !terminated || vocab.is_empty() {
+        return Err(missing(
+            "component-key vocabulary block not found (marker `Component key \
+             vocabulary` ... `(end of vocabulary)`); the lint cannot check \
+             charge sites without it",
+        ));
+    }
+    Ok(vocab)
+}
+
+/// Recursively collect `.rs` files, skipping `vendor` and `target`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return, // missing directory: nothing to lint
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name != "vendor" && name != "target" {
+                collect_rs(&path, out);
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Lint the whole repository rooted at `root`. Deterministic: files
+/// are visited in sorted path order.
+pub fn lint_tree(root: &Path) -> Vec<Violation> {
+    let ledger_rel = "rust/src/mpi_sim/ledger.rs";
+    let ledger_src = match fs::read_to_string(root.join(ledger_rel)) {
+        Ok(s) => s,
+        Err(e) => {
+            return vec![Violation {
+                file: ledger_rel.to_string(),
+                line: 1,
+                rule: "IO",
+                message: format!("cannot read ledger for the key vocabulary: {e}"),
+            }]
+        }
+    };
+    let vocab = match parse_vocab(&ledger_src) {
+        Ok(v) => v,
+        Err(v) => return vec![v],
+    };
+
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches", "examples", "xtask/src"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match fs::read_to_string(f) {
+            Ok(src) => out.extend(lint_file(&rel, &src, &vocab)),
+            Err(e) => out.push(Violation {
+                file: rel,
+                line: 1,
+                rule: "IO",
+                message: format!("cannot read file: {e}"),
+            }),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> BTreeSet<String> {
+        ["filter", "spmm", "orth", "rayleigh", "residual", "other", "embed", "kmeans"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- tokenizer ----
+
+    #[test]
+    fn comments_are_blanked_from_the_code_view() {
+        let view = scan("let x = 1; // a HashMap lives here\n/* and\n   here */ let y = 2;\n");
+        assert!(!view.code.join("\n").contains("HashMap"));
+        assert!(view.comments[0].contains("HashMap"));
+        assert!(view.comments[1].contains("and"));
+        assert!(view.code[2].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn string_bodies_are_blanked_and_recorded_per_line() {
+        let view = scan("let s = \"spmm\";\nlet t = \"a\\\"b\";\n");
+        assert!(!view.code.join("\n").contains("spmm"));
+        assert_eq!(view.strings[0], vec!["spmm".to_string()]);
+        assert_eq!(view.strings[1], vec!["a\\\"b".to_string()]);
+    }
+
+    #[test]
+    fn raw_strings_are_handled() {
+        let view = scan("let s = r#\"no \"escape\" here\"#;\nlet b = b\"bytes\";\n");
+        assert_eq!(view.strings[0], vec!["no \"escape\" here".to_string()]);
+        assert_eq!(view.strings[1], vec!["bytes".to_string()]);
+        assert!(!view.code.join("\n").contains("escape"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let view = scan("fn f<'a>(x: &'a u32) -> &'a u32 { let c = 'x'; let _ = c; x }\n");
+        assert!(view.code[0].contains("fn f<'a>(x: &'a u32)"));
+        assert!(!view.code[0].contains("'x'"));
+    }
+
+    #[test]
+    fn test_region_starts_at_the_cfg_test_attribute() {
+        let view = scan("fn a() {}\n#[cfg(test)]\nmod tests {\n}\n");
+        assert_eq!(test_region_start(&view.code), 1);
+        // a feature cfg whose name merely contains "test" inside a
+        // string literal does not open a test region
+        let view = scan("#[cfg(feature = \"loom-tests\")]\nfn b() {}\n");
+        assert_eq!(test_region_start(&view.code), view.code.len());
+    }
+
+    // ---- R1 / R2 ----
+
+    #[test]
+    fn r1_unsafe_without_safety_comment_is_flagged() {
+        let src = "fn f(p: *mut f64) {\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 1) };\n    s[0] = 0.0;\n}\n";
+        let v = lint_file("rust/src/sparse/csr.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R1"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn r1_safety_comment_within_window_passes() {
+        let src = "fn f(p: *mut f64) {\n    // SAFETY: single caller, exclusive access, len 1.\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 1) };\n    s[0] = 0.0;\n}\n";
+        let v = lint_file("rust/src/sparse/csr.rs", src, &vocab());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r1_accepts_a_safety_doc_section_on_unsafe_fns() {
+        let src = "/// # Safety\n/// Caller guarantees exclusivity.\nunsafe fn g(p: *mut f64) {\n    let _ = p;\n}\n";
+        let v = lint_file("rust/src/util/threadpool.rs", src, &vocab());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r2_unsafe_outside_the_whitelist_is_flagged() {
+        let src = "fn f(p: *mut f64) {\n    // SAFETY: a comment does not make it allowed.\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 1) };\n    s[0] = 0.0;\n}\n";
+        let v = lint_file("rust/src/eig/core.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R2"]);
+    }
+
+    #[test]
+    fn the_word_unsafe_in_comments_and_strings_is_ignored() {
+        let src = "// unsafe is discussed here only\nfn f() { let _ = \"unsafe\"; }\n";
+        let v = lint_file("rust/src/eig/core.rs", src, &vocab());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    // ---- R3 ----
+
+    #[test]
+    fn r3_thread_spawn_outside_the_pool_is_flagged() {
+        let src = "fn main() {\n    let t = std::thread::spawn(|| 1);\n    t.join().unwrap();\n}\n";
+        let v = lint_file("examples/foo.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R3"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn r3_allows_the_pool_itself_tests_dir_and_test_regions() {
+        let src = "fn main() {\n    let t = std::thread::spawn(|| 1);\n    t.join().unwrap();\n}\n";
+        assert!(lint_file("rust/src/util/threadpool.rs", src, &vocab()).is_empty());
+        assert!(lint_file("rust/tests/rank_parallel.rs", src, &vocab()).is_empty());
+        let in_tests = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let _ = std::thread::spawn(|| 1); }\n}\n";
+        assert!(lint_file("rust/src/graph/gen.rs", in_tests, &vocab()).is_empty());
+    }
+
+    // ---- R4 ----
+
+    #[test]
+    fn r4_hash_maps_on_determinism_paths_are_flagged() {
+        let src = "use std::collections::HashMap;\nfn f() -> HashMap<u32, f64> {\n    HashMap::new()\n}\n";
+        let v = lint_file("rust/src/dist/cluster.rs", src, &vocab());
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|x| x.rule == "R4"), "{v:?}");
+    }
+
+    #[test]
+    fn r4_out_of_scope_files_and_btree_maps_pass() {
+        let hash = "use std::collections::HashMap;\nfn f() { let _: HashMap<u32, u32> = HashMap::new(); }\n";
+        assert!(lint_file("rust/src/graph/streaming.rs", hash, &vocab()).is_empty());
+        let btree = "use std::collections::BTreeMap;\nfn f() { let _: BTreeMap<u32, u32> = BTreeMap::new(); }\n";
+        assert!(lint_file("rust/src/dist/cluster.rs", btree, &vocab()).is_empty());
+    }
+
+    // ---- R5 ----
+
+    #[test]
+    fn r5_unknown_ledger_key_is_flagged() {
+        let src = "fn f(led: &mut Ledger, c: Charge) {\n    led.charge(\"bogus\", c);\n}\n";
+        let v = lint_file("rust/src/dist/cluster.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R5"]);
+        assert!(v[0].message.contains("bogus"));
+    }
+
+    #[test]
+    fn r5_vocabulary_keys_and_variable_keys_pass() {
+        let lit = "fn f(led: &mut Ledger, c: Charge) {\n    led.charge(\"spmm\", c);\n}\n";
+        assert!(lint_file("rust/src/dist/cluster.rs", lit, &vocab()).is_empty());
+        let var = "fn f(led: &mut Ledger, comp: &'static str, w: &[f64]) {\n    led.superstep_weighted(comp, w, |r| r);\n}\n";
+        assert!(lint_file("rust/src/dist/cluster.rs", var, &vocab()).is_empty());
+        // out of scope: the ComponentTimers sink keeps its own keys
+        let timers = "fn f(t: &mut ComponentTimers) {\n    t.time(\"rr\", || 1);\n}\n";
+        assert!(lint_file("rust/src/eig/lobpcg.rs", timers, &vocab()).is_empty());
+    }
+
+    #[test]
+    fn r5_doc_comment_examples_are_ignored() {
+        let src = "/// ```\n/// led.superstep(\"anything\", 4, |r| r);\n/// ```\nfn f() {}\n";
+        assert!(lint_file("rust/src/mpi_sim/exec.rs", src, &vocab()).is_empty());
+    }
+
+    // ---- vocabulary parsing ----
+
+    #[test]
+    fn vocabulary_block_parses() {
+        let src = "//! Component key vocabulary (machine-read):\n//!\n//! \"filter\", \"spmm\",\n//! \"embed\"\n//!\n//! (end of vocabulary)\nfn x() {}\n";
+        let v = parse_vocab(src).unwrap();
+        let want: BTreeSet<String> =
+            ["filter", "spmm", "embed"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn missing_vocabulary_block_is_a_violation() {
+        let err = parse_vocab("//! no marker here\nfn x() {}\n").unwrap_err();
+        assert_eq!(err.rule, "R5");
+    }
+
+    // ---- the real tree ----
+
+    #[test]
+    fn repository_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let v = lint_tree(root);
+        assert!(
+            v.is_empty(),
+            "lint violations:\n{}",
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn real_ledger_vocabulary_contains_the_paper_components() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let src = std::fs::read_to_string(root.join("rust/src/mpi_sim/ledger.rs")).unwrap();
+        let v = parse_vocab(&src).unwrap();
+        for key in ["filter", "spmm", "orth", "rayleigh", "residual", "other", "embed", "kmeans"] {
+            assert!(v.contains(key), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! `cargo xtask` — repo task runner. One task so far: `lint`, the
+//! repo-invariant pass (rules R1-R5, see lint.rs). Exit code 0 when the
+//! tree is clean, 1 with one line per violation otherwise.
+
+mod lint;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// The workspace root: xtask/ lives directly under it.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask must live one level below the repo root")
+        .to_path_buf()
+}
+
+fn usage() {
+    eprintln!(
+        "usage: cargo xtask <task>\n\
+         \n\
+         tasks:\n\
+         \x20 lint   run the repo-invariant lint pass:\n\
+         \x20        R1  unsafe sites carry a SAFETY argument\n\
+         \x20        R2  unsafe only in the whitelisted kernel/pool files\n\
+         \x20        R3  no thread::spawn outside util/threadpool.rs\n\
+         \x20        R4  no HashMap/HashSet on determinism-critical paths\n\
+         \x20        R5  ledger component keys match the documented vocabulary"
+    );
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = repo_root();
+            let violations = lint::lint_tree(&root);
+            if violations.is_empty() {
+                println!("xtask lint: tree clean (rules R1-R5)");
+                ExitCode::SUCCESS
+            } else {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                eprintln!("xtask lint: {} violation(s)", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        _ => {
+            usage();
+            ExitCode::from(2)
+        }
+    }
+}
