@@ -1,5 +1,5 @@
 //! END-TO-END DRIVER — proves all three layers compose on a real small
-//! workload (EXPERIMENTS.md §E2E records a run):
+//! workload (DESIGN.md §Per-figure experiment index maps the runs):
 //!
 //!   graph generator (L3)  ->  normalized Laplacian (L3)
 //!   -> Block Chebyshev-Davidson whose SpMM/filter hot path executes the

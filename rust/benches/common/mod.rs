@@ -57,3 +57,46 @@ pub fn save(name: &str, table: &dist_chebdav::coordinator::Table) {
         Err(e) => println!("[json save failed: {e}]"),
     }
 }
+
+/// Current git revision (short hash, "-dirty" suffixed when the tree has
+/// uncommitted changes), or "unknown" outside a git checkout — stamped
+/// into every BENCH_*.json perf-trajectory record.
+pub fn git_rev() -> String {
+    let run = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+    };
+    match run(&["rev-parse", "--short", "HEAD"]) {
+        Some(rev) if !rev.is_empty() => {
+            let dirty = run(&["status", "--porcelain"]).map(|s| !s.is_empty()).unwrap_or(false);
+            if dirty {
+                format!("{rev}-dirty")
+            } else {
+                rev
+            }
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+/// Seconds since the Unix epoch (record ordering within a trajectory).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Append one record to the repo root's append-only perf trajectory
+/// (`BENCH_<name>.json`, JSON Lines).
+pub fn append_trajectory(name: &str, record: &dist_chebdav::util::Json) {
+    match dist_chebdav::coordinator::append_bench_record(name, record) {
+        Ok(p) => println!("[appended perf record to {}]", p.display()),
+        Err(e) => println!("[perf record append failed: {e}]"),
+    }
+}

@@ -6,9 +6,12 @@
 //! * fused PJRT Chebyshev filter vs per-degree recurrence;
 //! * the superstep executor: serial vs parallel rank execution of a
 //!   1.5D SpMM superstep (the realized wall-clock speedup of
-//!   `mpi_sim::exec` — billing is identical in both modes).
+//!   `mpi_sim::exec` — billing is identical in both modes);
+//! * old (scalar) vs new (register-tiled / fixed-width) SpMM and GEMM
+//!   kernels across panel widths, appended as one record per run to the
+//!   repo root's append-only `BENCH_kernels.json` perf trajectory.
 //!
-//! Used to drive the performance pass recorded in EXPERIMENTS.md §Perf.
+//! Used to drive the performance pass recorded in DESIGN.md §Perf.
 
 mod common;
 
@@ -20,12 +23,12 @@ use dist_chebdav::linalg::Mat;
 use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
 use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
 use dist_chebdav::sparse::EllHyb;
-use dist_chebdav::util::{bench, Rng};
+use dist_chebdav::util::{bench, Json, Rng};
 
 fn main() {
     common::apply_run_defaults();
     let n = common::bench_n(8_192);
-    common::banner("kernels", "hot-path microbenches (EXPERIMENTS.md §Perf)");
+    common::banner("kernels", "hot-path microbenches (DESIGN.md §Perf)");
     let mat = table2_matrix("LBOLBSV", n, 3);
     let a = &mat.lap;
     let nnz = a.nnz();
@@ -213,4 +216,161 @@ fn main() {
     }
     print!("{}", table.render());
     common::save("kernels_superstep_small", &table);
+
+    // --- old-vs-new kernel pass: the DESIGN.md §Perf trajectory ---
+    // Pinned to one worker thread so the comparison isolates the
+    // register-tiling / fixed-width-unrolling win (the threading
+    // strategy did not change in the raw-speed pass). The SpMM rows also
+    // assert the drop-in contract on every run: the fast kernel must be
+    // *bit-identical* to the scalar reference, not approximately equal.
+    let saved_threads = dist_chebdav::util::configured_threads();
+    dist_chebdav::util::set_threads(1);
+    let mut records: Vec<Json> = Vec::new();
+    let rec = |kernel: &str, k: usize, old_s: f64, new_s: f64| {
+        Json::obj()
+            .put("kernel", kernel)
+            .put("k", k)
+            .put("old_s", old_s)
+            .put("new_s", new_s)
+            .put("speedup", old_s / new_s.max(1e-30))
+    };
+
+    let mut table = Table::new(
+        &format!("SpMM scalar (old) vs fixed-width 2-row unroll (new), n={n} nnz={nnz}, 1 thread"),
+        &["k", "old", "new", "speedup", "GF/s new"],
+    );
+    for k in [1usize, 2, 4, 8, 16, 24, 32] {
+        let x = Mat::randn(n, k, &mut rng);
+        let diff = oldk::spmm_scalar(a, &x).max_abs_diff(&a.spmm(&x));
+        assert!(diff == 0.0, "SpMM drop-in bit-compat violated at k={k}: {diff:e}");
+        let s_old = bench(2, 5, || oldk::spmm_scalar(a, &x));
+        let s_new = bench(2, 5, || a.spmm(&x));
+        let flops = (2 * nnz * k) as f64;
+        table.row(&[
+            k.to_string(),
+            fmt_secs(s_old.min),
+            fmt_secs(s_new.min),
+            fmt_f(s_old.min / s_new.min.max(1e-30), 2),
+            fmt_f(flops / s_new.min / 1e9, 2),
+        ]);
+        records.push(rec("spmm", k, s_old.min, s_new.min));
+    }
+    print!("{}", table.render());
+    common::save("kernels_spmm_old_new", &table);
+
+    let mut table = Table::new(
+        &format!("GEMM scalar (old) vs 4x4 register tiles (new), n={n}, 1 thread"),
+        &["kernel", "k", "old", "new", "speedup"],
+    );
+    for k in [8usize, 16, 32] {
+        let at = Mat::randn(n, k, &mut rng);
+        let bt = Mat::randn(n, k, &mut rng);
+        let s_old = bench(2, 5, || oldk::atb_scalar(&at, &bt));
+        let s_new = bench(2, 5, || dist_chebdav::linalg::atb(&at, &bt));
+        table.row(&[
+            "atb".into(),
+            k.to_string(),
+            fmt_secs(s_old.min),
+            fmt_secs(s_new.min),
+            fmt_f(s_old.min / s_new.min.max(1e-30), 2),
+        ]);
+        records.push(rec("atb", k, s_old.min, s_new.min));
+
+        let y = Mat::randn(k, k, &mut rng);
+        let s_old = bench(2, 5, || oldk::matmul_scalar(&at, &y));
+        let s_new = bench(2, 5, || dist_chebdav::linalg::tall_times_small(&at, &y));
+        table.row(&[
+            "tall_times_small".into(),
+            k.to_string(),
+            fmt_secs(s_old.min),
+            fmt_secs(s_new.min),
+            fmt_f(s_old.min / s_new.min.max(1e-30), 2),
+        ]);
+        records.push(rec("tall_times_small", k, s_old.min, s_new.min));
+    }
+    dist_chebdav::util::set_threads(saved_threads);
+    print!("{}", table.render());
+    common::save("kernels_gemm_old_new", &table);
+
+    // one self-contained trajectory record per run (see README's
+    // BENCH_kernels.json schema; `cargo xtask check-bench` validates it)
+    let record = Json::obj()
+        .put("bench", "kernels")
+        .put("rev", common::git_rev())
+        .put("unix_time", common::unix_now() as i64)
+        .put(
+            "config",
+            Json::obj()
+                .put("n", n)
+                .put("threads", 1usize)
+                .put("full", common::full()),
+        )
+        .put("records", records);
+    common::append_trajectory("kernels", &record);
+}
+
+/// The pre-tiling kernels, kept verbatim (single-threaded) as the
+/// baseline side of the old-vs-new tables: scalar row-loop SpMM and the
+/// scalar zero-skipping GEMM loops that `linalg::gemm` replaced with
+/// 4x4 register tiles. Safe code only — benches sit outside the unsafe
+/// whitelist.
+mod oldk {
+    use dist_chebdav::linalg::Mat;
+    use dist_chebdav::sparse::Csr;
+
+    /// Scalar CSR SpMM, storage-order accumulation — the float-op order
+    /// the fixed-width kernels must reproduce bit-for-bit.
+    pub fn spmm_scalar(a: &Csr, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(a.nrows, x.cols);
+        for i in 0..a.nrows {
+            let (s, e) = (a.indptr[i], a.indptr[i + 1]);
+            let yrow = y.row_mut(i);
+            for t in s..e {
+                let v = a.values[t];
+                let xrow = x.row(a.indices[t] as usize);
+                for (yv, &xv) in yrow.iter_mut().zip(xrow.iter()) {
+                    *yv += v * xv;
+                }
+            }
+        }
+        y
+    }
+
+    /// Scalar C = A^T B (row-streaming rank-1 updates with zero skip).
+    pub fn atb_scalar(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.cols, b.cols);
+        for i in 0..a.rows {
+            let ar = a.row(i);
+            let br = b.row(i);
+            for (p, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let base = p * b.cols;
+                for (t, &bv) in br.iter().enumerate() {
+                    c.data[base + t] += av * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Scalar C = A B (i-k-j loop with zero skip).
+    pub fn matmul_scalar(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            let ar = a.row(i);
+            for (kk, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let br = b.row(kk);
+                let base = i * b.cols;
+                for (t, &bv) in br.iter().enumerate() {
+                    c.data[base + t] += av * bv;
+                }
+            }
+        }
+        c
+    }
 }

@@ -10,4 +10,4 @@ pub use experiments::{
     grid_side, paper_solver_set, quality_cell, table1, table2, vs_parsec, ComponentScalingRow,
     DistRunRow, E2eScalingRow, QualityRow, Table1Row, Table2Row, VsParsecRow,
 };
-pub use report::{fmt_f, fmt_secs, save_json, Table};
+pub use report::{append_bench_record, fmt_f, fmt_secs, save_json, Table};

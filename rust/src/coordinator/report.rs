@@ -94,6 +94,25 @@ pub fn fmt_f(x: f64, prec: usize) -> String {
     format!("{x:.prec$}")
 }
 
+/// Append one perf-trajectory record to the repo root's append-only
+/// `BENCH_<name>.json` ledger (JSON Lines — one self-contained record
+/// per run, each carrying its git rev and config, so the file
+/// accumulates a cross-commit performance trajectory; schema-checked by
+/// `cargo xtask check-bench`). Creates the file on first use.
+pub fn append_bench_record(name: &str, record: &Json) -> std::io::Result<std::path::PathBuf> {
+    use std::io::Write as _;
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("the rust crate sits one level under the repo root")
+        .join(format!("BENCH_{name}.json"));
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)?;
+    writeln!(f, "{}", record.render())?;
+    Ok(path)
+}
+
 /// Write a JSON report next to the bench output (`results/<name>.json`).
 pub fn save_json(name: &str, json: &Json) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");

@@ -14,7 +14,7 @@
 
 use super::matrix::DistMatrix;
 use super::rowwise_update;
-use super::spmm::spmm_1p5d;
+use super::spmm::{spmm_1p5d, spmm_1p5d_into};
 use crate::linalg::Mat;
 use crate::mpi_sim::{CostModel, Ledger};
 
@@ -58,11 +58,15 @@ pub fn dist_cheb_filter(
     if m == 1 {
         return u;
     }
+    // Ping-pong workspace: three n x k panels for the whole recurrence
+    // (u = current iterate, v_prev = previous iterate, w = SpMM
+    // scratch), rotated by swaps — zero allocations per degree.
     let mut v_prev = v.clone();
+    let mut w = Mat::zeros(u.rows, u.cols);
     for _ in 2..=m {
         let sigma1 = 1.0 / (tau - sigma);
         // W = (2 sigma1 / e)(A U - c U) - sigma sigma1 V, single pass
-        let mut w = spmm_1p5d(dm, &u, false, cost, led, comp);
+        spmm_1p5d_into(dm, &u, false, cost, led, comp, &mut w);
         let s1 = 2.0 * sigma1 / e;
         let s2 = sigma * sigma1;
         rowwise_update(led, comp, v.rows, p, k, &mut w.data, |lo, hi, wb| {
@@ -74,7 +78,9 @@ pub fn dist_cheb_filter(
                 *wv = s1 * (*wv - c * uv) - s2 * pv;
             }
         });
-        v_prev = std::mem::replace(&mut u, w);
+        // rotate: u <- w (new iterate), v_prev <- old u, w <- old v_prev
+        std::mem::swap(&mut u, &mut w);
+        std::mem::swap(&mut w, &mut v_prev);
         sigma = sigma1;
     }
     u

@@ -64,7 +64,7 @@ pub use filter::dist_cheb_filter;
 pub use matrix::DistMatrix;
 pub use orth::{dgks_orthonormalize, dist_atb};
 pub use scaling::{arpack_scaling, lobpcg_scaling, ScalingPoint, SolverScaling};
-pub use spmm::{rows_1d, spmm_1d, spmm_1p5d};
+pub use spmm::{rows_1d, spmm_1d, spmm_1p5d, spmm_1p5d_into};
 pub use tsqr::tsqr;
 
 use crate::mpi_sim::Ledger;

@@ -42,10 +42,31 @@ pub fn spmm_1p5d(
     led: &mut Ledger,
     comp: &'static str,
 ) -> Mat {
+    let mut y = Mat::zeros(dm.grid.n, x.cols);
+    spmm_1p5d_into(dm, x, transposed, cost, led, comp, &mut y);
+    y
+}
+
+/// [`spmm_1p5d`] writing into a caller-owned `(n x k)` buffer, which is
+/// overwritten — the zero-alloc entry point for the distributed filter's
+/// ping-pong workspace. Identical charges, merge order, and float
+/// result.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_1p5d_into(
+    dm: &DistMatrix,
+    x: &Mat,
+    transposed: bool,
+    cost: &CostModel,
+    led: &mut Ledger,
+    comp: &'static str,
+    y: &mut Mat,
+) {
     let g = &dm.grid;
     let (n, q) = (g.n, g.q);
     assert_eq!(x.rows, n, "panel rows {} != matrix dimension {n}", x.rows);
     let k = x.cols;
+    assert_eq!(y.rows, n);
+    assert_eq!(y.cols, k);
 
     if q > 1 {
         led.charge(comp, cost.allgather(dm.max_flat_rows() * k, q));
@@ -79,7 +100,7 @@ pub fn spmm_1p5d(
     // used. Billed at the slowest rank's share, as the in-loop
     // accumulation was before the ranks ran concurrently.
     let t0 = std::time::Instant::now();
-    let mut y = Mat::zeros(n, k);
+    y.data.fill(0.0);
     for (r, part) in parts.iter().enumerate() {
         let (i, _) = g.coords_of(r);
         let (rlo, _) = g.row_range(i);
@@ -91,7 +112,6 @@ pub fn spmm_1p5d(
         }
     }
     led.add_compute(comp, t0.elapsed().as_secs_f64() * slowest_share(&weights));
-    y
 }
 
 /// Split A into `p` full-width row blocks (the PARSEC 1D layout).

@@ -33,7 +33,7 @@ pub fn chebyshev_filter_via_spmm<Op: SpmmOp + ?Sized>(
 
     // U = (A V - c V) * sigma / e — combine fused into one pass over the
     // panel (the unfused axpy+scale costs two extra full sweeps; see
-    // EXPERIMENTS.md §Perf)
+    // DESIGN.md §Perf)
     let mut u = a_op.spmm(v);
     {
         let s = sigma / e;
@@ -44,11 +44,15 @@ pub fn chebyshev_filter_via_spmm<Op: SpmmOp + ?Sized>(
     if m == 1 {
         return u;
     }
+    // Ping-pong workspace: three n x k panels total for the whole
+    // recurrence (u = current iterate, v_prev = previous iterate, w =
+    // SpMM scratch), rotated by swaps — zero allocations per degree.
     let mut v_prev = v.clone();
+    let mut w = Mat::zeros(u.rows, u.cols);
     for _ in 2..=m {
         let sigma1 = 1.0 / (tau - sigma);
         // W = (2 sigma1 / e)(A U - c U) - sigma sigma1 V, single fused pass
-        let mut w = a_op.spmm(&u);
+        a_op.spmm_into(&u, &mut w);
         let s1 = 2.0 * sigma1 / e;
         let s2 = sigma * sigma1;
         for ((wv, &uv), &pv) in w
@@ -59,7 +63,9 @@ pub fn chebyshev_filter_via_spmm<Op: SpmmOp + ?Sized>(
         {
             *wv = s1 * (*wv - c * uv) - s2 * pv;
         }
-        v_prev = std::mem::replace(&mut u, w);
+        // rotate: u <- w (new iterate), v_prev <- old u, w <- old v_prev
+        std::mem::swap(&mut u, &mut w);
+        std::mem::swap(&mut w, &mut v_prev);
         sigma = sigma1;
     }
     u

@@ -153,20 +153,26 @@ pub fn davidson_core<B: DavidsonBackend>(
     // Step 2: initial block.
     let k_init = v_init.map(|v| v.cols).unwrap_or(0);
     let mut k_i = 0usize; // used initial vectors
-    let take_init = |k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| -> Mat {
-        let mut block = Mat::zeros(n, count);
-        for c in 0..count {
-            if k_i + c < k_init {
-                let col = v_init.unwrap().col(k_i + c);
-                block.set_col(c, &col);
-            } else {
-                let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                block.set_col(c, &col);
+    // Write initial/random columns straight into the leading columns of
+    // the target panel — no temporary block. The RNG draw order is
+    // exactly the old per-column order, which the cross-backend
+    // `rng_draws` invariant pins down.
+    let fill_init =
+        |block: &mut Mat, k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| {
+            for c in 0..count {
+                if k_i + c < k_init {
+                    let col = v_init.unwrap().col(k_i + c);
+                    block.set_col(c, &col);
+                } else {
+                    let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    block.set_col(c, &col);
+                }
             }
-        }
-        block
-    };
-    let mut v_tmp = take_init(k_i, kb, &mut rng, v_init);
+        };
+    // Loop-invariant (n x kb) filter-input panel, reused across all
+    // outer iterations (step 17 overwrites every column in place).
+    let mut v_tmp = Mat::zeros(n, kb);
+    fill_init(&mut v_tmp, k_i, kb, &mut rng, v_init);
     k_i = k_i.min(k_init) + kb.min(k_init.saturating_sub(k_i));
 
     // Basis and A-image storage.
@@ -342,13 +348,10 @@ pub fn davidson_core<B: DavidsonBackend>(
         // initial vectors with the current best non-converged Ritz
         // vectors.
         let fresh = e_c.min(k_init.saturating_sub(k_i));
-        v_tmp = Mat::zeros(n, kb);
+        // v_tmp is reused in place: every column 0..kb is overwritten
+        // below, so no per-iteration panel allocation.
         if fresh > 0 {
-            let init_cols = take_init(k_i, fresh, &mut rng, v_init);
-            for c in 0..fresh {
-                let col = init_cols.col(c);
-                v_tmp.set_col(c, &col);
-            }
+            fill_init(&mut v_tmp, k_i, fresh, &mut rng, v_init);
             k_i += fresh;
         }
         for c in fresh..kb {

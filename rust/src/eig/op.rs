@@ -15,6 +15,16 @@ pub trait SpmmOp {
     fn n(&self) -> usize;
     /// Y = A X for a tall-skinny panel.
     fn spmm(&self, x: &Mat) -> Mat;
+    /// Y = A X written into a caller-owned `(n x x.cols)` buffer, which
+    /// is overwritten. The zero-alloc hot path for the Chebyshev filter's
+    /// ping-pong workspace; backends with a native into-kernel override
+    /// this, the default delegates to [`SpmmOp::spmm`] and copies.
+    fn spmm_into(&self, x: &Mat, y: &mut Mat) {
+        let out = self.spmm(x);
+        assert_eq!(y.rows, out.rows);
+        assert_eq!(y.cols, out.cols);
+        y.data.copy_from_slice(&out.data);
+    }
     /// Number of stored nonzeros (for flop accounting).
     fn nnz(&self) -> usize;
 
@@ -33,6 +43,9 @@ impl SpmmOp for Csr {
     }
     fn spmm(&self, x: &Mat) -> Mat {
         Csr::spmm(self, x)
+    }
+    fn spmm_into(&self, x: &Mat, y: &mut Mat) {
+        Csr::spmm_into(self, x, y)
     }
     fn nnz(&self) -> usize {
         Csr::nnz(self)

@@ -4,66 +4,159 @@
 //! Three shapes dominate: `(N x a)^T (N x b)` Gram/Rayleigh updates
 //! (a, b <= act_max), `(N x a)(a x b)` subspace rotations, and small
 //! square products. N runs to ~10^6 while a, b stay <= ~100, so the
-//! kernels below block over rows and keep the small dimension in
-//! registers; row blocks go to the scoped thread pool.
+//! kernels below hold an MR x NR register tile of the small-dimension
+//! output while streaming over N, and row blocks go to the scoped
+//! thread pool. Each public product also has an `_into` variant that
+//! writes a caller-owned buffer (the zero-alloc hot path); see
+//! DESIGN.md §Perf for the tiling and determinism contracts.
 
 use super::Mat;
 use crate::util::{parallel_for_chunks, SendPtr};
 
+/// Register micro-tile edge: MR x NR accumulators stay in registers
+/// while the kernel streams the long dimension.
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// `atb`'s fixed partial-sum block count. The row range always splits
+/// into exactly this many blocks (the historical thread cap, so the
+/// available parallelism is unchanged) *independent of the thread
+/// budget*: per-block contents and the ascending-block merge perform
+/// the same float additions in the same order at every budget, which
+/// makes the result budget-invariant (regression:
+/// `atb_bit_equal_across_thread_counts`).
+const ATB_BLOCKS: usize = 8;
+
 /// C = A^T * B where A is (n x a), B is (n x b) — the Rayleigh-quotient /
-/// Gram update. Accumulates in per-thread buffers then reduces.
+/// Gram update. Allocates the output and delegates to [`atb_into`].
 pub fn atb(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols, b.cols);
+    atb_into(a, b, &mut c);
+    c
+}
+
+/// [`atb`] writing into a caller-owned `(a.cols x b.cols)` buffer,
+/// which is overwritten. Accumulates per-row-block partials (register
+/// tiled) and reduces them in ascending block order.
+pub fn atb_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    // thread_budget: single-threaded inside a simulated-rank superstep
+    let threads = crate::util::thread_budget().min(ATB_BLOCKS).max(1);
+    atb_into_threads(a, b, c, threads);
+}
+
+/// The explicit-thread-count body behind [`atb_into`]; the regression
+/// test drives it at budgets 1, 2, and 8 directly to pin the
+/// bit-equality claim without touching the global thread knob.
+fn atb_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
     assert_eq!(a.rows, b.rows);
     let (n, ac, bc) = (a.rows, a.cols, b.cols);
-    // thread_budget: single-threaded inside a simulated-rank superstep
-    let threads = crate::util::thread_budget().min(8).max(1);
-    let nblocks = threads;
-    let chunk = n.div_ceil(nblocks.max(1)).max(1);
-    let mut partials = vec![vec![0.0f64; ac * bc]; nblocks];
+    assert_eq!(c.rows, ac);
+    assert_eq!(c.cols, bc);
+    let chunk = n.div_ceil(ATB_BLOCKS).max(1);
+    let mut partials = vec![0.0f64; ATB_BLOCKS * ac * bc];
     {
-        let parts: Vec<_> = partials.iter_mut().collect();
-        let slot = std::sync::Mutex::new(parts);
-        parallel_for_chunks(nblocks, threads, |blo, bhi| {
+        let pptr = SendPtr(partials.as_mut_ptr());
+        parallel_for_chunks(ATB_BLOCKS, threads, |blo, bhi| {
+            let pptr = &pptr;
             for blk in blo..bhi {
                 let lo = blk * chunk;
                 let hi = ((blk + 1) * chunk).min(n);
                 if lo >= hi {
                     continue;
                 }
-                let mut acc = vec![0.0f64; ac * bc];
-                for i in lo..hi {
-                    let ar = a.row(i);
-                    let br = b.row(i);
-                    for (p, &av) in ar.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let dst = &mut acc[p * bc..(p + 1) * bc];
-                        for (d, &bv) in dst.iter_mut().zip(br.iter()) {
-                            *d += av * bv;
-                        }
-                    }
-                }
-                let mut guard = slot.lock().unwrap();
-                guard[blk].copy_from_slice(&acc);
+                // SAFETY: parallel_for_chunks hands out disjoint
+                // [blo, bhi) block ranges, so block blk's `ac * bc`
+                // partial slice has exactly one writer; partials
+                // outlives the scoped threads.
+                let acc = unsafe {
+                    std::slice::from_raw_parts_mut(pptr.0.add(blk * ac * bc), ac * bc)
+                };
+                atb_block(a, b, lo, hi, acc);
             }
         });
     }
-    let mut c = Mat::zeros(ac, bc);
-    for part in partials {
+    // Deterministic reduce: ascending block order, always over all
+    // ATB_BLOCKS slots — the merge sequence never depends on `threads`.
+    c.data.fill(0.0);
+    for blk in 0..ATB_BLOCKS {
+        let part = &partials[blk * ac * bc..(blk + 1) * ac * bc];
         for (x, y) in c.data.iter_mut().zip(part.iter()) {
             *x += y;
         }
     }
+}
+
+/// One row block of the Gram product: for each MR x NR tile of the
+/// (ac x bc) output, stream rows [lo, hi) once with the tile in
+/// registers (16 FMAs per 8 loads at full tile). Per output element the
+/// additions happen in ascending row order — the same order the scalar
+/// row loop used — so block partials are reproducible regardless of
+/// tile traversal.
+fn atb_block(a: &Mat, b: &Mat, lo: usize, hi: usize, acc: &mut [f64]) {
+    let (ac, bc) = (a.cols, b.cols);
+    let mut p0 = 0usize;
+    while p0 < ac {
+        let pm = (ac - p0).min(MR);
+        let mut q0 = 0usize;
+        while q0 < bc {
+            let qm = (bc - q0).min(NR);
+            let mut t = [[0.0f64; NR]; MR];
+            if pm == MR && qm == NR {
+                // full tile: fixed loop bounds unroll completely
+                for i in lo..hi {
+                    let ar = &a.row(i)[p0..p0 + MR];
+                    let br = &b.row(i)[q0..q0 + NR];
+                    for u in 0..MR {
+                        let av = ar[u];
+                        for v in 0..NR {
+                            t[u][v] += av * br[v];
+                        }
+                    }
+                }
+            } else {
+                // edge tile: same streaming, dynamic pm x qm bounds
+                for i in lo..hi {
+                    let ar = a.row(i);
+                    let br = b.row(i);
+                    for u in 0..pm {
+                        let av = ar[p0 + u];
+                        for v in 0..qm {
+                            t[u][v] += av * br[q0 + v];
+                        }
+                    }
+                }
+            }
+            for u in 0..pm {
+                let base = (p0 + u) * bc + q0;
+                for v in 0..qm {
+                    acc[base + v] += t[u][v];
+                }
+            }
+            q0 += qm;
+        }
+        p0 += pm;
+    }
+}
+
+/// C = A * B for general dense (row-major) matrices. Allocates the
+/// output and delegates to [`matmul_into`].
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
     c
 }
 
-/// C = A * B for general dense (row-major) matrices.
-/// Blocked i-k-j loop order (B rows stream, C row stays hot).
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+/// [`matmul`] writing into a caller-owned `(a.rows x b.cols)` buffer,
+/// which is overwritten. Register-tiled: MR x NR output accumulators
+/// stream A's k columns / B's k rows once per tile; per output element
+/// the k-sum accumulates in ascending k order regardless of tile
+/// position or thread count, so the result is thread-invariant (each
+/// output row is produced wholly by one thread).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    assert_eq!(c.rows, m);
+    assert_eq!(c.cols, n);
     let threads = if m * k * n > 1 << 18 {
         crate::util::thread_budget().min(8)
     } else {
@@ -72,25 +165,59 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let cptr = SendPtr(c.data.as_mut_ptr());
     parallel_for_chunks(m, threads, |lo, hi| {
         let cptr = &cptr;
-        for i in lo..hi {
-            // SAFETY: parallel_for_chunks hands out disjoint [lo, hi)
-            // row ranges, so row i of c has exactly one writer; c
-            // outlives the scoped threads.
-            let crow =
-                unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
-            let arow = a.row(i);
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
+        // SAFETY: parallel_for_chunks hands out disjoint [lo, hi) row
+        // ranges, so rows lo..hi of c have exactly one writer; c
+        // outlives the scoped threads.
+        let crows = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(lo * n), (hi - lo) * n) };
+        matmul_rows(a, b, lo, hi, crows);
+    });
+}
+
+/// The row-block micro-kernel behind [`matmul_into`]: `crows` is the
+/// output's [lo, hi) row slab, fully overwritten (every element belongs
+/// to exactly one tile).
+fn matmul_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, crows: &mut [f64]) {
+    let (k, n) = (a.cols, b.cols);
+    let mut i0 = lo;
+    while i0 < hi {
+        let im = (hi - i0).min(MR);
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jm = (n - j0).min(NR);
+            let mut t = [[0.0f64; NR]; MR];
+            if im == MR && jm == NR {
+                // full tile: hoist the four A rows, unroll completely
+                let (a0, a1, a2, a3) = (a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3));
+                for kk in 0..k {
+                    let br = &b.row(kk)[j0..j0 + NR];
+                    let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                    for u in 0..MR {
+                        for v in 0..NR {
+                            t[u][v] += av[u] * br[v];
+                        }
+                    }
                 }
-                let brow = b.row(kk);
-                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += av * bv;
+            } else {
+                for kk in 0..k {
+                    let br = b.row(kk);
+                    for u in 0..im {
+                        let av = a.row(i0 + u)[kk];
+                        for v in 0..jm {
+                            t[u][v] += av * br[j0 + v];
+                        }
+                    }
                 }
             }
+            for u in 0..im {
+                let base = (i0 + u - lo) * n + j0;
+                for v in 0..jm {
+                    crows[base + v] = t[u][v];
+                }
+            }
+            j0 += jm;
         }
-    });
-    c
+        i0 += im;
+    }
 }
 
 /// C = A * B with A tall (n x a) and B small (a x b): the subspace
@@ -98,6 +225,11 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 /// point so call sites document intent (and perf counters can hook it).
 pub fn tall_times_small(a: &Mat, b: &Mat) -> Mat {
     matmul(a, b)
+}
+
+/// [`tall_times_small`] writing into a caller-owned buffer.
+pub fn tall_times_small_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_into(a, b, c)
 }
 
 #[cfg(test)]
@@ -139,5 +271,70 @@ mod tests {
             let want = matmul(&a.transpose(), &b);
             assert!(got.max_abs_diff(&want) < 1e-9, "n={n}");
         }
+    }
+
+    #[test]
+    fn micro_kernel_edge_shapes_match_naive() {
+        // every tile-remainder combination around the MR x NR = 4 x 4
+        // micro-kernel, for both products
+        let mut rng = Rng::new(3);
+        for &m in &[1usize, 3, 5] {
+            for &k in &[1usize, 3, 5] {
+                for &n in &[1usize, 3, 5] {
+                    let a = Mat::randn(m, k, &mut rng);
+                    let b = Mat::randn(k, n, &mut rng);
+                    // same per-element k-order as the naive loop: exact
+                    assert_eq!(matmul(&a, &b), naive(&a, &b), "matmul {m}x{k}x{n}");
+                    let at = Mat::randn(n, m, &mut rng);
+                    let bt = Mat::randn(n, k, &mut rng);
+                    let got = atb(&at, &bt);
+                    let want = naive(&at.transpose(), &bt);
+                    assert!(got.max_abs_diff(&want) < 1e-12, "atb {n}x{m}x{k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn atb_bit_equal_across_thread_counts() {
+        // the pre-tiling kernel split rows into `threads` blocks, so the
+        // partial merge order — hence the float result — depended on the
+        // thread budget; the fixed ATB_BLOCKS split must not
+        let mut rng = Rng::new(4);
+        for &(n, a_, b_) in &[(3000, 7, 9), (100, 5, 3), (5, 2, 2)] {
+            let a = Mat::randn(n, a_, &mut rng);
+            let b = Mat::randn(n, b_, &mut rng);
+            let mut c1 = Mat::zeros(a_, b_);
+            let mut c2 = Mat::zeros(a_, b_);
+            let mut c8 = Mat::zeros(a_, b_);
+            atb_into_threads(&a, &b, &mut c1, 1);
+            atb_into_threads(&a, &b, &mut c2, 2);
+            atb_into_threads(&a, &b, &mut c8, 8);
+            assert_eq!(c1, c2, "n={n} threads 1 vs 2");
+            assert_eq!(c1, c8, "n={n} threads 1 vs 8");
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(50, 6, &mut rng);
+        let b = Mat::randn(50, 4, &mut rng);
+        let y = Mat::randn(6, 4, &mut rng);
+
+        let mut c = Mat::zeros(6, 4);
+        c.data.fill(f64::NAN);
+        atb_into(&a, &b, &mut c);
+        assert_eq!(c, atb(&a, &b));
+
+        let mut r = Mat::zeros(50, 4);
+        r.data.fill(f64::NAN);
+        matmul_into(&a, &y, &mut r);
+        assert_eq!(r, matmul(&a, &y));
+
+        let mut r2 = Mat::zeros(50, 4);
+        r2.data.fill(f64::NAN);
+        tall_times_small_into(&a, &y, &mut r2);
+        assert_eq!(r2, tall_times_small(&a, &y));
     }
 }

@@ -10,6 +10,6 @@ pub mod qr;
 
 pub use chol::{chol_solve, cholesky, right_solve_upper, solve_lower, solve_lower_t};
 pub use eigh::eigh;
-pub use gemm::{atb, matmul, tall_times_small};
+pub use gemm::{atb, atb_into, matmul, matmul_into, tall_times_small, tall_times_small_into};
 pub use mat::Mat;
 pub use qr::{ortho_error, orthonormalize, qr_residual, qr_thin};

@@ -106,13 +106,31 @@ impl Csr {
     }
 
     /// Y = A X for a tall-skinny row-major panel — the native hot path.
-    /// Row-parallel; per-row value/index slices avoid bounds checks and
-    /// the inner k-loop is specialized for the common small panel widths
-    /// so it unrolls into straight-line FMAs (see EXPERIMENTS.md §Perf).
+    /// Allocates the output and delegates to [`spmm_into`](Csr::spmm_into).
     pub fn spmm(&self, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(self.nrows, x.cols);
+        self.spmm_into(x, &mut y);
+        y
+    }
+
+    /// Y = A X written into a caller-owned `nrows x x.cols` buffer (the
+    /// filter recurrence's ping-pong workspace — no allocation per call).
+    /// `y` is overwritten, whatever it held before.
+    ///
+    /// Row-parallel; the inner k-loop is specialized for the panel
+    /// widths k in {1, 2, 4, 8, 16, 24, 32} (const generic, 2-row
+    /// unrolled) so it compiles to straight-line FMAs over register
+    /// accumulators. The unroll is across the panel width and the row
+    /// pair only: each output element still accumulates its row's
+    /// nonzeros in storage order, so the result is bit-identical to the
+    /// scalar kernel at every width and thread count (the seq/dist and
+    /// serial/parallel bit-identity suites lean on this — see
+    /// DESIGN.md §Perf).
+    pub fn spmm_into(&self, x: &Mat, y: &mut Mat) {
         assert_eq!(x.rows, self.ncols);
         let k = x.cols;
-        let mut y = Mat::zeros(self.nrows, k);
+        assert_eq!(y.rows, self.nrows);
+        assert_eq!(y.cols, k);
         // thread_budget, not hardware_threads: inside a simulated-rank
         // superstep this kernel runs single-threaded (the executor owns
         // the cross-rank parallelism — see util::threadpool)
@@ -125,35 +143,78 @@ impl Csr {
         parallel_for_chunks(self.nrows, threads, |lo, hi| {
             let yptr = &yptr;
             match k {
+                1 => self.spmm_rows_fixed::<1>(x, yptr.0, lo, hi),
+                2 => self.spmm_rows_fixed::<2>(x, yptr.0, lo, hi),
                 4 => self.spmm_rows_fixed::<4>(x, yptr.0, lo, hi),
                 8 => self.spmm_rows_fixed::<8>(x, yptr.0, lo, hi),
                 16 => self.spmm_rows_fixed::<16>(x, yptr.0, lo, hi),
+                24 => self.spmm_rows_fixed::<24>(x, yptr.0, lo, hi),
+                32 => self.spmm_rows_fixed::<32>(x, yptr.0, lo, hi),
                 _ => self.spmm_rows_dyn(x, yptr.0, lo, hi, k),
             }
         });
-        y
     }
 
-    /// Panel width known at compile time: the accumulator lives in
+    /// One row's accumulation at compile-time width: `acc[t] +=
+    /// values[idx] * x[indices[idx], t]` over `[s, e)` in storage order
+    /// — the order contract every faster variant must preserve.
+    #[inline(always)]
+    fn row_acc_fixed<const K: usize>(&self, xd: &[f64], s: usize, e: usize, acc: &mut [f64; K]) {
+        for idx in s..e {
+            let v = self.values[idx];
+            let c = self.indices[idx] as usize * K;
+            let xrow = &xd[c..c + K];
+            for t in 0..K {
+                acc[t] += v * xrow[t];
+            }
+        }
+    }
+
+    /// Panel width known at compile time: the accumulators live in
     /// registers across a row's nonzeros instead of round-tripping
-    /// through memory per entry.
+    /// through memory per entry. Rows go in pairs — two independent
+    /// K-wide accumulators give the superscalar units two FMA chains to
+    /// interleave while the row pair's index/value streams share loop
+    /// overhead. Each accumulator still consumes its own row's nonzeros
+    /// in storage order (the leading min(nnz0, nnz1) entries jointly,
+    /// the remainder per row), so per output element the float
+    /// additions happen in exactly the scalar kernel's order.
     fn spmm_rows_fixed<const K: usize>(&self, x: &Mat, yptr: *mut f64, lo: usize, hi: usize) {
-        let xd = &x.data;
-        for i in lo..hi {
-            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
-            let vals = &self.values[s..e];
-            let idxs = &self.indices[s..e];
-            let mut acc = [0.0f64; K];
-            for (v, &c) in vals.iter().zip(idxs.iter()) {
-                let xrow = &xd[c as usize * K..c as usize * K + K];
-                for t in 0..K {
-                    acc[t] += v * xrow[t];
+        let xd = &x.data[..];
+        let mut i = lo;
+        while i + 2 <= hi {
+            let (s0, e0) = (self.indptr[i], self.indptr[i + 1]);
+            let (s1, e1) = (self.indptr[i + 1], self.indptr[i + 2]);
+            let mut acc0 = [0.0f64; K];
+            let mut acc1 = [0.0f64; K];
+            let joint = (e0 - s0).min(e1 - s1);
+            for t in 0..joint {
+                let v0 = self.values[s0 + t];
+                let c0 = self.indices[s0 + t] as usize * K;
+                let v1 = self.values[s1 + t];
+                let c1 = self.indices[s1 + t] as usize * K;
+                let x0 = &xd[c0..c0 + K];
+                let x1 = &xd[c1..c1 + K];
+                for t2 in 0..K {
+                    acc0[t2] += v0 * x0[t2];
+                    acc1[t2] += v1 * x1[t2];
                 }
             }
+            self.row_acc_fixed(xd, s0 + joint, e0, &mut acc0);
+            self.row_acc_fixed(xd, s1 + joint, e1, &mut acc1);
             // SAFETY: parallel_for_chunks hands each thread a disjoint
-            // [lo, hi) row range, so row i's K-wide slice of y is
-            // written by exactly one thread; yptr stays valid for the
-            // scoped-thread lifetime (y outlives the spmm call).
+            // [lo, hi) row range, so rows i and i+1's 2K-wide slice of
+            // y is written by exactly one thread; yptr stays valid for
+            // the scoped-thread lifetime (y outlives the spmm call).
+            let yrows = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * K), 2 * K) };
+            yrows[..K].copy_from_slice(&acc0);
+            yrows[K..].copy_from_slice(&acc1);
+            i += 2;
+        }
+        if i < hi {
+            let mut acc = [0.0f64; K];
+            self.row_acc_fixed(xd, self.indptr[i], self.indptr[i + 1], &mut acc);
+            // SAFETY: same disjoint-row argument for the odd tail row.
             let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * K), K) };
             yrow.copy_from_slice(&acc);
         }
@@ -167,6 +228,9 @@ impl Csr {
             // SAFETY: same argument as spmm_rows_fixed — disjoint row
             // chunks, one writer per row slice, y outlives the scope.
             let yrow = unsafe { std::slice::from_raw_parts_mut(yptr.add(i * k), k) };
+            // spmm_into takes an arbitrary caller buffer: overwrite,
+            // then accumulate in storage order as always
+            yrow.fill(0.0);
             for (v, &c) in vals.iter().zip(idxs.iter()) {
                 let xrow = x.row(c as usize);
                 for (yv, &xv) in yrow.iter_mut().zip(xrow.iter()) {
@@ -312,5 +376,33 @@ mod tests {
         let y = a.spmm(&x);
         assert_eq!(y[(4, 0)], 1.0);
         assert_eq!(y[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn spmm_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::new(6);
+        // odd row count: exercises the 2-row unroll's tail row
+        let a = random_sparse(31, 31, 0.2, &mut rng);
+        for k in [1usize, 2, 3, 8, 24] {
+            let x = Mat::randn(31, k, &mut rng);
+            let want = a.spmm(&x);
+            let mut y = Mat::zeros(31, k);
+            y.data.fill(f64::NAN); // into-semantics: prior contents must not leak
+            a.spmm_into(&x, &mut y);
+            assert_eq!(y, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn all_specialized_widths_match_dense() {
+        let mut rng = Rng::new(7);
+        let a = random_sparse(33, 33, 0.25, &mut rng);
+        let d = a.to_dense();
+        for k in [1usize, 2, 4, 8, 16, 24, 32] {
+            let x = Mat::randn(33, k, &mut rng);
+            let got = a.spmm(&x);
+            let want = crate::linalg::matmul(&d, &x);
+            assert!(got.max_abs_diff(&want) < 1e-10, "k={k}");
+        }
     }
 }

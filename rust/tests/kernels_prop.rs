@@ -1,0 +1,197 @@
+//! Property sweeps for the raw-speed kernel pass: the fixed-width /
+//! register-tiled SpMM and GEMM variants must be *drop-in bit-compatible*
+//! with the scalar kernels they replaced (same per-output-element
+//! floating-point order), not just approximately equal — that is what
+//! keeps the seq/dist and serial/parallel bit-identity suites honest.
+
+use dist_chebdav::linalg::{
+    atb, atb_into, matmul, matmul_into, tall_times_small, tall_times_small_into, Mat,
+};
+use dist_chebdav::sparse::Csr;
+use dist_chebdav::util::{configured_threads, set_threads, Rng};
+
+/// Scalar reference SpMM: per output row, accumulate the row's nonzeros
+/// in storage order — the float-op order the fast kernels contract to
+/// reproduce exactly.
+fn spmm_scalar(a: &Csr, x: &Mat) -> Mat {
+    let mut y = Mat::zeros(a.nrows, x.cols);
+    for i in 0..a.nrows {
+        let yrow = y.row_mut(i);
+        for idx in a.indptr[i]..a.indptr[i + 1] {
+            let v = a.values[idx];
+            let xrow = x.row(a.indices[idx] as usize);
+            for (yv, &xv) in yrow.iter_mut().zip(xrow.iter()) {
+                *yv += v * xv;
+            }
+        }
+    }
+    y
+}
+
+fn naive_mm(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+/// Random rectangular sparse matrix; low densities leave many rows
+/// entirely empty, which is part of what the sweep exercises.
+fn random_sparse(n: usize, m: usize, density: f64, rng: &mut Rng) -> Csr {
+    let mut d = Mat::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            if rng.f64() < density {
+                d[(i, j)] = rng.normal();
+            }
+        }
+    }
+    Csr::from_dense(&d)
+}
+
+#[test]
+fn spmm_every_width_bit_equal_to_scalar_and_close_to_dense() {
+    let mut rng = Rng::new(11);
+    // n odd so row-paired chunks end in an unrolled tail row
+    let (n, m) = (67, 53);
+    let mut d = Mat::randn(n, m, &mut rng);
+    for i in 0..n {
+        for j in 0..m {
+            if rng.f64() < 0.85 {
+                d[(i, j)] = 0.0;
+            }
+        }
+    }
+    // planted empty rows (first, middle, last — both unroll positions)
+    for &i in &[0usize, 1, 33, 66] {
+        for j in 0..m {
+            d[(i, j)] = 0.0;
+        }
+    }
+    let a = Csr::from_dense(&d);
+    for i in [0usize, 1, 33, 66] {
+        assert_eq!(a.row_nnz(i), 0, "planted empty row {i}");
+    }
+    let dense = a.to_dense();
+    // every specialized width {1,2,4,8,16,24,32} plus all off-widths
+    for k in 1..=33usize {
+        let x = Mat::randn(m, k, &mut rng);
+        let got = a.spmm(&x);
+        // drop-in contract: bit-identical to the storage-order scalar loop
+        assert_eq!(got, spmm_scalar(&a, &x), "k={k} not bit-equal to scalar");
+        // sanity against an independent op order
+        let want = naive_mm(&dense, &x);
+        assert!(got.max_abs_diff(&want) < 1e-10, "k={k} vs dense");
+    }
+}
+
+#[test]
+fn spmm_into_equals_spmm_on_dirty_buffers() {
+    let mut rng = Rng::new(12);
+    let a = random_sparse(41, 41, 0.15, &mut rng);
+    for k in [1usize, 2, 3, 8, 24, 32, 33] {
+        let x = Mat::randn(41, k, &mut rng);
+        let mut y = Mat::zeros(41, k);
+        y.data.fill(f64::NAN); // must be fully overwritten
+        a.spmm_into(&x, &mut y);
+        assert_eq!(y, a.spmm(&x), "k={k}");
+    }
+}
+
+#[test]
+fn spmm_degenerate_shapes() {
+    let mut rng = Rng::new(13);
+    // fully empty matrix (rows exist, zero nonzeros)
+    let empty = Csr::from_dense(&Mat::zeros(9, 7));
+    for k in [1usize, 4, 5] {
+        let x = Mat::randn(7, k, &mut rng);
+        let got = empty.spmm(&x);
+        assert_eq!(got, Mat::zeros(9, k), "k={k}");
+    }
+    // zero-dimension matrix and zero-width panel
+    let null = Csr::from_dense(&Mat::zeros(0, 0));
+    let got = null.spmm(&Mat::zeros(0, 3));
+    assert_eq!((got.rows, got.cols), (0, 3));
+    let a = random_sparse(10, 10, 0.3, &mut rng);
+    let got = a.spmm(&Mat::zeros(10, 0));
+    assert_eq!((got.rows, got.cols), (10, 0));
+}
+
+#[test]
+fn gemm_edge_shapes_match_naive() {
+    // every remainder combination around the 4x4 register tile
+    let mut rng = Rng::new(14);
+    for m in [1usize, 3, 5] {
+        for k in [1usize, 3, 5] {
+            for n in [1usize, 3, 5] {
+                let a = Mat::randn(m, k, &mut rng);
+                let b = Mat::randn(k, n, &mut rng);
+                // tiled matmul keeps the naive loop's ascending-k order
+                // per element: exact equality, not tolerance
+                assert_eq!(matmul(&a, &b), naive_mm(&a, &b), "matmul {m}x{k}x{n}");
+                assert_eq!(
+                    tall_times_small(&a, &b),
+                    naive_mm(&a, &b),
+                    "tts {m}x{k}x{n}"
+                );
+                let at = Mat::randn(n, m, &mut rng);
+                let bt = Mat::randn(n, k, &mut rng);
+                let got = atb(&at, &bt);
+                let want = naive_mm(&at.transpose(), &bt);
+                assert!(got.max_abs_diff(&want) < 1e-12, "atb {n}x{m}x{k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_into_variants_equal_allocating_variants() {
+    let mut rng = Rng::new(15);
+    let a = Mat::randn(200, 11, &mut rng);
+    let b = Mat::randn(200, 7, &mut rng);
+    let y = Mat::randn(11, 7, &mut rng);
+
+    let mut c = Mat::zeros(11, 7);
+    c.data.fill(f64::NAN);
+    atb_into(&a, &b, &mut c);
+    assert_eq!(c, atb(&a, &b));
+
+    let mut r = Mat::zeros(200, 7);
+    r.data.fill(f64::NAN);
+    matmul_into(&a, &y, &mut r);
+    assert_eq!(r, matmul(&a, &y));
+
+    let mut r2 = Mat::zeros(200, 7);
+    r2.data.fill(f64::NAN);
+    tall_times_small_into(&a, &y, &mut r2);
+    assert_eq!(r2, tall_times_small(&a, &y));
+}
+
+#[test]
+fn atb_bit_equal_across_thread_budgets() {
+    // the regression named in the raw-speed pass: atb used to split rows
+    // into `threads` blocks, so its partial-sum merge order — and float
+    // result — depended on the thread budget. The fixed-granularity
+    // kernel must give the same bits at budgets 1, 2, and 8. (The global
+    // knob is process-wide, but every kernel result is thread-invariant
+    // by the same contract, so concurrent tests are unaffected.)
+    let mut rng = Rng::new(16);
+    let a = Mat::randn(5000, 9, &mut rng);
+    let b = Mat::randn(5000, 13, &mut rng);
+    let saved = configured_threads();
+    let mut results = Vec::new();
+    for t in [1usize, 2, 8] {
+        set_threads(t);
+        results.push(atb(&a, &b));
+    }
+    set_threads(saved);
+    assert_eq!(results[0], results[1], "budget 1 vs 2");
+    assert_eq!(results[0], results[2], "budget 1 vs 8");
+}

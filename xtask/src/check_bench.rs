@@ -1,0 +1,388 @@
+//! `cargo xtask check-bench` — schema check for the repo root's
+//! append-only perf trajectories (`BENCH_*.json`, JSON Lines).
+//!
+//! Each line must be one self-contained JSON object:
+//!
+//! ```json
+//! {"bench":"kernels","rev":"abc1234","unix_time":1720000000,
+//!  "config":{"n":8192,"threads":1,...},
+//!  "records":[{"kernel":"spmm","k":8,"old_s":1.2e-3,"new_s":4.0e-4,
+//!              "speedup":3.0},...]}
+//! ```
+//!
+//! The checker validates shape, not values: required keys present with
+//! the right JSON types, `records` non-empty, `speedup` finite and
+//! positive. The crate set has no JSON parser (the in-tree `util::json`
+//! is writer-only), so a minimal recursive-descent parser lives here —
+//! xtask is the only consumer.
+
+use std::path::Path;
+
+/// Parsed JSON value — just enough structure for schema checks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("byte {}: {msg}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && matches!(self.s[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn parse(&mut self) -> Result<Value, String> {
+        self.skip_ws();
+        let v = self.value()?;
+        self.skip_ws();
+        if self.i != self.s.len() {
+            return Err(self.err("trailing characters after JSON value"));
+        }
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .map(Value::Num)
+            .ok_or_else(|| self.err("malformed number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.s.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.s[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("non-utf8 \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            // surrogate pairs unsupported — bench records
+                            // never emit astral-plane characters
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (bytes are valid UTF-8:
+                    // the input came from a &str)
+                    let rest = std::str::from_utf8(&self.s[self.i..])
+                        .map_err(|_| self.err("invalid UTF-8"))?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(xs));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            fields.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse one JSON document.
+pub fn parse(s: &str) -> Result<Value, String> {
+    Parser::new(s).parse()
+}
+
+/// Validate one trajectory record (one JSONL line, already parsed).
+fn check_record(v: &Value) -> Result<(), String> {
+    for key in ["bench", "rev"] {
+        v.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("missing or non-string key '{key}'"))?;
+    }
+    v.get("unix_time")
+        .and_then(Value::as_num)
+        .ok_or_else(|| "missing or non-numeric key 'unix_time'".to_string())?;
+    let cfg = v.get("config").ok_or_else(|| "missing key 'config'".to_string())?;
+    for key in ["n", "threads"] {
+        cfg.get(key)
+            .and_then(Value::as_num)
+            .ok_or_else(|| format!("config: missing or non-numeric key '{key}'"))?;
+    }
+    let recs = v
+        .get("records")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| "missing or non-array key 'records'".to_string())?;
+    if recs.is_empty() {
+        return Err("'records' is empty".to_string());
+    }
+    for (i, r) in recs.iter().enumerate() {
+        r.get("kernel")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("records[{i}]: missing or non-string 'kernel'"))?;
+        for key in ["k", "old_s", "new_s", "speedup"] {
+            r.get(key)
+                .and_then(Value::as_num)
+                .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
+        }
+        let sp = r.get("speedup").and_then(Value::as_num).unwrap();
+        if !sp.is_finite() || sp <= 0.0 {
+            return Err(format!("records[{i}]: speedup {sp} not finite-positive"));
+        }
+    }
+    Ok(())
+}
+
+/// Check a whole trajectory file. Returns one message per bad line.
+pub fn check_file(path: &Path) -> Result<Vec<String>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut problems = Vec::new();
+    let mut lines = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        lines += 1;
+        match parse(line) {
+            Err(e) => problems.push(format!("line {}: parse error: {e}", lineno + 1)),
+            Ok(v) => {
+                if let Err(e) = check_record(&v) {
+                    problems.push(format!("line {}: {e}", lineno + 1));
+                }
+            }
+        }
+    }
+    if lines == 0 {
+        problems.push("no records (empty trajectory)".to_string());
+    }
+    Ok(problems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = concat!(
+        r#"{"bench":"kernels","rev":"abc1234","unix_time":1720000000,"#,
+        r#""config":{"n":8192,"threads":1,"full":false},"#,
+        r#""records":[{"kernel":"spmm","k":8,"old_s":1.2e-3,"new_s":4.0e-4,"speedup":3.0}]}"#
+    );
+
+    #[test]
+    fn parses_scalars_arrays_objects() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse(" true ").unwrap(), Value::Bool(true));
+        assert_eq!(parse("-1.5e3").unwrap(), Value::Num(-1500.0));
+        assert_eq!(
+            parse(r#""a\"b\nc""#).unwrap(),
+            Value::Str("a\"b\nc".to_string())
+        );
+        let v = parse(r#"{"a":[1,2],"b":{"c":"d"}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str(), Some("d"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", r#"{"a"}"#, "1 2", r#""unterminated"#] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn good_record_passes() {
+        assert!(check_record(&parse(GOOD).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn schema_violations_are_reported() {
+        // drop each required top-level key in turn
+        for key in ["bench", "rev", "unix_time", "config", "records"] {
+            let v = parse(GOOD).unwrap();
+            let Value::Obj(fields) = v else { unreachable!() };
+            let stripped = Value::Obj(fields.into_iter().filter(|(k, _)| k != key).collect());
+            assert!(check_record(&stripped).is_err(), "missing '{key}' accepted");
+        }
+        // empty records array
+        let empty = GOOD.replace(
+            r#"[{"kernel":"spmm","k":8,"old_s":1.2e-3,"new_s":4.0e-4,"speedup":3.0}]"#,
+            "[]",
+        );
+        assert!(check_record(&parse(&empty).unwrap()).is_err());
+        // non-positive speedup
+        let zero = GOOD.replace(r#""speedup":3.0"#, r#""speedup":0.0"#);
+        assert!(check_record(&parse(&zero).unwrap()).is_err());
+    }
+
+    #[test]
+    fn file_check_flags_bad_lines_and_empty_files() {
+        let dir = std::env::temp_dir().join("chebdav_check_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        std::fs::write(&path, format!("{GOOD}\nnot json\n")).unwrap();
+        let problems = check_file(&path).unwrap();
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].starts_with("line 2"));
+        std::fs::write(&path, "\n\n").unwrap();
+        assert!(!check_file(&path).unwrap().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

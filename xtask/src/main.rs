@@ -1,7 +1,10 @@
-//! `cargo xtask` — repo task runner. One task so far: `lint`, the
-//! repo-invariant pass (rules R1-R5, see lint.rs). Exit code 0 when the
-//! tree is clean, 1 with one line per violation otherwise.
+//! `cargo xtask` — repo task runner. Two tasks: `lint`, the
+//! repo-invariant pass (rules R1-R5, see lint.rs), and `check-bench`,
+//! the schema check for the repo root's append-only `BENCH_*.json` perf
+//! trajectories (see check_bench.rs). Exit code 0 when clean, 1 with
+//! one line per violation otherwise.
 
+mod check_bench;
 mod lint;
 
 use std::path::{Path, PathBuf};
@@ -25,7 +28,10 @@ fn usage() {
          \x20        R2  unsafe only in the whitelisted kernel/pool files\n\
          \x20        R3  no thread::spawn outside util/threadpool.rs\n\
          \x20        R4  no HashMap/HashSet on determinism-critical paths\n\
-         \x20        R5  ledger component keys match the documented vocabulary"
+         \x20        R5  ledger component keys match the documented vocabulary\n\
+         \x20 check-bench [path]\n\
+         \x20        schema-check an append-only BENCH_*.json perf trajectory\n\
+         \x20        (default: <repo root>/BENCH_kernels.json)"
     );
 }
 
@@ -44,6 +50,29 @@ fn main() -> ExitCode {
                 }
                 eprintln!("xtask lint: {} violation(s)", violations.len());
                 ExitCode::FAILURE
+            }
+        }
+        Some("check-bench") => {
+            let path = match args.get(1) {
+                Some(p) => PathBuf::from(p),
+                None => repo_root().join("BENCH_kernels.json"),
+            };
+            match check_bench::check_file(&path) {
+                Err(e) => {
+                    eprintln!("xtask check-bench: {e}");
+                    ExitCode::FAILURE
+                }
+                Ok(problems) if problems.is_empty() => {
+                    println!("xtask check-bench: {} schema-clean", path.display());
+                    ExitCode::SUCCESS
+                }
+                Ok(problems) => {
+                    for p in &problems {
+                        eprintln!("{}: {p}", path.display());
+                    }
+                    eprintln!("xtask check-bench: {} violation(s)", problems.len());
+                    ExitCode::FAILURE
+                }
             }
         }
         _ => {
