@@ -9,12 +9,18 @@
 //! allreduce per Lloyd iteration), so the clustering tail stays a small
 //! slice of the total at every p and the ~sqrt(p) whole-pipeline
 //! speedup of Fig. 7 survives the extra stages.
+//!
+//! Each run also appends one record per (matrix, p) point — including
+//! the kmeans-tail share of the total — to the repo root's append-only
+//! `BENCH_fig10.json` trajectory (`cargo xtask check-bench` validates
+//! it), so assign-kernel wins show up on the tracked curve.
 
 mod common;
 
 use dist_chebdav::config::ExperimentConfig;
 use dist_chebdav::coordinator::{cluster_scaling, fmt_f, fmt_secs, Table};
 use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::util::Json;
 
 fn main() {
     common::apply_run_defaults();
@@ -27,8 +33,9 @@ fn main() {
     let ps = vec![1usize, 4, 16, 64, 121, 256, 576, 1024];
     let mut table = Table::new(
         &format!("Fig10: end-to-end spectral clustering scaling, n~{n}, m=15, tol=1e-3"),
-        &["matrix", "p", "total", "eig", "embed", "kmeans", "speedup", "ARI"],
+        &["matrix", "p", "total", "eig", "embed", "kmeans", "km %", "speedup", "ARI"],
     );
+    let mut records: Vec<Json> = Vec::new();
     for (name, k, k_b) in cases {
         let mat = table2_matrix(name, n, 31);
         let cfg = ExperimentConfig {
@@ -42,6 +49,7 @@ fn main() {
         let rows = cluster_scaling(&mat, &cfg);
         let base = rows[0].total;
         for r in &rows {
+            let km_frac = r.kmeans / r.total.max(1e-30);
             table.row(&[
                 mat.name.clone(),
                 r.p.to_string(),
@@ -49,11 +57,40 @@ fn main() {
                 fmt_secs(r.eig),
                 fmt_secs(r.embed),
                 fmt_secs(r.kmeans),
+                fmt_f(km_frac * 100.0, 1),
                 fmt_f(base / r.total, 2),
                 r.ari.map(|a| fmt_f(a, 4)).unwrap_or_else(|| "-".into()),
             ]);
+            let mut rec = Json::obj()
+                .put("matrix", mat.name.clone())
+                .put("p", r.p)
+                .put("total", r.total)
+                .put("eig", r.eig)
+                .put("embed", r.embed)
+                .put("kmeans", r.kmeans)
+                .put("kmeans_frac", km_frac);
+            if let Some(a) = r.ari {
+                rec = rec.put("ari", a);
+            }
+            records.push(rec);
         }
     }
     print!("{}", table.render());
     common::save("fig10", &table);
+
+    // one self-contained trajectory record per run (e2e-shaped records;
+    // see README's BENCH schema note)
+    let record = Json::obj()
+        .put("bench", "fig10")
+        .put("rev", common::git_rev())
+        .put("unix_time", common::unix_now() as i64)
+        .put(
+            "config",
+            Json::obj()
+                .put("n", n)
+                .put("threads", dist_chebdav::util::configured_threads())
+                .put("full", common::full()),
+        )
+        .put("records", records);
+    common::append_trajectory("fig10", &record);
 }

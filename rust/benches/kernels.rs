@@ -9,19 +9,23 @@
 //!   `mpi_sim::exec` — billing is identical in both modes);
 //! * old (scalar) vs new (register-tiled / fixed-width) SpMM and GEMM
 //!   kernels across panel widths, appended as one record per run to the
-//!   repo root's append-only `BENCH_kernels.json` perf trajectory.
+//!   repo root's append-only `BENCH_kernels.json` perf trajectory;
+//! * old (scalar nearest loop) vs new (row-tiled fixed-width) K-means
+//!   assign kernels, with the same in-bench bit-identity assertion and
+//!   an optional PJRT `kmeans_assign` row when artifacts are present.
 //!
 //! Used to drive the performance pass recorded in DESIGN.md §Perf.
 
 mod common;
 
+use dist_chebdav::cluster::{AssignKernel, NativeAssign};
 use dist_chebdav::coordinator::{fmt_f, fmt_secs, Table};
 use dist_chebdav::dist::{spmm_1p5d, DistMatrix};
 use dist_chebdav::eig::SpmmOp;
 use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::linalg::Mat;
 use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
-use dist_chebdav::runtime::{PjrtOperator, PjrtRuntime};
+use dist_chebdav::runtime::{PjrtAssignPlan, PjrtOperator, PjrtRuntime};
 use dist_chebdav::sparse::EllHyb;
 use dist_chebdav::util::{bench, Json, Rng};
 
@@ -288,9 +292,84 @@ fn main() {
         ]);
         records.push(rec("tall_times_small", k, s_old.min, s_new.min));
     }
-    dist_chebdav::util::set_threads(saved_threads);
     print!("{}", table.render());
     common::save("kernels_gemm_old_new", &table);
+
+    // --- assign: scalar nearest loop (old) vs tiled fixed-width (new) ---
+    // Same drop-in contract as the SpMM rows: the tiled kernel must
+    // reproduce the scalar argmin indices *and* the f64 distances
+    // bit-for-bit on every run (strict `<` tie-break, ascending-d
+    // accumulation), not approximately.
+    let mut table = Table::new(
+        &format!("K-means assign scalar (old) vs tiled fixed-width (new), n={n}, 1 thread"),
+        &["d=k", "old", "new", "speedup"],
+    );
+    let mut pjrt_probe: Option<(Mat, Mat, f64)> = None;
+    for k in [2usize, 4, 8, 16] {
+        let x = Mat::randn(n, k, &mut rng);
+        let cent = Mat::randn(k, k, &mut rng);
+        let (old_idx, old_d2) = oldk::assign_scalar(&x, &cent);
+        let mut idx = vec![0u32; n];
+        let mut d2 = vec![f64::NAN; n];
+        NativeAssign.assign_block(&x, 0, n, &cent, &mut idx, Some(&mut d2));
+        assert!(idx == old_idx, "assign drop-in index mismatch at d=k={k}");
+        let bad = old_d2
+            .iter()
+            .zip(&d2)
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert!(bad == 0, "assign drop-in bit-compat violated at d=k={k}: {bad} rows");
+        let s_old = bench(2, 5, || oldk::assign_scalar(&x, &cent));
+        let mut scratch = vec![0u32; n];
+        let s_new = bench(2, 5, || {
+            NativeAssign.assign_block(&x, 0, n, &cent, &mut scratch, None);
+            scratch[0]
+        });
+        table.row(&[
+            k.to_string(),
+            fmt_secs(s_old.min),
+            fmt_secs(s_new.min),
+            fmt_f(s_old.min / s_new.min.max(1e-30), 2),
+        ]);
+        records.push(rec("assign", k, s_old.min, s_new.min));
+        if k == 16 {
+            pjrt_probe = Some((x, cent, s_old.min));
+        }
+    }
+    dist_chebdav::util::set_threads(saved_threads);
+    print!("{}", table.render());
+    common::save("kernels_assign_old_new", &table);
+
+    // Optional PJRT assign row: only when a compiled `kmeans_assign`
+    // bucket is present (skip quietly otherwise, like the SpMM PJRT
+    // rows). The f32 route is compared for throughput, not bit-identity.
+    if let Some((x, cent, old_s)) = pjrt_probe {
+        if let Ok(art) = dist_chebdav::runtime::assign_runtime() {
+            if let Ok(plan) = PjrtAssignPlan::new(art.clone(), &x, 0, n, cent.rows) {
+                let mut idx = vec![0u32; n];
+                if plan.run(&cent, &mut idx).is_ok() {
+                    let s = bench(2, 5, || {
+                        plan.run(&cent, &mut idx).expect("pjrt assign run");
+                        idx[0]
+                    });
+                    println!(
+                        "PJRT assign (d=k=16): {} ({}x vs scalar)",
+                        fmt_secs(s.min),
+                        fmt_f(old_s / s.min.max(1e-30), 2)
+                    );
+                    records.push(rec("assign_pjrt", 16, old_s, s.min));
+                }
+            }
+            let stats = art.stats.borrow();
+            println!(
+                "pjrt assign stats: {} calls, {} native fallbacks",
+                stats.pjrt_calls, stats.native_fallbacks
+            );
+            if let Some(reason) = stats.fallback_reason.as_deref() {
+                println!("pjrt first fallback reason: {reason}");
+            }
+        }
+    }
 
     // one self-contained trajectory record per run (see README's
     // BENCH_kernels.json schema; `cargo xtask check-bench` validates it)
@@ -353,6 +432,34 @@ mod oldk {
             }
         }
         c
+    }
+
+    /// Scalar nearest-centroid assign — the pre-seam K-means inner loop
+    /// (per-row scan over centroids, ascending-d accumulation, strict
+    /// `<` tie-break), kept verbatim as the baseline the tiled kernel
+    /// must reproduce bit-for-bit.
+    pub fn assign_scalar(x: &Mat, cent: &Mat) -> (Vec<u32>, Vec<f64>) {
+        let mut idx = Vec::with_capacity(x.rows);
+        let mut d2 = Vec::with_capacity(x.rows);
+        for i in 0..x.rows {
+            let mut best = 0u32;
+            let mut bd = f64::INFINITY;
+            for c in 0..cent.rows {
+                let dd: f64 = x
+                    .row(i)
+                    .iter()
+                    .zip(cent.row(c).iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if dd < bd {
+                    bd = dd;
+                    best = c as u32;
+                }
+            }
+            idx.push(best);
+            d2.push(bd);
+        }
+        (idx, d2)
     }
 
     /// Scalar C = A B (i-k-j loop with zero skip).

@@ -1,0 +1,305 @@
+//! The K-means assignment seam: one trait, two implementations.
+//!
+//! `AssignKernel` is the block-assignment contract both K-means drivers
+//! (the sequential `cluster::kmeans::lloyd` loop and the
+//! `dist::cluster::dist_kmeans` assign superstep) call instead of the
+//! per-row `nearest` loop. Two kernels implement it:
+//!
+//! * [`NativeAssign`] — the default: a row-tiled, 2-row-unrolled,
+//!   fixed-width-specialized rewrite of the `nearest` loop that is
+//!   **bit-identical** to it (same per-(point, centroid) ascending-d
+//!   accumulation order, same strict `<` lowest-index tie-break), so
+//!   every seq/dist and serial/parallel bit-identity invariant survives
+//!   the seam untouched. Pinned by `tests/assign_prop.rs`.
+//! * `runtime::cluster::PjrtAssignPlan` — the opt-in accelerated route
+//!   through the compiled Pallas `kmeans_assign` artifact (f32 on
+//!   device; see that module's precision contract).
+//!
+//! Routing is a process-global knob mirroring `CHEBDAV_SEQ_RANKS`:
+//! [`set_assign_route`] (the config-side `[runtime] assign = "pjrt"`)
+//! overrides the `CHEBDAV_ASSIGN` environment variable; the default is
+//! the bit-exact native kernel.
+//!
+//! Threading note: a kernel call is single-threaded by contract. Inside
+//! a simulated rank body the thread budget is 1 anyway (the mpi_sim
+//! thread-budget rule), and the sequential driver's row blocks are small
+//! enough that the fixed-width unrolling, not threading, is the win —
+//! so the kernel's bits are trivially invariant across thread budgets
+//! (also pinned by `tests/assign_prop.rs`).
+
+use super::kmeans::nearest;
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel the K-means drivers route assignment through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignRoute {
+    /// The bit-exact native kernel (default).
+    Native,
+    /// The PJRT `kmeans_assign` artifact (f32; falls back to native,
+    /// counted, when no artifact/bucket/client is available).
+    Pjrt,
+}
+
+/// 0 = unset (the `CHEBDAV_ASSIGN` environment variable decides),
+/// 1 = forced native, 2 = forced pjrt.
+static ROUTE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the assignment route programmatically, overriding
+/// `CHEBDAV_ASSIGN`; `None` restores environment control. This is the
+/// hook behind the `[runtime] assign` config key.
+pub fn set_assign_route(route: Option<AssignRoute>) {
+    let v = match route {
+        None => 0,
+        Some(AssignRoute::Native) => 1,
+        Some(AssignRoute::Pjrt) => 2,
+    };
+    ROUTE.store(v, Ordering::SeqCst);
+}
+
+fn env_route() -> AssignRoute {
+    match std::env::var("CHEBDAV_ASSIGN") {
+        Ok(v) if v.eq_ignore_ascii_case("pjrt") => AssignRoute::Pjrt,
+        _ => AssignRoute::Native,
+    }
+}
+
+/// The assignment route in effect: forced via [`set_assign_route`], else
+/// `CHEBDAV_ASSIGN=pjrt`, else native.
+pub fn assign_route() -> AssignRoute {
+    match ROUTE.load(Ordering::SeqCst) {
+        1 => AssignRoute::Native,
+        2 => AssignRoute::Pjrt,
+        _ => env_route(),
+    }
+}
+
+/// Block K-means assignment: for every row `i` in `[lo, hi)` of `x`,
+/// write the nearest-centroid index into `idx[i - lo]` (and, when
+/// requested, the squared distance into `d2[i - lo]`).
+pub trait AssignKernel {
+    /// Kernel name for tables and logs.
+    fn name(&self) -> &'static str;
+
+    /// Assign rows `[lo, hi)`. Returns `false` when the kernel could not
+    /// run (the PJRT route's loud fallback signal — the implementation
+    /// has already counted the fallback); the caller then reruns the
+    /// block through [`NativeAssign`]. `idx` (and `d2`, when given) must
+    /// be exactly `hi - lo` long and are fully overwritten on success.
+    fn assign_block(
+        &self,
+        x: &Mat,
+        lo: usize,
+        hi: usize,
+        cent: &Mat,
+        idx: &mut [u32],
+        d2: Option<&mut [f64]>,
+    ) -> bool;
+}
+
+/// Squared distance between two fixed-width rows, twice in lockstep:
+/// two *independent* scalar accumulator chains (instruction-level
+/// parallelism for the 2-row unroll), each adding its `(a-b)^2` terms in
+/// ascending-d order from 0.0 — exactly the `dist2` fold, so each row's
+/// distance is bit-identical to the scalar kernel's.
+#[inline(always)]
+fn d2_pair_fixed<const D: usize>(x0: &[f64; D], x1: &[f64; D], c: &[f64; D]) -> (f64, f64) {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    for t in 0..D {
+        let e0 = x0[t] - c[t];
+        let e1 = x1[t] - c[t];
+        s0 += e0 * e0;
+        s1 += e1 * e1;
+    }
+    (s0, s1)
+}
+
+/// Same two-chain unroll at runtime width (the off-width fallback).
+#[inline(always)]
+fn d2_pair_dyn(x0: &[f64], x1: &[f64], c: &[f64]) -> (f64, f64) {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    for ((&a0, &a1), &cv) in x0.iter().zip(x1.iter()).zip(c.iter()) {
+        let e0 = a0 - cv;
+        let e1 = a1 - cv;
+        s0 += e0 * e0;
+        s1 += e1 * e1;
+    }
+    (s0, s1)
+}
+
+/// Fixed-width 2-row-unrolled assign over `[lo, hi)`. The `&[f64; D]`
+/// views let the compiler drop every bounds check and fully unroll the
+/// inner distance loop without changing its float-op order. Tie-break is
+/// the `nearest` rule: strict `<`, so exactly-equal distances keep the
+/// lowest centroid index. Odd tail rows go through `nearest` itself —
+/// the same arithmetic, and it keeps the scalar rule in the binary as
+/// the executable reference.
+fn assign_rows_fixed<const D: usize>(
+    x: &Mat,
+    lo: usize,
+    hi: usize,
+    cent: &Mat,
+    idx: &mut [u32],
+    mut d2: Option<&mut [f64]>,
+) {
+    let k = cent.rows;
+    let mut i = lo;
+    while i + 1 < hi {
+        let x0: &[f64; D] = x.row(i).try_into().expect("row width is D");
+        let x1: &[f64; D] = x.row(i + 1).try_into().expect("row width is D");
+        let (mut b0, mut bd0) = (0u32, f64::INFINITY);
+        let (mut b1, mut bd1) = (0u32, f64::INFINITY);
+        for c in 0..k {
+            let cr: &[f64; D] = cent.row(c).try_into().expect("centroid width is D");
+            let (dd0, dd1) = d2_pair_fixed(x0, x1, cr);
+            if dd0 < bd0 {
+                bd0 = dd0;
+                b0 = c as u32;
+            }
+            if dd1 < bd1 {
+                bd1 = dd1;
+                b1 = c as u32;
+            }
+        }
+        idx[i - lo] = b0;
+        idx[i - lo + 1] = b1;
+        if let Some(out) = d2.as_deref_mut() {
+            out[i - lo] = bd0;
+            out[i - lo + 1] = bd1;
+        }
+        i += 2;
+    }
+    if i < hi {
+        let (best, bd) = nearest(x, i, cent);
+        idx[i - lo] = best;
+        if let Some(out) = d2 {
+            out[i - lo] = bd;
+        }
+    }
+}
+
+/// Runtime-width 2-row-unrolled assign (every d the fixed dispatch does
+/// not cover). Same order contract as the fixed kernels.
+fn assign_rows_dyn(
+    x: &Mat,
+    lo: usize,
+    hi: usize,
+    cent: &Mat,
+    idx: &mut [u32],
+    mut d2: Option<&mut [f64]>,
+) {
+    let k = cent.rows;
+    let mut i = lo;
+    while i + 1 < hi {
+        let x0 = x.row(i);
+        let x1 = x.row(i + 1);
+        let (mut b0, mut bd0) = (0u32, f64::INFINITY);
+        let (mut b1, mut bd1) = (0u32, f64::INFINITY);
+        for c in 0..k {
+            let cr = cent.row(c);
+            let (dd0, dd1) = d2_pair_dyn(x0, x1, cr);
+            if dd0 < bd0 {
+                bd0 = dd0;
+                b0 = c as u32;
+            }
+            if dd1 < bd1 {
+                bd1 = dd1;
+                b1 = c as u32;
+            }
+        }
+        idx[i - lo] = b0;
+        idx[i - lo + 1] = b1;
+        if let Some(out) = d2.as_deref_mut() {
+            out[i - lo] = bd0;
+            out[i - lo + 1] = bd1;
+        }
+        i += 2;
+    }
+    if i < hi {
+        let (best, bd) = nearest(x, i, cent);
+        idx[i - lo] = best;
+        if let Some(out) = d2 {
+            out[i - lo] = bd;
+        }
+    }
+}
+
+/// The default assignment kernel: tiled/unrolled native code with
+/// fixed-width specializations for the embedding dims the pipeline
+/// actually produces (d = k in {2, 4, 8, 16}), bit-identical to the
+/// per-row `nearest` loop it replaced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeAssign;
+
+impl AssignKernel for NativeAssign {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn assign_block(
+        &self,
+        x: &Mat,
+        lo: usize,
+        hi: usize,
+        cent: &Mat,
+        idx: &mut [u32],
+        d2: Option<&mut [f64]>,
+    ) -> bool {
+        debug_assert_eq!(idx.len(), hi - lo);
+        debug_assert_eq!(x.cols, cent.cols);
+        if let Some(buf) = d2.as_ref() {
+            debug_assert_eq!(buf.len(), hi - lo);
+        }
+        match x.cols {
+            2 => assign_rows_fixed::<2>(x, lo, hi, cent, idx, d2),
+            4 => assign_rows_fixed::<4>(x, lo, hi, cent, idx, d2),
+            8 => assign_rows_fixed::<8>(x, lo, hi, cent, idx, d2),
+            16 => assign_rows_fixed::<16>(x, lo, hi, cent, idx, d2),
+            _ => assign_rows_dyn(x, lo, hi, cent, idx, d2),
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn scalar_assign(x: &Mat, lo: usize, hi: usize, cent: &Mat) -> (Vec<u32>, Vec<f64>) {
+        let mut idx = Vec::new();
+        let mut d2 = Vec::new();
+        for i in lo..hi {
+            let (b, bd) = nearest(x, i, cent);
+            idx.push(b);
+            d2.push(bd);
+        }
+        (idx, d2)
+    }
+
+    #[test]
+    fn native_kernel_bit_equal_to_nearest_on_sub_blocks() {
+        let mut rng = Rng::new(7);
+        for d in [2usize, 4, 8, 16, 5] {
+            let x = Mat::randn(41, d, &mut rng);
+            let cent = Mat::randn(6, d, &mut rng);
+            for (lo, hi) in [(0usize, 41usize), (3, 20), (40, 41), (17, 17)] {
+                let (want_idx, want_d2) = scalar_assign(&x, lo, hi, &cent);
+                let mut idx = vec![u32::MAX; hi - lo];
+                let mut d2 = vec![f64::NAN; hi - lo];
+                assert!(NativeAssign.assign_block(&x, lo, hi, &cent, &mut idx, Some(&mut d2)));
+                assert_eq!(idx, want_idx, "d={d} block [{lo},{hi})");
+                for (a, b) in d2.iter().zip(want_d2.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "d={d} block [{lo},{hi})");
+                }
+            }
+        }
+    }
+
+    // NOTE: no route-flip test here on purpose — flipping the global
+    // route would race the kmeans-based tests sharing this test binary
+    // when artifacts are present. The route knob is pinned by the
+    // single-test `tests/assign_pjrt.rs` binary instead.
+}

@@ -1,9 +1,15 @@
 //! K-means (k-means++ init + Lloyd iterations) — step 5 of Algorithm 1.
 //!
-//! The assignment step has a PJRT-artifact twin (the Pallas
-//! `kmeans_assign` kernel); `runtime::backend` can route it through the
-//! compiled executable, and the `kernels` bench compares the two.
+//! The assignment step goes through the [`crate::cluster::assign`] seam:
+//! the default is the tiled native kernel (bit-identical to the historic
+//! per-row `nearest` loop), and `CHEBDAV_ASSIGN=pjrt` / the
+//! `[runtime] assign` config key route it through the compiled Pallas
+//! `kmeans_assign` artifact (`runtime::cluster`) with a counted native
+//! fallback. Lloyd iterations are zero-alloc: the assignment, distance,
+//! sums and counts buffers live in a [`KmeansScratch`] reused across
+//! iterations *and* restarts.
 
+use super::assign::{assign_route, AssignKernel, AssignRoute, NativeAssign};
 use crate::linalg::Mat;
 use crate::util::Rng;
 
@@ -48,8 +54,9 @@ pub(crate) fn dist2(x: &Mat, i: usize, cent: &Mat, c: usize) -> f64 {
 
 /// Nearest centroid of row `i`: (index, squared distance). Ties break to
 /// the lowest index (strict `<`). This is the one assignment rule — the
-/// sequential Lloyd loop and the distributed assign superstep both call
-/// it, which is what makes the p=1 bit-for-bit equivalence claim hold.
+/// tiled kernels in `cluster::assign` reproduce it bit-for-bit (pinned
+/// by `tests/assign_prop.rs`) and call it directly for tail rows, which
+/// is what keeps the p=1 bit-for-bit equivalence claim intact.
 #[inline]
 pub(crate) fn nearest(x: &Mat, i: usize, cent: &Mat) -> (u32, f64) {
     let mut best = 0u32;
@@ -106,91 +113,187 @@ pub(crate) fn finalize_centroids(x: &Mat, sums: &mut Mat, counts: &[f64], rng: &
     }
 }
 
-/// k-means++ seeding.
-fn seed_centroids(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
-    let n = x.rows;
-    let mut cent = Mat::zeros(k, x.cols);
-    let first = rng.below(n);
-    cent.row_mut(0).copy_from_slice(x.row(first));
-    let mut d2: Vec<f64> = (0..n).map(|i| dist2(x, i, &cent, 0)).collect();
-    for c in 1..k {
-        let total: f64 = d2.iter().sum();
-        let pick = sample_d2_index(&d2, total, rng);
-        cent.row_mut(c).copy_from_slice(x.row(pick));
-        // d2 is dead after the last pick — skip the final update
-        if c + 1 < k {
-            for i in 0..n {
-                d2[i] = d2[i].min(dist2(x, i, &cent, c));
+/// Reusable K-means working memory: one allocation per `kmeans` call,
+/// shared across Lloyd iterations and restarts. Every buffer is fully
+/// overwritten before it is read in each use, so reuse cannot leak
+/// state between restarts (pinned by the NaN-dirty-buffer cases in
+/// `tests/assign_prop.rs`) — with one deliberate exception: `assign` is
+/// the previous iteration's assignment (the changed-detection baseline)
+/// and must be zeroed at each restart to match a fresh `vec![0u32; n]`.
+struct KmeansScratch {
+    /// Current assignment (changed-detection baseline between iterations).
+    assign: Vec<u32>,
+    /// The incoming iteration's assignment, swapped into `assign`.
+    fresh: Vec<u32>,
+    /// Per-row squared distances (seeding and the final inertia pass).
+    d2: Vec<f64>,
+    /// Centroid sum accumulator; swapped with the centroids after
+    /// `finalize_centroids` turns it into the updated means.
+    sums: Mat,
+    counts: Vec<f64>,
+}
+
+impl KmeansScratch {
+    fn new(n: usize, k: usize, d: usize) -> KmeansScratch {
+        KmeansScratch {
+            assign: vec![0u32; n],
+            fresh: vec![0u32; n],
+            d2: vec![0.0; n],
+            sums: Mat::zeros(k, d),
+            counts: vec![0.0; k],
+        }
+    }
+}
+
+/// The assignment backend one `kmeans` call routes through, resolved
+/// once per call (the PJRT plan uploads the point block once and reuses
+/// it for every Lloyd iteration of every restart).
+enum AssignEngine {
+    Native,
+    Pjrt(crate::runtime::cluster::PjrtAssignPlan),
+}
+
+impl AssignEngine {
+    fn resolve(x: &Mat, k: usize) -> AssignEngine {
+        if assign_route() == AssignRoute::Pjrt {
+            if let Some(plan) = crate::runtime::cluster::try_plan(x, 0, x.rows, k) {
+                return AssignEngine::Pjrt(plan);
+            }
+        }
+        AssignEngine::Native
+    }
+
+    fn assign(
+        &self,
+        x: &Mat,
+        lo: usize,
+        hi: usize,
+        cent: &Mat,
+        idx: &mut [u32],
+        d2: Option<&mut [f64]>,
+    ) {
+        match self {
+            AssignEngine::Native => {
+                NativeAssign.assign_block(x, lo, hi, cent, idx, d2);
+            }
+            AssignEngine::Pjrt(plan) => {
+                // A failed device call has already been counted (with its
+                // reason) in RuntimeStats; rerun the block natively.
+                let mut d2 = d2;
+                if !plan.assign_block(x, lo, hi, cent, idx, d2.as_deref_mut()) {
+                    NativeAssign.assign_block(x, lo, hi, cent, idx, d2);
+                }
             }
         }
     }
-    cent
 }
 
-fn lloyd(x: &Mat, mut cent: Mat, max_iters: usize, rng: &mut Rng) -> KmeansResult {
+/// k-means++ seeding into caller-owned buffers. Every centroid row is
+/// written before it is first read and `d2` is fully overwritten at
+/// init, so stale contents from a previous restart are unobservable —
+/// the draws and arithmetic match the historic allocating seeder
+/// bit-for-bit.
+fn seed_centroids_into(x: &Mat, k: usize, rng: &mut Rng, cent: &mut Mat, d2: &mut [f64]) {
     let n = x.rows;
-    let k = cent.rows;
-    let d = x.cols;
-    let mut assign = vec![0u32; n];
+    let first = rng.below(n);
+    cent.row_mut(0).copy_from_slice(x.row(first));
+    for (i, slot) in d2.iter_mut().enumerate() {
+        *slot = dist2(x, i, cent, 0);
+    }
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = sample_d2_index(d2, total, rng);
+        cent.row_mut(c).copy_from_slice(x.row(pick));
+        // d2 is dead after the last pick — skip the final update
+        if c + 1 < k {
+            for (i, slot) in d2.iter_mut().enumerate() {
+                *slot = slot.min(dist2(x, i, cent, c));
+            }
+        }
+    }
+}
+
+/// Lloyd iterations over preallocated scratch. `cent` holds the seeded
+/// centroids on entry and the final ones on exit; `s.assign` holds the
+/// final assignments (`s.assign` must be zeroed by the caller first —
+/// it is the changed-detection baseline). Returns (inertia, iterations).
+fn lloyd_into(
+    x: &Mat,
+    cent: &mut Mat,
+    max_iters: usize,
+    rng: &mut Rng,
+    engine: &AssignEngine,
+    s: &mut KmeansScratch,
+) -> (f64, usize) {
+    let n = x.rows;
     let mut iterations = 0;
     for _ in 0..max_iters {
         iterations += 1;
-        let mut changed = false;
-        for i in 0..n {
-            let (best, _) = nearest(x, i, &cent);
-            if assign[i] != best {
-                assign[i] = best;
-                changed = true;
-            }
-        }
+        engine.assign(x, 0, n, cent, &mut s.fresh, None);
+        let changed = s.assign.iter().zip(s.fresh.iter()).any(|(a, b)| a != b);
+        std::mem::swap(&mut s.assign, &mut s.fresh);
         if !changed && iterations > 1 {
             break;
         }
         // update step (f64 counts: exact integers, and the same type the
-        // distributed twin's allreduced partials carry)
-        let mut sums = Mat::zeros(k, d);
-        let mut counts = vec![0.0f64; k];
+        // distributed twin's allreduced partials carry). The sums stay a
+        // single sequential ascending-i pass: tiling this accumulation
+        // would change the float-add order and break bit-identity.
+        s.sums.data.fill(0.0);
+        s.counts.fill(0.0);
         for i in 0..n {
-            let c = assign[i] as usize;
-            counts[c] += 1.0;
-            for t in 0..d {
-                sums[(c, t)] += x[(i, t)];
+            let c = s.assign[i] as usize;
+            s.counts[c] += 1.0;
+            for (dst, &v) in s.sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                *dst += v;
             }
         }
-        finalize_centroids(x, &mut sums, &counts, rng);
-        cent = sums;
+        finalize_centroids(x, &mut s.sums, &s.counts, rng);
+        std::mem::swap(cent, &mut s.sums);
     }
-    // When the loop above exits via max_iters, `assign` was computed
+    // When the loop above exits via max_iters, `s.assign` was computed
     // against the *pre-update* centroids; returning it with the updated
     // `cent` would make the triple internally inconsistent and restart
     // selection would compare stale inertias. Recompute the assignments
     // against the final centroids and the inertia with them, in one
     // pass. (On the converged-break path the recompute is a no-op: the
     // assignments already are the argmins of `cent`.)
-    let mut inertia = 0.0;
-    for (i, a) in assign.iter_mut().enumerate() {
-        let (best, bd) = nearest(x, i, &cent);
-        *a = best;
-        inertia += bd;
-    }
-    KmeansResult {
-        assignments: assign,
-        centroids: cent,
-        inertia,
-        iterations,
-    }
+    engine.assign(x, 0, n, cent, &mut s.fresh, Some(&mut s.d2));
+    std::mem::swap(&mut s.assign, &mut s.fresh);
+    let inertia = s.d2.iter().sum();
+    (inertia, iterations)
 }
 
 /// Full k-means with restarts; best-inertia run wins.
 pub fn kmeans(x: &Mat, opts: &KmeansOptions) -> KmeansResult {
     assert!(opts.k >= 1 && x.rows >= opts.k);
+    let (n, k, d) = (x.rows, opts.k, x.cols);
     let mut rng = Rng::new(opts.seed);
+    let engine = AssignEngine::resolve(x, k);
+    let mut s = KmeansScratch::new(n, k, d);
+    let mut cent = Mat::zeros(k, d);
     let mut best: Option<KmeansResult> = None;
     for _ in 0..opts.restarts.max(1) {
-        let cent = seed_centroids(x, opts.k, &mut rng);
-        let run = lloyd(x, cent, opts.max_iters, &mut rng);
-        if best.as_ref().map(|b| run.inertia < b.inertia).unwrap_or(true) {
-            best = Some(run);
+        seed_centroids_into(x, k, &mut rng, &mut cent, &mut s.d2);
+        s.assign.fill(0);
+        let (inertia, iterations) =
+            lloyd_into(x, &mut cent, opts.max_iters, &mut rng, &engine, &mut s);
+        match best.as_mut() {
+            Some(b) if inertia >= b.inertia => {}
+            Some(b) => {
+                b.assignments.clone_from(&s.assign);
+                b.centroids.clone_from(&cent);
+                b.inertia = inertia;
+                b.iterations = iterations;
+            }
+            None => {
+                best = Some(KmeansResult {
+                    assignments: s.assign.clone(),
+                    centroids: cent.clone(),
+                    inertia,
+                    iterations,
+                })
+            }
         }
     }
     best.unwrap()
@@ -347,5 +450,21 @@ mod tests {
             inertia.to_bits(),
             "returned inertia must be computed against the returned pair"
         );
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation_semantics() {
+        // Two kmeans calls with the same options must agree exactly —
+        // buffer reuse across restarts inside one call cannot leak state
+        // (each call rebuilds its scratch, so divergence would mean a
+        // read-before-write inside the restart loop).
+        let mut rng = Rng::new(9);
+        let (x, _) = blobs(3, 30, 1.0, &mut rng);
+        let opts = KmeansOptions::new(3);
+        let a = kmeans(&x, &opts);
+        let b = kmeans(&x, &opts);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+        assert_eq!(a.centroids.data, b.centroids.data);
     }
 }

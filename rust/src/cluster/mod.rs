@@ -2,10 +2,12 @@
 //! indexes (ARI/NMI), and the end-to-end pipeline with pluggable
 //! eigensolvers.
 
+pub mod assign;
 pub mod kmeans;
 pub mod metrics;
 pub mod pipeline;
 
+pub use assign::{assign_route, set_assign_route, AssignKernel, AssignRoute, NativeAssign};
 pub use kmeans::{kmeans, row_normalize, KmeansOptions, KmeansResult};
 pub use metrics::{adjusted_rand_index, normalized_mutual_information};
 pub use pipeline::{

@@ -32,6 +32,10 @@ pub struct ExperimentConfig {
     pub beta: f64,
     /// execute the SpMM hot path through the PJRT artifacts
     pub use_pjrt: bool,
+    /// K-means assignment route: "native" (default, bit-exact) or
+    /// "pjrt" (the compiled `kmeans_assign` artifact with counted
+    /// native fallbacks) — the config-side spelling of `CHEBDAV_ASSIGN`
+    pub assign: String,
     /// worker threads (native kernels + the rank-parallel superstep
     /// executor's persistent pool); 0 = auto (hardware_threads)
     pub threads: usize,
@@ -57,6 +61,7 @@ impl Default for ExperimentConfig {
             alpha: 2.0e-6,
             beta: 1.0e-9,
             use_pjrt: false,
+            assign: "native".to_string(),
             threads: crate::util::hardware_threads(),
             seq_ranks: false,
         }
@@ -93,6 +98,9 @@ impl ExperimentConfig {
             alpha: t.get_or("comm", "alpha", d.alpha, |v| v.as_float()),
             beta: t.get_or("comm", "beta", d.beta, |v| v.as_float()),
             use_pjrt: t.get_or("runtime", "use_pjrt", d.use_pjrt, |v| v.as_bool()),
+            assign: t.get_or("runtime", "assign", d.assign.clone(), |v| {
+                v.as_str().map(|s| s.to_string())
+            }),
             threads: t.get_or("run", "threads", d.threads, |v| {
                 v.as_int().map(|i| i.max(0) as usize)
             }),
@@ -118,6 +126,7 @@ mod tests {
         assert_eq!(c.name, "x");
         assert_eq!(c.k, 16);
         assert!(!c.use_pjrt);
+        assert_eq!(c.assign, "native");
     }
 
     #[test]
@@ -140,6 +149,7 @@ alpha = 1e-6
 beta = 2e-9
 [runtime]
 use_pjrt = true
+assign = "pjrt"
 [run]
 threads = 3
 seq_ranks = true
@@ -149,6 +159,7 @@ seq_ranks = true
         assert_eq!(c.ps, vec![1, 121, 1024]);
         assert_eq!(c.alpha, 1e-6);
         assert!(c.use_pjrt);
+        assert_eq!(c.assign, "pjrt");
         assert_eq!(c.threads, 3);
         assert!(c.seq_ranks);
     }

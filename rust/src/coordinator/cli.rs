@@ -69,6 +69,7 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
         m: args.get("m", 11),
         tol: args.get("tol", 1e-2),
         use_pjrt: args.has("pjrt"),
+        assign: args.get("assign", d.assign.clone()),
         threads: args.get("threads", d.threads),
         ..d
     }
@@ -113,6 +114,10 @@ USAGE:
                 superstep executor (default: hardware threads; also the
                 config key [run] threads). CHEBDAV_SEQ_RANKS=1 or
                 [run] seq_ranks = true restores sequential rank execution.
+  --assign R    K-means assignment route: native (default, bit-exact) or
+                pjrt (compiled kmeans_assign artifact, counted native
+                fallbacks). Also CHEBDAV_ASSIGN=pjrt or the config key
+                [runtime] assign = \"pjrt\".
 
 GRAPHS: LBOLBSV LBOHBSV HBOLBSV HBOHBSV MAWI Graph500"
     );
@@ -147,6 +152,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
             stats.compilations,
             stats.mean_pad_ratio()
         );
+        if let Some(reason) = stats.fallback_reason.as_deref() {
+            println!("pjrt: first fallback reason: {reason}");
+        }
         out
     } else {
         crate::util::time_it(|| bchdav(&mat.lap, &opts, None))
@@ -323,6 +331,34 @@ fn cmd_info() -> Result<()> {
             }
         }
         Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
+    }
+    let route = match crate::cluster::assign_route() {
+        crate::cluster::AssignRoute::Pjrt => "pjrt",
+        crate::cluster::AssignRoute::Native => "native",
+    };
+    println!("assign route: {route} (CHEBDAV_ASSIGN / [runtime] assign / --assign)");
+    if route == "pjrt" {
+        match crate::runtime::assign_runtime() {
+            Ok(rt) => {
+                let buckets = rt
+                    .manifest
+                    .entries
+                    .iter()
+                    .filter(|e| e.kind == "kmeans_assign")
+                    .count();
+                let stats = rt.stats.borrow();
+                let first = stats
+                    .fallback_reason
+                    .as_deref()
+                    .map(|r| format!(" (first: {r})"))
+                    .unwrap_or_default();
+                println!(
+                    "  kmeans_assign buckets: {buckets} | calls: {} | fallbacks: {}{first}",
+                    stats.pjrt_calls, stats.native_fallbacks
+                );
+            }
+            Err(reason) => println!("  pjrt assign unavailable: {reason}"),
+        }
     }
     println!("hardware threads: {}", crate::util::hardware_threads());
     println!(

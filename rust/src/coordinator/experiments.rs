@@ -23,11 +23,15 @@ pub fn grid_side(p: usize) -> usize {
 /// config-side spelling of `CHEBDAV_SEQ_RANKS=1`). The CLI, the figure
 /// benches, and the examples all funnel through this one entry point so
 /// they share the same knob. `seq_ranks = false` (the default) leaves
-/// the environment variable in control rather than overriding it.
+/// the environment variable in control rather than overriding it, and so
+/// does `[runtime] assign = "native"` for `CHEBDAV_ASSIGN`.
 pub fn apply_run_settings(cfg: &ExperimentConfig) {
     crate::util::set_threads(cfg.threads);
     if cfg.seq_ranks {
         crate::mpi_sim::set_seq_ranks(Some(true));
+    }
+    if cfg.assign == "pjrt" {
+        crate::cluster::set_assign_route(Some(crate::cluster::AssignRoute::Pjrt));
     }
 }
 

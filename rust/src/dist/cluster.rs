@@ -24,7 +24,10 @@
 //!   Charged to the new `"kmeans"` component key.
 //!
 //! Semantics are the *fixed* sequential `cluster::kmeans` semantics,
-//! mirrored draw-for-draw: the same shared `nearest` assignment rule,
+//! mirrored draw-for-draw: the same `AssignKernel` seam with the same
+//! default tiled kernel (bit-identical to the shared `nearest` rule; the
+//! opt-in `CHEBDAV_ASSIGN=pjrt` route swaps in per-rank device plans
+//! with counted native fallbacks and identical collective charges),
 //! the same k-means++ sampling and empty-cluster reseeding draws from
 //! one replicated RNG stream, the same restart selection — so at p = 1
 //! every float and every assignment is bit-for-bit identical to the
@@ -40,14 +43,18 @@
 
 use super::bchdav::dist_bchdav;
 use super::matrix::DistMatrix;
-use super::{merge_partials, rowwise_produce, rowwise_update};
+use super::{merge_partials, row_partition, rowwise_produce, rowwise_update};
+use crate::cluster::assign::{assign_route, AssignKernel, AssignRoute, NativeAssign};
 use crate::cluster::kmeans::{
-    dist2, finalize_centroids, nearest, normalize_row, sample_d2_index, KmeansOptions,
+    dist2, finalize_centroids, normalize_row, sample_d2_index, KmeansOptions,
 };
 use crate::eig::laplacian_opts;
 use crate::linalg::Mat;
+use crate::mpi_sim::exec::slowest_share;
 use crate::mpi_sim::{CostModel, Ledger};
+use crate::runtime::cluster::PjrtAssignPlan;
 use crate::util::Rng;
+use std::time::Instant;
 
 /// Distributed row-wise L2 normalization of the 1D-layout panel
 /// (step 4 of Algorithm 1): one `rowwise_update` superstep under the
@@ -140,6 +147,91 @@ fn dist_seed_centroids(
     cent
 }
 
+/// The assignment backend one `dist_kmeans` call routes its assign
+/// supersteps through, resolved once per call (so the PJRT route pays
+/// its per-rank point-block uploads once per solve, not per restart).
+enum DistAssignEngine {
+    /// The bit-exact native kernel inside the normal superstep (default).
+    Native,
+    /// Per-rank device plans over the `row_partition` layout (None where
+    /// that rank's block fit no bucket — those ranks run native).
+    Pjrt {
+        plans: Vec<Option<PjrtAssignPlan>>,
+        ranges: Vec<(usize, usize)>,
+        weights: Vec<f64>,
+    },
+}
+
+impl DistAssignEngine {
+    fn resolve(x: &Mat, k: usize, p: usize, led: &mut Ledger) -> DistAssignEngine {
+        if assign_route() != AssignRoute::Pjrt {
+            return DistAssignEngine::Native;
+        }
+        let (ranges, weights) = row_partition(x.rows, p);
+        // Plan building (pad + one point-block upload per rank) runs
+        // sequentially on the coordinator thread — PjrtRuntime is
+        // single-threaded by construction — and is billed the way a
+        // superstep would be: wall time scaled to the slowest rank's
+        // share of the row partition.
+        let t0 = Instant::now();
+        let plans: Vec<Option<PjrtAssignPlan>> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                if hi > lo {
+                    crate::runtime::cluster::try_plan(x, lo, hi, k)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        led.add_compute("kmeans", t0.elapsed().as_secs_f64() * slowest_share(&weights));
+        if plans.iter().all(|pl| pl.is_none()) {
+            // every rank fell back (each counted with its reason in
+            // RuntimeStats) — run the whole solve native
+            return DistAssignEngine::Native;
+        }
+        DistAssignEngine::Pjrt {
+            plans,
+            ranges,
+            weights,
+        }
+    }
+}
+
+/// One device-side assign pass over all ranks: each rank's block goes
+/// through its plan (native fallback per rank on error/no-plan), writing
+/// into `fresh` (and `d2`). Device calls are sequential on the
+/// coordinator thread; the wall time is billed as superstep-equivalent
+/// compute (slowest rank's share), mirroring `superstep_weighted`.
+#[allow(clippy::too_many_arguments)]
+fn pjrt_device_pass(
+    x: &Mat,
+    cent: &Mat,
+    plans: &[Option<PjrtAssignPlan>],
+    ranges: &[(usize, usize)],
+    weights: &[f64],
+    fresh: &mut [u32],
+    mut d2: Option<&mut [f64]>,
+    led: &mut Ledger,
+) {
+    let t0 = Instant::now();
+    for (r, &(lo, hi)) in ranges.iter().enumerate() {
+        if hi == lo {
+            continue;
+        }
+        let block = &mut fresh[lo..hi];
+        let mut d2b: Option<&mut [f64]> = d2.as_deref_mut().map(|b| &mut b[lo..hi]);
+        let handled = match plans[r].as_ref() {
+            Some(pl) => pl.assign_block(x, lo, hi, cent, block, d2b.as_deref_mut()),
+            None => false,
+        };
+        if !handled {
+            NativeAssign.assign_block(x, lo, hi, cent, block, d2b);
+        }
+    }
+    led.add_compute("kmeans", t0.elapsed().as_secs_f64() * slowest_share(weights));
+}
+
 /// Lloyd iterations over the 1D row layout with replicated centroids,
 /// mirroring the fixed sequential `lloyd`. Each iteration: one assign
 /// superstep producing, per rank, (local assignments, changed flag, the
@@ -151,6 +243,13 @@ fn dist_seed_centroids(
 /// charge already models. The final pass recomputes assignments +
 /// inertia against the final centroids (the lloyd bugfix semantics) and
 /// charges the 1-word inertia allreduce.
+///
+/// Assignment itself goes through the `AssignKernel` seam: the native
+/// engine runs the tiled kernel inside the superstep body (bit-identical
+/// to the historic `nearest` loop, same partial-accumulation order); the
+/// PJRT engine runs the device calls first, then a superstep accumulates
+/// sums/changed from the precomputed assignments — the collective charges
+/// are identical either way.
 #[allow(clippy::too_many_arguments)]
 fn dist_lloyd(
     x: &Mat,
@@ -160,6 +259,7 @@ fn dist_lloyd(
     p: usize,
     cost: &CostModel,
     led: &mut Ledger,
+    engine: &DistAssignEngine,
 ) -> (Vec<u32>, Mat, f64, usize) {
     let n = x.rows;
     let k = cent.rows;
@@ -168,42 +268,89 @@ fn dist_lloyd(
     let mut iterations = 0;
     for _ in 0..max_iters {
         iterations += 1;
-        let parts: Vec<(Vec<u32>, bool, Vec<f64>)> = {
-            let cent = &cent;
-            let assign = &assign;
-            rowwise_produce(led, "kmeans", n, p, |lo, hi| {
-                let mut local = Vec::with_capacity(hi - lo);
+        let (changed, buf) = match engine {
+            DistAssignEngine::Native => {
+                let parts: Vec<(Vec<u32>, bool, Vec<f64>)> = {
+                    let cent = &cent;
+                    let assign = &assign;
+                    rowwise_produce(led, "kmeans", n, p, |lo, hi| {
+                        let mut local = vec![0u32; hi - lo];
+                        NativeAssign.assign_block(x, lo, hi, cent, &mut local, None);
+                        let mut changed = false;
+                        // packed [k*d centroid sums | k counts]: exactly
+                        // the k*(d+1) words the per-iteration allreduce
+                        // moves. Stays a single ascending-i pass — tiling
+                        // this accumulation would change the float-add
+                        // order and break bit-identity.
+                        let mut partial = vec![0.0f64; k * (d + 1)];
+                        for (off, i) in (lo..hi).enumerate() {
+                            let best = local[off];
+                            if assign[i] != best {
+                                changed = true;
+                            }
+                            let c = best as usize;
+                            partial[k * d + c] += 1.0;
+                            let dst = &mut partial[c * d..(c + 1) * d];
+                            for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
+                                *s += v;
+                            }
+                        }
+                        (local, changed, partial)
+                    })
+                };
                 let mut changed = false;
-                // packed [k*d centroid sums | k counts]: exactly the
-                // k*(d+1) words the per-iteration allreduce moves
-                let mut partial = vec![0.0f64; k * (d + 1)];
-                for i in lo..hi {
-                    let (best, _) = nearest(x, i, cent);
-                    if assign[i] != best {
-                        changed = true;
-                    }
-                    local.push(best);
-                    let c = best as usize;
-                    partial[k * d + c] += 1.0;
-                    let dst = &mut partial[c * d..(c + 1) * d];
-                    for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
-                        *s += v;
-                    }
+                let mut buf = vec![0.0f64; k * (d + 1)];
+                let mut sum_parts = Vec::with_capacity(parts.len());
+                let mut off = 0;
+                for (local, ch, partial) in parts {
+                    assign[off..off + local.len()].copy_from_slice(&local);
+                    off += local.len();
+                    changed |= ch;
+                    sum_parts.push(partial);
                 }
-                (local, changed, partial)
-            })
+                merge_partials(&mut buf, &sum_parts);
+                (changed, buf)
+            }
+            DistAssignEngine::Pjrt {
+                plans,
+                ranges,
+                weights,
+            } => {
+                let mut fresh = vec![0u32; n];
+                pjrt_device_pass(x, &cent, plans, ranges, weights, &mut fresh, None, led);
+                let parts: Vec<(bool, Vec<f64>)> = {
+                    let assign = &assign;
+                    let fresh = &fresh;
+                    rowwise_produce(led, "kmeans", n, p, |lo, hi| {
+                        let mut changed = false;
+                        let mut partial = vec![0.0f64; k * (d + 1)];
+                        for i in lo..hi {
+                            let best = fresh[i];
+                            if assign[i] != best {
+                                changed = true;
+                            }
+                            let c = best as usize;
+                            partial[k * d + c] += 1.0;
+                            let dst = &mut partial[c * d..(c + 1) * d];
+                            for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
+                                *s += v;
+                            }
+                        }
+                        (changed, partial)
+                    })
+                };
+                let mut changed = false;
+                let mut buf = vec![0.0f64; k * (d + 1)];
+                let mut sum_parts = Vec::with_capacity(parts.len());
+                for (ch, partial) in parts {
+                    changed |= ch;
+                    sum_parts.push(partial);
+                }
+                merge_partials(&mut buf, &sum_parts);
+                assign.copy_from_slice(&fresh);
+                (changed, buf)
+            }
         };
-        let mut changed = false;
-        let mut buf = vec![0.0f64; k * (d + 1)];
-        let mut sum_parts = Vec::with_capacity(parts.len());
-        let mut off = 0;
-        for (local, ch, partial) in parts {
-            assign[off..off + local.len()].copy_from_slice(&local);
-            off += local.len();
-            changed |= ch;
-            sum_parts.push(partial);
-        }
-        merge_partials(&mut buf, &sum_parts);
         led.charge("kmeans", cost.allreduce(k * (d + 1), p));
         if !changed && iterations > 1 {
             break;
@@ -217,26 +364,57 @@ fn dist_lloyd(
     }
     // final assignments + inertia against the final centroids (the
     // sequential lloyd's post-loop consistency pass, distributed)
-    let parts: Vec<(Vec<u32>, f64)> = {
-        let cent = &cent;
-        rowwise_produce(led, "kmeans", n, p, |lo, hi| {
-            let mut local = Vec::with_capacity(hi - lo);
+    let inertia = match engine {
+        DistAssignEngine::Native => {
+            let parts: Vec<(Vec<u32>, f64)> = {
+                let cent = &cent;
+                rowwise_produce(led, "kmeans", n, p, |lo, hi| {
+                    let mut local = vec![0u32; hi - lo];
+                    let mut ld2 = vec![0.0f64; hi - lo];
+                    NativeAssign.assign_block(x, lo, hi, cent, &mut local, Some(&mut ld2));
+                    // same ascending fold the historic per-row loop ran
+                    let inertia: f64 = ld2.iter().sum();
+                    (local, inertia)
+                })
+            };
             let mut inertia = 0.0;
-            for i in lo..hi {
-                let (best, bd) = nearest(x, i, cent);
-                local.push(best);
-                inertia += bd;
+            let mut off = 0;
+            for (local, li) in parts {
+                assign[off..off + local.len()].copy_from_slice(&local);
+                off += local.len();
+                inertia += li;
             }
-            (local, inertia)
-        })
+            inertia
+        }
+        DistAssignEngine::Pjrt {
+            plans,
+            ranges,
+            weights,
+        } => {
+            let mut fresh = vec![0u32; n];
+            let mut d2buf = vec![0.0f64; n];
+            pjrt_device_pass(
+                x,
+                &cent,
+                plans,
+                ranges,
+                weights,
+                &mut fresh,
+                Some(&mut d2buf),
+                led,
+            );
+            let parts: Vec<f64> = {
+                let d2buf = &d2buf;
+                rowwise_produce(led, "kmeans", n, p, |lo, hi| d2buf[lo..hi].iter().sum::<f64>())
+            };
+            assign.copy_from_slice(&fresh);
+            let mut inertia = 0.0;
+            for li in parts {
+                inertia += li;
+            }
+            inertia
+        }
     };
-    let mut inertia = 0.0;
-    let mut off = 0;
-    for (local, li) in parts {
-        assign[off..off + local.len()].copy_from_slice(&local);
-        off += local.len();
-        inertia += li;
-    }
     led.charge("kmeans", cost.allreduce(1, p));
     (assign, cent, inertia, iterations)
 }
@@ -255,10 +433,11 @@ pub fn dist_kmeans(
 ) -> DistKmeansResult {
     assert!(opts.k >= 1 && x.rows >= opts.k);
     let mut rng = Rng::new(opts.seed);
+    let engine = DistAssignEngine::resolve(x, opts.k, p, led);
     let mut best: Option<(Vec<u32>, Mat, f64, usize)> = None;
     for _ in 0..opts.restarts.max(1) {
         let cent = dist_seed_centroids(x, opts.k, &mut rng, p, cost, led);
-        let run = dist_lloyd(x, cent, opts.max_iters, &mut rng, p, cost, led);
+        let run = dist_lloyd(x, cent, opts.max_iters, &mut rng, p, cost, led, &engine);
         if best.as_ref().map(|b| run.2 < b.2).unwrap_or(true) {
             best = Some(run);
         }

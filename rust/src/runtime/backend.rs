@@ -22,6 +22,11 @@ use crate::eig::SpmmOp;
 use crate::linalg::Mat;
 use crate::sparse::{Csr, EllHyb};
 use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// One uploaded (vals, cols) plane pair, shared between every bucket of
+/// the same padded (n, w) shape.
+type Planes = Rc<(xla::PjRtBuffer, xla::PjRtBuffer)>;
 
 pub struct PjrtOperator<'r> {
     rt: &'r PjrtRuntime,
@@ -31,10 +36,11 @@ pub struct PjrtOperator<'r> {
     /// chosen spmm bucket (None -> always native)
     spmm_bucket: Option<ManifestEntry>,
     /// uploaded padded planes for the spmm bucket
-    planes: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
-    /// fused-filter buckets by degree m, with their own uploaded planes
-    /// (bucket shapes can differ from the spmm bucket's)
-    filter_planes: Vec<(ManifestEntry, xla::PjRtBuffer, xla::PjRtBuffer)>,
+    planes: Option<Planes>,
+    /// fused-filter buckets by degree m with their uploaded planes —
+    /// shared (not re-padded/re-uploaded) whenever a bucket's (n, w)
+    /// matches the spmm bucket's or another degree's
+    filter_planes: Vec<(ManifestEntry, Planes)>,
 }
 
 fn pad_planes(ell: &EllHyb, nb: usize, wb: usize) -> (Vec<f32>, Vec<i32>) {
@@ -71,14 +77,27 @@ impl<'r> PjrtOperator<'r> {
             .manifest
             .find_bucket("spmm", n, width, k_hint, None)
             .cloned();
-        let planes = match &spmm_bucket {
-            Some(b) => {
-                let (vals, cols) = pad_planes(&ell, b.n, b.w);
-                Some((
-                    rt.upload_f32(&vals, &[b.n, b.w]).context("vals upload")?,
-                    rt.upload_i32(&cols, &[b.n, b.w]).context("cols upload")?,
-                ))
+
+        // Plane-upload cache keyed by padded (n, w): the padded vals/cols
+        // content depends only on that shape, so buckets sharing it (the
+        // spmm bucket and most per-degree filter buckets) reuse one
+        // upload instead of re-padding and re-transferring per degree.
+        let mut uploaded: Vec<((usize, usize), Planes)> = Vec::new();
+        let mut planes_for = |nb: usize, wb: usize| -> Result<Planes> {
+            if let Some((_, p)) = uploaded.iter().find(|((pn, pw), _)| *pn == nb && *pw == wb) {
+                return Ok(p.clone());
             }
+            let (vals, cols) = pad_planes(&ell, nb, wb);
+            let p: Planes = Rc::new((
+                rt.upload_f32(&vals, &[nb, wb]).context("vals upload")?,
+                rt.upload_i32(&cols, &[nb, wb]).context("cols upload")?,
+            ));
+            uploaded.push(((nb, wb), p.clone()));
+            Ok(p)
+        };
+
+        let planes = match &spmm_bucket {
+            Some(b) => Some(planes_for(b.n, b.w)?),
             None => None,
         };
 
@@ -98,12 +117,8 @@ impl<'r> PjrtOperator<'r> {
             for m in degrees {
                 if let Some(b) = rt.manifest.find_bucket("cheb_filter", n, width, k_hint, Some(m))
                 {
-                    let (vals, cols) = pad_planes(&ell, b.n, b.w);
-                    filter_planes.push((
-                        b.clone(),
-                        rt.upload_f32(&vals, &[b.n, b.w])?,
-                        rt.upload_i32(&cols, &[b.n, b.w])?,
-                    ));
+                    let planes = planes_for(b.n, b.w)?;
+                    filter_planes.push((b.clone(), planes));
                 }
             }
         }
@@ -123,7 +138,7 @@ impl<'r> PjrtOperator<'r> {
     }
 
     pub fn has_fused_filter(&self, m: usize) -> bool {
-        self.filter_planes.iter().any(|(b, _, _)| b.m == Some(m))
+        self.filter_planes.iter().any(|(b, _)| b.m == Some(m))
     }
 
     fn pad_panel(&self, x: &Mat, nb: usize, kb: usize) -> Vec<f32> {
@@ -152,11 +167,11 @@ impl<'r> PjrtOperator<'r> {
         if x.cols > b.k {
             anyhow::bail!("panel wider than bucket");
         }
-        let (vals_buf, cols_buf) = self.planes.as_ref().context("no planes")?;
+        let planes = self.planes.as_ref().context("no planes")?;
         let exe = self.rt.executable(b)?;
         let panel = self.pad_panel(x, b.n, b.k);
         let xbuf = self.rt.upload_f32(&panel, &[b.n, b.k])?;
-        let y = self.rt.run_b(&exe, &[vals_buf, cols_buf, &xbuf])?;
+        let y = self.rt.run_b(&exe, &[&planes.0, &planes.1, &xbuf])?;
         let mut out = self.unpad(&y, b.n, b.k, x.rows, x.cols);
         // HYB tail (rows whose degree exceeded the ELL width)
         self.ell.apply_tail(x, &mut out);
@@ -168,17 +183,17 @@ impl<'r> PjrtOperator<'r> {
     }
 
     fn filter_pjrt(&self, v: &Mat, m: usize, a: f64, bb: f64, a0: f64) -> Result<Mat> {
-        let (bucket, vals_buf, cols_buf) = self
+        let (bucket, planes) = self
             .filter_planes
             .iter()
-            .find(|(b, _, _)| b.m == Some(m) && b.k >= v.cols)
+            .find(|(b, _)| b.m == Some(m) && b.k >= v.cols)
             .context("no filter bucket")?;
         let exe = self.rt.executable(bucket)?;
         let panel = self.pad_panel(v, bucket.n, bucket.k);
         let vbuf = self.rt.upload_f32(&panel, &[bucket.n, bucket.k])?;
         let bounds = [a as f32, bb as f32, a0 as f32];
         let bbuf = self.rt.upload_f32(&bounds, &[3])?;
-        let y = self.rt.run_b(&exe, &[vals_buf, cols_buf, &vbuf, &bbuf])?;
+        let y = self.rt.run_b(&exe, &[&planes.0, &planes.1, &vbuf, &bbuf])?;
         let out = self.unpad(&y, bucket.n, bucket.k, v.rows, v.cols);
         let mut stats = self.rt.stats.borrow_mut();
         stats.pjrt_calls += 1;
@@ -200,8 +215,11 @@ impl SpmmOp for PjrtOperator<'_> {
     fn spmm(&self, x: &Mat) -> Mat {
         match self.spmm_pjrt(x) {
             Ok(y) => y,
-            Err(_) => {
-                self.rt.stats.borrow_mut().native_fallbacks += 1;
+            Err(e) => {
+                self.rt
+                    .stats
+                    .borrow_mut()
+                    .note_fallback(format!("spmm: {e:#}"));
                 self.csr.spmm(x)
             }
         }
@@ -210,9 +228,16 @@ impl SpmmOp for PjrtOperator<'_> {
     fn cheb_filter(&self, v: &Mat, m: usize, a: f64, b: f64, a0: f64) -> Mat {
         match self.filter_pjrt(v, m, a, b, a0) {
             Ok(y) => y,
-            Err(_) => {
+            Err(e) => {
                 // per-degree path: each spmm() call still goes through
-                // PJRT when a bucket exists, and handles the HYB tail
+                // PJRT when a bucket exists, and handles the HYB tail —
+                // so this is not a native-fallback count, but keep the
+                // reason visible for diagnosis
+                let mut stats = self.rt.stats.borrow_mut();
+                if stats.fallback_reason.is_none() {
+                    stats.fallback_reason = Some(format!("cheb_filter m={m}: {e:#}"));
+                }
+                drop(stats);
                 crate::eig::chebyshev_filter_via_spmm(self, v, m, a, b, a0)
             }
         }
@@ -296,7 +321,38 @@ mod tests {
         let x = Mat::randn(200, 33, &mut rng);
         let got = op.spmm(&x);
         assert!(got.max_abs_diff(&a.spmm(&x)) < 1e-12);
-        assert!(rt.stats.borrow().native_fallbacks >= 1);
+        let stats = rt.stats.borrow();
+        assert!(stats.native_fallbacks >= 1);
+        // the fallback is diagnosable, not just counted
+        let reason = stats.fallback_reason.as_deref().unwrap_or("");
+        assert!(reason.starts_with("spmm:"), "reason: {reason:?}");
+    }
+
+    #[test]
+    fn buckets_sharing_shape_reuse_uploaded_planes() {
+        // the (n, w)-keyed upload cache: every pair of buckets with the
+        // same padded shape must hold the *same* device buffers
+        let Some(rt) = runtime() else { return };
+        let a = lap(300, 0.03, 8);
+        let op = PjrtOperator::new(&rt, &a, 8).unwrap();
+        let mut all: Vec<((usize, usize), &Planes)> = Vec::new();
+        if let (Some(b), Some(p)) = (&op.spmm_bucket, &op.planes) {
+            all.push(((b.n, b.w), p));
+        }
+        for (b, p) in &op.filter_planes {
+            all.push(((b.n, b.w), p));
+        }
+        for i in 0..all.len() {
+            for j in (i + 1)..all.len() {
+                if all[i].0 == all[j].0 {
+                    assert!(
+                        Rc::ptr_eq(all[i].1, all[j].1),
+                        "buckets with shape {:?} uploaded twice",
+                        all[i].0
+                    );
+                }
+            }
+        }
     }
 
     #[test]

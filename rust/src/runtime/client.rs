@@ -26,6 +26,9 @@ pub struct RuntimeStats {
     /// total padding overhead ratio accumulated (padded elems / real)
     pub pad_ratio_sum: f64,
     pub pad_ratio_count: usize,
+    /// why the *first* fallback happened — the diagnosable sample
+    /// (subsequent reasons are almost always the same string repeated)
+    pub fallback_reason: Option<String>,
 }
 
 impl RuntimeStats {
@@ -34,6 +37,15 @@ impl RuntimeStats {
             1.0
         } else {
             self.pad_ratio_sum / self.pad_ratio_count as f64
+        }
+    }
+
+    /// Count a native fallback and keep the first reason string for
+    /// `chebdav info` / bench output.
+    pub fn note_fallback(&mut self, reason: impl Into<String>) {
+        self.native_fallbacks += 1;
+        if self.fallback_reason.is_none() {
+            self.fallback_reason = Some(reason.into());
         }
     }
 }
@@ -141,5 +153,19 @@ impl PjrtRuntime {
         inner
             .to_vec::<i32>()
             .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RuntimeStats;
+
+    #[test]
+    fn note_fallback_counts_and_keeps_first_reason() {
+        let mut s = RuntimeStats::default();
+        s.note_fallback("no bucket fits n=9000");
+        s.note_fallback(String::from("later, different"));
+        assert_eq!(s.native_fallbacks, 2);
+        assert_eq!(s.fallback_reason.as_deref(), Some("no bucket fits n=9000"));
     }
 }

@@ -1,0 +1,369 @@
+//! PJRT-routed K-means assignment: the `kmeans_assign` Pallas artifact
+//! behind the `cluster::assign::AssignKernel` seam.
+//!
+//! Discipline mirrors `runtime::backend`'s A-Stationary rule, shifted to
+//! the K-means data: a rank's local **point block** is padded to a
+//! manifest bucket and uploaded to the device *once per solve*
+//! ([`PjrtAssignPlan::new`]); per Lloyd iteration only the replicated
+//! k×d **centroid block** crosses the host/device boundary. Phantom
+//! centroid rows are filled with [`CENTROID_PAD`] so they can never win
+//! the argmin; phantom point rows produce assignments that are sliced
+//! off. Shapes that fit no bucket — or any device error — fall back to
+//! the native kernel and are counted *with a reason* in `RuntimeStats`.
+//!
+//! # Precision contract
+//!
+//! The artifact computes in **f32** (`d2 = -2·p@cᵀ + ‖c‖²`, first-index
+//! argmin ties) while the native pipeline is f64 with strict-`<`
+//! tie-break. Assignments therefore match native only up to f32
+//! rounding of near-ties; this route is **opt-in** (`CHEBDAV_ASSIGN=pjrt`
+//! or `[runtime] assign = "pjrt"`) and is *not* part of any bit-identity
+//! invariant. When a squared-distance output is requested the plan
+//! backfills it in f64 via `dist2` against the *chosen* index, so
+//! downstream inertia sums stay f64. Pinned by the skip-not-fail tests
+//! in this module (`pjrt_assign_matches_native_on_separated_blobs`,
+//! `mismatched_centroids_fall_back_loudly`) and the end-to-end
+//! `tests/assign_pjrt.rs` pipeline comparison at p ∈ {1, 4}.
+
+use super::client::PjrtRuntime;
+use super::manifest::ManifestEntry;
+use crate::cluster::assign::AssignKernel;
+use crate::cluster::kmeans::dist2;
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Fill value for phantom centroid rows (bucket kc beyond the real k).
+/// Large enough that a phantom row's distance dwarfs any real one, small
+/// enough that its squared norm (d · 1e30) stays far inside f32 range.
+pub const CENTROID_PAD: f32 = 1.0e15;
+
+/// A device-resident assignment plan for one point block: the padded
+/// block is uploaded at construction and reused by every [`run`] /
+/// `assign_block` call, which only ships the current centroids.
+///
+/// A plan is pinned to the `(x, lo, hi, k)` it was built for —
+/// `assign_block` with any other block or centroid shape refuses (and
+/// counts a reasoned fallback) rather than computing against stale
+/// device data.
+///
+/// [`run`]: PjrtAssignPlan::run
+pub struct PjrtAssignPlan {
+    rt: Rc<PjrtRuntime>,
+    bucket: ManifestEntry,
+    /// uploaded padded (nb, db) point block
+    points: xla::PjRtBuffer,
+    rows: usize,
+    lo: usize,
+    d: usize,
+    k: usize,
+    /// bucket dims (unwrapped once)
+    nb: usize,
+    db: usize,
+    kcb: usize,
+    /// reused host staging for the padded centroid upload
+    cent_host: RefCell<Vec<f32>>,
+}
+
+impl PjrtAssignPlan {
+    /// Pick a `kmeans_assign` bucket for rows `[lo, hi)` of `x` with `k`
+    /// centroids, pad the block and upload it. Errors (no bucket, upload
+    /// failure, degenerate shape) are returned for the caller to count.
+    pub fn new(
+        rt: Rc<PjrtRuntime>,
+        x: &Mat,
+        lo: usize,
+        hi: usize,
+        k: usize,
+    ) -> Result<PjrtAssignPlan> {
+        let rows = hi - lo;
+        let d = x.cols;
+        if rows == 0 || d == 0 || k == 0 {
+            anyhow::bail!("degenerate assign shape rows={rows} d={d} k={k}");
+        }
+        let bucket = rt
+            .manifest
+            .find_kmeans_bucket(rows, d, k)
+            .with_context(|| format!("no kmeans_assign bucket fits rows={rows} d={d} kc={k}"))?
+            .clone();
+        let (nb, db, kcb) = (
+            bucket.n,
+            bucket.d.context("kmeans bucket missing d")?,
+            bucket.kc.context("kmeans bucket missing kc")?,
+        );
+        let mut padded = vec![0.0f32; nb * db];
+        for i in 0..rows {
+            let src = x.row(lo + i);
+            for (j, &v) in src.iter().enumerate() {
+                padded[i * db + j] = v as f32;
+            }
+        }
+        let points = rt
+            .upload_f32(&padded, &[nb, db])
+            .context("point block upload")?;
+        Ok(PjrtAssignPlan {
+            rt,
+            bucket,
+            points,
+            rows,
+            lo,
+            d,
+            k,
+            nb,
+            db,
+            kcb,
+            cent_host: RefCell::new(vec![0.0f32; kcb * db]),
+        })
+    }
+
+    /// The manifest bucket this plan compiled against.
+    pub fn bucket_name(&self) -> &str {
+        &self.bucket.name
+    }
+
+    /// Ship the current centroids, execute, and write the block's
+    /// assignments into `idx` (length `hi - lo` of the planned block).
+    pub fn run(&self, cent: &Mat, idx: &mut [u32]) -> Result<()> {
+        if cent.rows != self.k || cent.cols != self.d || idx.len() != self.rows {
+            anyhow::bail!(
+                "plan shape mismatch: planned (rows={}, d={}, k={}), got (idx={}, cent {}x{})",
+                self.rows,
+                self.d,
+                self.k,
+                idx.len(),
+                cent.rows,
+                cent.cols
+            );
+        }
+        {
+            let mut host = self.cent_host.borrow_mut();
+            host.fill(0.0);
+            for c in 0..self.k {
+                let row = cent.row(c);
+                for (t, &v) in row.iter().enumerate() {
+                    host[c * self.db + t] = v as f32;
+                }
+            }
+            for c in self.k..self.kcb {
+                host[c * self.db..(c + 1) * self.db].fill(CENTROID_PAD);
+            }
+            let cbuf = self
+                .rt
+                .upload_f32(&host, &[self.kcb, self.db])
+                .context("centroid upload")?;
+            let exe = self.rt.executable(&self.bucket)?;
+            let out = self.rt.run_b_i32(&exe, &[&self.points, &cbuf])?;
+            if out.len() < self.rows {
+                anyhow::bail!("artifact returned {} rows, need {}", out.len(), self.rows);
+            }
+            let kmax = self.k as u32 - 1;
+            for (slot, &v) in idx.iter_mut().zip(out.iter()) {
+                *slot = (v.max(0) as u32).min(kmax);
+            }
+        }
+        let mut stats = self.rt.stats.borrow_mut();
+        stats.pjrt_calls += 1;
+        stats.pad_ratio_sum += (self.kcb * self.db) as f64 / (self.k * self.d) as f64;
+        stats.pad_ratio_count += 1;
+        Ok(())
+    }
+}
+
+impl AssignKernel for PjrtAssignPlan {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn assign_block(
+        &self,
+        x: &Mat,
+        lo: usize,
+        hi: usize,
+        cent: &Mat,
+        idx: &mut [u32],
+        d2: Option<&mut [f64]>,
+    ) -> bool {
+        if lo != self.lo || hi - lo != self.rows || x.cols != self.d {
+            self.rt.stats.borrow_mut().note_fallback(format!(
+                "assign: block [{lo},{hi}) does not match planned [{}, {})",
+                self.lo,
+                self.lo + self.rows
+            ));
+            return false;
+        }
+        match self.run(cent, idx) {
+            Ok(()) => {
+                // f64 backfill against the chosen index: inertia sums
+                // stay full-precision even on the f32 route
+                if let Some(out) = d2 {
+                    for (off, slot) in out.iter_mut().enumerate() {
+                        *slot = dist2(x, lo + off, cent, idx[off] as usize);
+                    }
+                }
+                true
+            }
+            Err(e) => {
+                self.rt
+                    .stats
+                    .borrow_mut()
+                    .note_fallback(format!("assign: {e:#}"));
+                false
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// One PJRT runtime per thread for the assign route (PjrtRuntime is
+    /// single-threaded by construction: Rc + RefCell internals). The
+    /// load error is cached too, so a missing artifacts directory costs
+    /// one probe, not one per Lloyd iteration.
+    static ASSIGN_RT: RefCell<Option<Result<Rc<PjrtRuntime>, String>>> = RefCell::new(None);
+}
+
+/// The calling thread's shared PJRT runtime for the assign route (also
+/// where `chebdav info` and the benches read assign-route stats from).
+/// Err carries the human-readable reason the route is unavailable.
+pub fn assign_runtime() -> Result<Rc<PjrtRuntime>, String> {
+    ASSIGN_RT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let dir = PjrtRuntime::artifacts_dir();
+            let loaded = if dir.join("manifest.tsv").exists() {
+                PjrtRuntime::load(&dir)
+                    .map(Rc::new)
+                    .map_err(|e| format!("{e:#}"))
+            } else {
+                Err(format!(
+                    "no artifacts at {} (run `make artifacts`)",
+                    dir.display()
+                ))
+            };
+            *slot = Some(loaded);
+        }
+        slot.as_ref().unwrap().clone()
+    })
+}
+
+fn warn_once(reason: &str) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        eprintln!(
+            "chebdav: pjrt assign route requested but unavailable: {reason}; using native assign"
+        );
+    });
+}
+
+/// Build an assignment plan for rows `[lo, hi)` of `x` with `k`
+/// centroids, or None (native fallback, counted with its reason when a
+/// runtime exists; warned once when none does).
+pub fn try_plan(x: &Mat, lo: usize, hi: usize, k: usize) -> Option<PjrtAssignPlan> {
+    let rt = match assign_runtime() {
+        Ok(rt) => rt,
+        Err(reason) => {
+            warn_once(&reason);
+            return None;
+        }
+    };
+    match PjrtAssignPlan::new(rt.clone(), x, lo, hi, k) {
+        Ok(plan) => Some(plan),
+        Err(e) => {
+            rt.stats
+                .borrow_mut()
+                .note_fallback(format!("assign plan: {e:#}"));
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::assign::NativeAssign;
+    use crate::util::Rng;
+
+    fn runtime() -> Option<Rc<PjrtRuntime>> {
+        let dir = PjrtRuntime::artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return None; // artifacts not built in this environment
+        }
+        // artifacts exist but the PJRT client may be unavailable (the
+        // stubbed xla bindings of the offline build) — skip, don't panic
+        PjrtRuntime::load(&dir).ok().map(Rc::new)
+    }
+
+    /// Well-separated blobs: inter-center gaps are orders of magnitude
+    /// above f32 rounding, so the f32 device argmin and the f64 native
+    /// argmin must agree *exactly* (the f32-tolerance contract only
+    /// bites on near-ties, which this layout excludes).
+    fn blobs(n: usize, d: usize, k: usize, rng: &mut Rng) -> Mat {
+        let mut x = Mat::zeros(n, d);
+        for i in 0..n {
+            let c = i % k;
+            for t in 0..d {
+                x[(i, t)] = ((c * (t + 1)) % k) as f64 * 10.0 + 0.5 * rng.normal();
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn pjrt_assign_matches_native_on_separated_blobs() {
+        let Some(rt) = runtime() else { return };
+        // off-bucket real shape: d=7 exercises column padding, k=5
+        // exercises CENTROID_PAD phantom rows
+        let (n, d, k) = (96usize, 7usize, 5usize);
+        if rt.manifest.find_kmeans_bucket(n, d, k).is_none() {
+            return; // no kmeans artifact in this catalogue
+        }
+        let mut rng = Rng::new(11);
+        let x = blobs(n, d, k, &mut rng);
+        let cent = blobs(k, d, k, &mut rng);
+        let plan = PjrtAssignPlan::new(rt.clone(), &x, 0, n, k).unwrap();
+        let mut got = vec![u32::MAX; n];
+        let mut d2 = vec![f64::NAN; n];
+        assert!(plan.assign_block(&x, 0, n, &cent, &mut got, Some(&mut d2)));
+        let mut want = vec![0u32; n];
+        NativeAssign.assign_block(&x, 0, n, &cent, &mut want, None);
+        assert_eq!(got, want);
+        // the d2 backfill is exact f64 for the chosen index
+        for (i, (&g, &dd)) in got.iter().zip(d2.iter()).enumerate() {
+            assert_eq!(dd.to_bits(), dist2(&x, i, &cent, g as usize).to_bits());
+        }
+        let stats = rt.stats.borrow();
+        assert!(stats.pjrt_calls >= 1);
+        assert_eq!(stats.native_fallbacks, 0);
+    }
+
+    #[test]
+    fn oversized_shapes_get_no_plan() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(12);
+        let x = Mat::randn(8, 3, &mut rng);
+        // more centroids than any bucket carries
+        assert!(PjrtAssignPlan::new(rt.clone(), &x, 0, 8, 100_000).is_err());
+        // degenerate block
+        assert!(PjrtAssignPlan::new(rt, &x, 4, 4, 2).is_err());
+    }
+
+    #[test]
+    fn mismatched_centroids_fall_back_loudly() {
+        let Some(rt) = runtime() else { return };
+        let (n, d, k) = (16usize, 4usize, 4usize);
+        if rt.manifest.find_kmeans_bucket(n, d, k).is_none() {
+            return;
+        }
+        let mut rng = Rng::new(13);
+        let x = Mat::randn(n, d, &mut rng);
+        let plan = PjrtAssignPlan::new(rt.clone(), &x, 0, n, k).unwrap();
+        // wrong centroid count for the plan -> refuse + count + reason
+        let cent = Mat::randn(k + 1, d, &mut rng);
+        let mut idx = vec![0u32; n];
+        assert!(!plan.assign_block(&x, 0, n, &cent, &mut idx, None));
+        let stats = rt.stats.borrow();
+        assert!(stats.native_fallbacks >= 1);
+        let reason = stats.fallback_reason.as_deref().unwrap_or("");
+        assert!(reason.starts_with("assign"), "reason: {reason:?}");
+    }
+}

@@ -98,6 +98,23 @@ impl Manifest {
             .filter(|e| e.kind == kind && e.n >= n && e.w >= w && e.k >= k && e.m == m)
             .min_by_key(|e| (e.n, e.w, e.k))
     }
+
+    /// Smallest `kmeans_assign` bucket fitting `n` points of dim `d`
+    /// with `kc` centroids. The kmeans kinds carry their shape in the
+    /// optional `d`/`kc` fields (the sparse n/w/k triple only fills n),
+    /// so this is a separate lookup rather than a `find_bucket` case.
+    /// Returns None when nothing fits (caller falls back, counted).
+    pub fn find_kmeans_bucket(&self, n: usize, d: usize, kc: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == "kmeans_assign"
+                    && e.n >= n
+                    && e.d.map_or(false, |ed| ed >= d)
+                    && e.kc.map_or(false, |ekc| ekc >= kc)
+            })
+            .min_by_key(|e| (e.n, e.d.unwrap_or(usize::MAX), e.kc.unwrap_or(usize::MAX)))
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +140,22 @@ mod tests {
         assert_eq!(m.find_bucket("spmm", 2000, 20, 10, None).unwrap().name, "c");
         assert!(m.find_bucket("spmm", 9000, 10, 8, None).is_none());
         assert!(m.find_bucket("spmm", 100, 64, 8, None).is_none());
+    }
+
+    #[test]
+    fn kmeans_bucket_selection() {
+        let text = "name=ka\tfile=ka\tkind=kmeans_assign\tn=4096\tw=0\tk=0\tkc=16\td=16\nname=kb\tfile=kb\tkind=kmeans_assign\tn=16384\tw=0\tk=0\tkc=64\td=32\nname=sp\tfile=sp\tkind=spmm\tn=4096\tw=16\tk=8\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.find_kmeans_bucket(1000, 8, 8).unwrap().name, "ka");
+        assert_eq!(m.find_kmeans_bucket(1000, 8, 32).unwrap().name, "kb");
+        assert_eq!(m.find_kmeans_bucket(8000, 16, 16).unwrap().name, "kb");
+        assert!(m.find_kmeans_bucket(20000, 8, 8).is_none());
+        assert!(m.find_kmeans_bucket(1000, 64, 8).is_none());
+        // spmm entries (no d/kc) never match the kmeans lookup
+        assert!(m
+            .find_kmeans_bucket(1000, 8, 8)
+            .map(|e| e.kind == "kmeans_assign")
+            .unwrap_or(false));
     }
 
     #[test]

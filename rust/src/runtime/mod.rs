@@ -5,8 +5,10 @@
 
 pub mod backend;
 pub mod client;
+pub mod cluster;
 pub mod manifest;
 
 pub use backend::PjrtOperator;
 pub use client::{PjrtRuntime, RuntimeStats};
+pub use cluster::{assign_runtime, try_plan, PjrtAssignPlan};
 pub use manifest::{Manifest, ManifestEntry};

@@ -1,0 +1,98 @@
+//! Integration over the PJRT-routed K-means assign path, end-to-end on
+//! an SBM pipeline. Skips cleanly (with a visible marker) when `make
+//! artifacts` has not run or the runtime cannot load.
+//!
+//! This binary holds exactly ONE test function on purpose: it flips the
+//! process-global assign route (`set_assign_route`), which would race
+//! against the bit-identity tests if it shared a test binary with them.
+//! Keep it that way.
+
+use dist_chebdav::cluster::{
+    adjusted_rand_index, row_normalize, set_assign_route, AssignRoute, KmeansOptions,
+};
+use dist_chebdav::dist::dist_kmeans;
+use dist_chebdav::eig::{bchdav, BchdavOptions};
+use dist_chebdav::graph::table2_matrix;
+use dist_chebdav::mpi_sim::{CostModel, Ledger};
+
+/// Native-route vs PJRT-route distributed K-means on the same SBM
+/// embedding at p ∈ {1, 4}. The PJRT route is f32 (NOT part of the
+/// bit-identity contract), so the check is agreement, not equality:
+/// near-tie rows may flip, everything else must match. Fallbacks must
+/// be counted and carry a reason string.
+#[test]
+fn pjrt_assign_route_matches_native_on_sbm_pipeline() {
+    // route knob mapping (safe to flip here: this binary has one test,
+    // so nothing races the global; unset means env-controlled, and the
+    // test env does not set CHEBDAV_ASSIGN)
+    use dist_chebdav::cluster::assign_route;
+    set_assign_route(None);
+    assert_eq!(assign_route(), AssignRoute::Native);
+    set_assign_route(Some(AssignRoute::Pjrt));
+    assert_eq!(assign_route(), AssignRoute::Pjrt);
+    set_assign_route(Some(AssignRoute::Native));
+    assert_eq!(assign_route(), AssignRoute::Native);
+    set_assign_route(None);
+
+    let art = match dist_chebdav::runtime::assign_runtime() {
+        Ok(art) => art,
+        Err(e) => {
+            eprintln!("[skip] pjrt assign runtime unavailable: {e}");
+            return;
+        }
+    };
+
+    // native eigensolver -> spectral embedding (shared by both routes)
+    let mat = table2_matrix("LBOLBSV", 4096, 3);
+    let truth = mat.labels.clone().unwrap();
+    let clusters = (*truth.iter().max().unwrap() + 1) as usize;
+    let opts = BchdavOptions::for_laplacian(16, 8, 11, 1e-3);
+    let res = bchdav(&mat.lap, &opts, None);
+    assert!(res.converged, "native eigensolver failed on the SBM input");
+    let k_got = res.eigenvalues.len().min(16);
+    let feats = row_normalize(&res.eigenvectors.cols_block(0, k_got));
+
+    if art.manifest.find_kmeans_bucket(feats.rows, feats.cols, clusters).is_none() {
+        eprintln!(
+            "[skip] no kmeans_assign bucket for n={} d={} kc={clusters}",
+            feats.rows, feats.cols
+        );
+        return;
+    }
+
+    let cost = CostModel::default();
+    let kopts = KmeansOptions::new(clusters);
+    for p in [1usize, 4] {
+        set_assign_route(Some(AssignRoute::Native));
+        let mut led = Ledger::new();
+        let native = dist_kmeans(&feats, &kopts, p, &cost, &mut led);
+
+        let calls_before = art.stats.borrow().pjrt_calls;
+        set_assign_route(Some(AssignRoute::Pjrt));
+        let mut led = Ledger::new();
+        let pjrt = dist_kmeans(&feats, &kopts, p, &cost, &mut led);
+        set_assign_route(None);
+
+        // f32 tolerance: the two label vectors must describe the same
+        // clustering up to near-tie flips
+        let ari = adjusted_rand_index(&native.assignments, &pjrt.assignments);
+        assert!(ari > 0.95, "p={p}: pjrt vs native route ARI {ari}");
+        let rel = (native.inertia - pjrt.inertia).abs() / native.inertia.max(1e-12);
+        assert!(
+            rel < 1e-2,
+            "p={p}: inertia diverged: {} vs {} (rel {rel})",
+            native.inertia,
+            pjrt.inertia
+        );
+
+        // the device path actually ran — or every miss was counted with
+        // a recorded reason (fallbacks are honest, never silent)
+        let stats = art.stats.borrow();
+        if stats.pjrt_calls == calls_before {
+            assert!(stats.native_fallbacks > 0, "p={p}: route ran nothing, fell back nowhere");
+        }
+        if stats.native_fallbacks > 0 {
+            assert!(stats.fallback_reason.is_some(), "p={p}: fallbacks counted without a reason");
+        }
+    }
+}

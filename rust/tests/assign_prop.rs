@@ -1,0 +1,159 @@
+//! Property tests for the K-means assign seam (`cluster::assign`):
+//! the row-tiled, fixed-width-unrolled `NativeAssign` kernel must be a
+//! *bit-identical* drop-in for the scalar nearest-centroid loop — same
+//! argmin indices, same f64 distances to the last bit — across every
+//! dimension (specialized and dynamic), cluster count, exact ties,
+//! dirty output buffers, and worker-thread budget.
+
+use dist_chebdav::cluster::{AssignKernel, NativeAssign};
+use dist_chebdav::linalg::Mat;
+use dist_chebdav::util::{configured_threads, set_threads, Rng};
+
+/// Scalar reference: per-row scan over centroids with ascending-d
+/// accumulation and the strict `<` tie-break — the historic inner loop
+/// the tiled kernel replaced.
+fn scalar_assign(x: &Mat, lo: usize, hi: usize, cent: &Mat) -> (Vec<u32>, Vec<f64>) {
+    let mut idx = Vec::with_capacity(hi - lo);
+    let mut d2 = Vec::with_capacity(hi - lo);
+    for i in lo..hi {
+        let mut best = 0u32;
+        let mut bd = f64::INFINITY;
+        for c in 0..cent.rows {
+            let dd: f64 = x
+                .row(i)
+                .iter()
+                .zip(cent.row(c).iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if dd < bd {
+                bd = dd;
+                best = c as u32;
+            }
+        }
+        idx.push(best);
+        d2.push(bd);
+    }
+    (idx, d2)
+}
+
+fn run_kernel(x: &Mat, lo: usize, hi: usize, cent: &Mat) -> (Vec<u32>, Vec<f64>) {
+    let mut idx = vec![0u32; hi - lo];
+    let mut d2 = vec![0.0f64; hi - lo];
+    assert!(NativeAssign.assign_block(x, lo, hi, cent, &mut idx, Some(&mut d2)));
+    (idx, d2)
+}
+
+fn assert_bit_equal(got: &(Vec<u32>, Vec<f64>), want: &(Vec<u32>, Vec<f64>), what: &str) {
+    assert_eq!(got.0, want.0, "{what}: index mismatch");
+    for (i, (g, w)) in got.1.iter().zip(want.1.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: d2[{i}] differs: {g} vs {w}");
+    }
+}
+
+/// Sweep d through every specialized width, both neighbours of each,
+/// and a spread of dynamic widths; k through degenerate and larger
+/// cluster counts. Full blocks and offset sub-blocks (odd and even row
+/// counts, so both the unrolled pairs and the scalar tail row run).
+#[test]
+fn tiled_matches_scalar_reference_across_widths() {
+    let n = 53usize;
+    let mut rng = Rng::new(7);
+    for d in 1usize..=17 {
+        for k in [1usize, 2, 3, 8, 16] {
+            let x = Mat::randn(n, d, &mut rng);
+            let cent = Mat::randn(k, d, &mut rng);
+            for (lo, hi) in [(0usize, n), (0, n - 1), (5, n - 3), (11, 12), (20, 20)] {
+                let want = scalar_assign(&x, lo, hi, &cent);
+                let got = run_kernel(&x, lo, hi, &cent);
+                assert_bit_equal(&got, &want, &format!("d={d} k={k} block=[{lo},{hi})"));
+            }
+        }
+    }
+}
+
+/// Exact ties must resolve to the lowest centroid index, matching the
+/// strict `<` update of the scalar loop: duplicated centroids, points
+/// sitting exactly on a centroid, and points exactly equidistant
+/// between two centroids. One specialized width and one dynamic width.
+#[test]
+fn exact_ties_pick_lowest_index() {
+    for d in [4usize, 5] {
+        // centroids: c0, c0 (dup), c1, c1 (dup), c0 (dup again)
+        let c0: Vec<f64> = (0..d).map(|j| j as f64).collect();
+        let c1: Vec<f64> = (0..d).map(|j| -(j as f64) - 1.0).collect();
+        let mut cdata = Vec::new();
+        for row in [&c0, &c0, &c1, &c1, &c0] {
+            cdata.extend_from_slice(row);
+        }
+        let cent = Mat::from_rows(5, d, cdata);
+        // points: on c0, on c1, and exactly midway between c0 and c1
+        let mid: Vec<f64> = c0.iter().zip(&c1).map(|(a, b)| (a + b) / 2.0).collect();
+        let mut xdata = Vec::new();
+        for row in [&c0, &c1, &mid] {
+            xdata.extend_from_slice(row);
+        }
+        let x = Mat::from_rows(3, d, xdata);
+        let want = scalar_assign(&x, 0, 3, &cent);
+        let got = run_kernel(&x, 0, 3, &cent);
+        assert_bit_equal(&got, &want, &format!("ties d={d}"));
+        // the scalar semantics themselves: first index of each dup group
+        assert_eq!(got.0[0], 0, "point on duplicated c0 must pick index 0");
+        assert_eq!(got.0[1], 2, "point on duplicated c1 must pick index 2");
+        // midway point: d2 to both groups is bit-equal, so strict `<`
+        // keeps the very first centroid
+        assert_eq!(got.0[2], 0, "equidistant point must keep the first centroid");
+    }
+}
+
+/// Output buffers are write-only scratch: the kernel must fully
+/// overwrite its [lo, hi) slice even when handed NaN/garbage-filled
+/// reused buffers, and must not touch anything outside the slice.
+#[test]
+fn nan_dirty_buffers_are_fully_overwritten() {
+    let n = 29usize;
+    let (lo, hi) = (4usize, 25usize);
+    let mut rng = Rng::new(11);
+    for d in [3usize, 8] {
+        let k = 6usize;
+        let x = Mat::randn(n, d, &mut rng);
+        let cent = Mat::randn(k, d, &mut rng);
+        let mut idx = vec![u32::MAX; n];
+        let mut d2 = vec![f64::NAN; n];
+        let ok =
+            NativeAssign.assign_block(&x, lo, hi, &cent, &mut idx[lo..hi], Some(&mut d2[lo..hi]));
+        assert!(ok);
+        for i in 0..n {
+            if (lo..hi).contains(&i) {
+                assert!((idx[i] as usize) < k, "idx[{i}] not overwritten (d={d})");
+                assert!(d2[i].is_finite(), "d2[{i}] not overwritten (d={d})");
+            } else {
+                assert_eq!(idx[i], u32::MAX, "idx[{i}] outside block was touched (d={d})");
+                assert!(d2[i].is_nan(), "d2[{i}] outside block was touched (d={d})");
+            }
+        }
+        let want = scalar_assign(&x, lo, hi, &cent);
+        assert_eq!(&idx[lo..hi], &want.0[..], "dirty-buffer run diverged (d={d})");
+    }
+}
+
+/// The assign kernel is sequential by design (tiling is per-row, not
+/// per-thread), so results must be bit-identical under every worker
+/// thread budget — the budget only affects other subsystems.
+#[test]
+fn bit_identical_across_thread_budgets() {
+    let n = 64usize;
+    let mut rng = Rng::new(13);
+    let x = Mat::randn(n, 16, &mut rng);
+    let cent = Mat::randn(8, 16, &mut rng);
+    let saved = configured_threads();
+    let mut baseline: Option<(Vec<u32>, Vec<f64>)> = None;
+    for t in [1usize, 2, 8] {
+        set_threads(t);
+        let got = run_kernel(&x, 0, n, &cent);
+        match &baseline {
+            None => baseline = Some(got),
+            Some(want) => assert_bit_equal(&got, want, &format!("threads={t}")),
+        }
+    }
+    set_threads(saved);
+}

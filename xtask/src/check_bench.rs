@@ -10,11 +10,21 @@
 //!              "speedup":3.0},...]}
 //! ```
 //!
+//! Two record shapes are accepted, dispatched per record: kernel-shaped
+//! (old-vs-new microbench rows as above, `BENCH_kernels.json`) and
+//! e2e-shaped (per-(matrix, p) pipeline breakdowns with the kmeans-tail
+//! fields, `BENCH_fig10.json`):
+//!
+//! ```json
+//! {"matrix":"LBOLBSV","p":4,"total":1.9,"eig":1.7,"embed":0.01,
+//!  "kmeans":0.19,"kmeans_frac":0.1,"ari":0.98}
+//! ```
+//!
 //! The checker validates shape, not values: required keys present with
 //! the right JSON types, `records` non-empty, `speedup` finite and
-//! positive. The crate set has no JSON parser (the in-tree `util::json`
-//! is writer-only), so a minimal recursive-descent parser lives here —
-//! xtask is the only consumer.
+//! positive, e2e timings finite and non-negative. The crate set has no
+//! JSON parser (the in-tree `util::json` is writer-only), so a minimal
+//! recursive-descent parser lives here — xtask is the only consumer.
 
 use std::path::Path;
 
@@ -275,17 +285,49 @@ fn check_record(v: &Value) -> Result<(), String> {
         return Err("'records' is empty".to_string());
     }
     for (i, r) in recs.iter().enumerate() {
-        r.get("kernel")
-            .and_then(Value::as_str)
-            .ok_or_else(|| format!("records[{i}]: missing or non-string 'kernel'"))?;
-        for key in ["k", "old_s", "new_s", "speedup"] {
-            r.get(key)
-                .and_then(Value::as_num)
-                .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
+        if r.get("kernel").is_some() {
+            check_kernel_record(i, r)?;
+        } else if r.get("p").is_some() {
+            check_e2e_record(i, r)?;
+        } else {
+            return Err(format!(
+                "records[{i}]: neither kernel- nor e2e-shaped (no 'kernel' or 'p' key)"
+            ));
         }
-        let sp = r.get("speedup").and_then(Value::as_num).unwrap();
-        if !sp.is_finite() || sp <= 0.0 {
-            return Err(format!("records[{i}]: speedup {sp} not finite-positive"));
+    }
+    Ok(())
+}
+
+/// Kernel-shaped record: one old-vs-new microbench row.
+fn check_kernel_record(i: usize, r: &Value) -> Result<(), String> {
+    r.get("kernel")
+        .and_then(Value::as_str)
+        .ok_or_else(|| format!("records[{i}]: missing or non-string 'kernel'"))?;
+    for key in ["k", "old_s", "new_s", "speedup"] {
+        r.get(key)
+            .and_then(Value::as_num)
+            .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
+    }
+    let sp = r.get("speedup").and_then(Value::as_num).unwrap();
+    if !sp.is_finite() || sp <= 0.0 {
+        return Err(format!("records[{i}]: speedup {sp} not finite-positive"));
+    }
+    Ok(())
+}
+
+/// E2e-shaped record: one per-(matrix, p) pipeline breakdown with the
+/// kmeans-tail fields (`kmeans`, `kmeans_frac`).
+fn check_e2e_record(i: usize, r: &Value) -> Result<(), String> {
+    r.get("matrix")
+        .and_then(Value::as_str)
+        .ok_or_else(|| format!("records[{i}]: missing or non-string 'matrix'"))?;
+    for key in ["p", "total", "eig", "embed", "kmeans", "kmeans_frac"] {
+        let x = r
+            .get(key)
+            .and_then(Value::as_num)
+            .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
+        if !x.is_finite() || x < 0.0 {
+            return Err(format!("records[{i}]: '{key}' = {x} not finite non-negative"));
         }
     }
     Ok(())
@@ -324,6 +366,13 @@ mod tests {
         r#"{"bench":"kernels","rev":"abc1234","unix_time":1720000000,"#,
         r#""config":{"n":8192,"threads":1,"full":false},"#,
         r#""records":[{"kernel":"spmm","k":8,"old_s":1.2e-3,"new_s":4.0e-4,"speedup":3.0}]}"#
+    );
+
+    const GOOD_E2E: &str = concat!(
+        r#"{"bench":"fig10","rev":"abc1234","unix_time":1720000000,"#,
+        r#""config":{"n":8192,"threads":4,"full":false},"#,
+        r#""records":[{"matrix":"LBOLBSV","p":4,"total":1.9,"eig":1.7,"embed":0.01,"#,
+        r#""kmeans":0.19,"kmeans_frac":0.1,"ari":0.98}]}"#
     );
 
     #[test]
@@ -370,6 +419,34 @@ mod tests {
         // non-positive speedup
         let zero = GOOD.replace(r#""speedup":3.0"#, r#""speedup":0.0"#);
         assert!(check_record(&parse(&zero).unwrap()).is_err());
+    }
+
+    #[test]
+    fn e2e_record_passes_and_violations_are_reported() {
+        assert!(check_record(&parse(GOOD_E2E).unwrap()).is_ok());
+        // optional 'ari' may be absent
+        let no_ari = GOOD_E2E.replace(r#","ari":0.98"#, "");
+        assert!(check_record(&parse(&no_ari).unwrap()).is_ok());
+        // drop each required per-record key in turn; dropping 'p' makes
+        // the record neither kernel- nor e2e-shaped, still an error
+        for (pat, repl) in [
+            (r#""matrix":"LBOLBSV","#, ""),
+            (r#""p":4,"#, ""),
+            (r#""total":1.9,"#, ""),
+            (r#""eig":1.7,"#, ""),
+            (r#""embed":0.01,"#, ""),
+            (r#""kmeans":0.19,"#, ""),
+            (r#""kmeans_frac":0.1,"#, ""),
+        ] {
+            let bad = GOOD_E2E.replace(pat, repl);
+            assert!(check_record(&parse(&bad).unwrap()).is_err(), "dropping {pat} accepted");
+        }
+        // negative timing
+        let neg = GOOD_E2E.replace(r#""kmeans":0.19"#, r#""kmeans":-0.19"#);
+        assert!(check_record(&parse(&neg).unwrap()).is_err());
+        // an e2e record must not satisfy the kernel schema by accident
+        let both = GOOD_E2E.replace(r#""matrix""#, r#""kernel""#);
+        assert!(check_record(&parse(&both).unwrap()).is_err());
     }
 
     #[test]
