@@ -7,11 +7,13 @@
 #                     tests and benches skip when artifacts are absent).
 #   make tier1      — the repository's tier-1 verification.
 #   make lint       — the repo-invariant lint pass (cargo xtask lint).
+#   make analyze    — the token-level structural pass (cargo xtask
+#                     analyze: rules R6-R9 + target/analyze/modgraph.dot).
 #   make loom       — model-check the worker-pool handoff protocol.
 
 ARTIFACT_DIR := rust/artifacts
 
-.PHONY: artifacts tier1 test build lint loom clean-artifacts
+.PHONY: artifacts tier1 test build lint analyze loom clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACT_DIR)
@@ -27,6 +29,9 @@ test:
 
 lint:
 	cargo xtask lint
+
+analyze:
+	cargo xtask analyze
 
 loom:
 	cargo test -q -p dist_chebdav --lib --features loom-tests

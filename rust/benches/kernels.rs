@@ -25,8 +25,7 @@ use dist_chebdav::eig::SpmmOp;
 use dist_chebdav::graph::table2_matrix;
 use dist_chebdav::linalg::Mat;
 use dist_chebdav::mpi_sim::{set_seq_ranks, CostModel, Ledger};
-use dist_chebdav::runtime::{PjrtAssignPlan, PjrtOperator, PjrtRuntime};
-use dist_chebdav::sparse::EllHyb;
+use dist_chebdav::runtime::{EllHyb, PjrtAssignPlan, PjrtOperator, PjrtRuntime};
 use dist_chebdav::util::{bench, Json, Rng};
 
 fn main() {

@@ -296,6 +296,7 @@ pub fn kmeans(x: &Mat, opts: &KmeansOptions) -> KmeansResult {
             }
         }
     }
+    // PANICS: restarts.max(1) >= 1 loop iterations always set `best`.
     best.unwrap()
 }
 

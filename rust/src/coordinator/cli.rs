@@ -182,6 +182,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .labels
         .as_ref()
         .context("graph has no ground-truth labels (use an SBM category)")?;
+    // PANICS: SBM labels are one per node and n >= 1, so max() is Some.
     let clusters = (*truth.iter().max().unwrap() + 1) as usize;
     let solver = Eigensolver::Bchdav {
         k_b: cfg.k_b,

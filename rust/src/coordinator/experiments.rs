@@ -10,11 +10,10 @@ use crate::graph::{table2_matrix, TestMatrix};
 use crate::mpi_sim::{CostModel, Ledger};
 use crate::sparse::avg_degree;
 
-/// Round a process count down to the nearest perfect square's root
-/// (the 2D grid wants q x q; the paper uses counts like 121 = 11^2).
-pub fn grid_side(p: usize) -> usize {
-    (1..=p).take_while(|q| q * q <= p).last().unwrap_or(1)
-}
+// Re-exported where the benches historically found it; the function
+// lives beside the Grid it parameterizes (layering rule R6: mpi_sim
+// must not reach up into coordinator, so grid helpers live in mpi_sim).
+pub use crate::mpi_sim::grid_side;
 
 /// Apply a config's `[run]` knobs to the process-global runtime: the
 /// worker-thread count for native kernels and the rank-parallel
@@ -58,6 +57,7 @@ pub fn quality_cell(
     repeats: usize,
 ) -> QualityRow {
     let truth = mat.labels.as_ref().expect("quality needs ground truth");
+    // PANICS: labels are one per node and n >= 1, so max() is Some.
     let clusters = (*truth.iter().max().unwrap() + 1) as usize;
     let mut ari_sum = 0.0;
     let mut nmi_sum = 0.0;
@@ -236,6 +236,7 @@ pub fn cluster_scaling(mat: &TestMatrix, cfg: &ExperimentConfig) -> Vec<E2eScali
     } else {
         mat.labels
             .as_ref()
+            // PANICS: labels are one per node and n >= 1, so max() is Some.
             .map(|t| (*t.iter().max().unwrap() + 1) as usize)
             .unwrap_or(cfg.k)
     };
@@ -328,6 +329,7 @@ pub fn vs_parsec(
             }
             impl crate::eig::SpmmOp for OneD<'_> {
                 fn n(&self) -> usize {
+                    // PANICS: row_partition always yields p >= 1 ranges.
                     self.ranges.last().unwrap().1
                 }
                 fn nnz(&self) -> usize {

@@ -43,7 +43,7 @@
 
 use super::bchdav::dist_bchdav;
 use super::matrix::DistMatrix;
-use super::{merge_partials, row_partition, rowwise_produce, rowwise_update};
+use super::{merge_partials, reduce_partials, row_partition, rowwise_produce, rowwise_update};
 use crate::cluster::assign::{assign_route, AssignKernel, AssignRoute, NativeAssign};
 use crate::cluster::kmeans::{
     dist2, finalize_centroids, normalize_row, sample_d2_index, KmeansOptions,
@@ -127,7 +127,7 @@ fn dist_seed_centroids(
     for c in 1..k {
         let parts: Vec<f64> =
             rowwise_produce(led, "kmeans", n, p, |lo, hi| d2[lo..hi].iter().sum::<f64>());
-        let total: f64 = parts.iter().sum();
+        let total = reduce_partials(parts.iter().copied());
         led.charge("kmeans", cost.allreduce(1, p));
         let pick = sample_d2_index(&d2, total, rng);
         cent.row_mut(c).copy_from_slice(x.row(pick));
@@ -282,20 +282,20 @@ fn dist_lloyd(
                         // moves. Stays a single ascending-i pass — tiling
                         // this accumulation would change the float-add
                         // order and break bit-identity.
-                        let mut partial = vec![0.0f64; k * (d + 1)];
+                        let mut sums = vec![0.0f64; k * (d + 1)];
                         for (off, i) in (lo..hi).enumerate() {
                             let best = local[off];
                             if assign[i] != best {
                                 changed = true;
                             }
                             let c = best as usize;
-                            partial[k * d + c] += 1.0;
-                            let dst = &mut partial[c * d..(c + 1) * d];
+                            sums[k * d + c] += 1.0;
+                            let dst = &mut sums[c * d..(c + 1) * d];
                             for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
                                 *s += v;
                             }
                         }
-                        (local, changed, partial)
+                        (local, changed, sums)
                     })
                 };
                 let mut changed = false;
@@ -323,20 +323,20 @@ fn dist_lloyd(
                     let fresh = &fresh;
                     rowwise_produce(led, "kmeans", n, p, |lo, hi| {
                         let mut changed = false;
-                        let mut partial = vec![0.0f64; k * (d + 1)];
+                        let mut sums = vec![0.0f64; k * (d + 1)];
                         for i in lo..hi {
                             let best = fresh[i];
                             if assign[i] != best {
                                 changed = true;
                             }
                             let c = best as usize;
-                            partial[k * d + c] += 1.0;
-                            let dst = &mut partial[c * d..(c + 1) * d];
+                            sums[k * d + c] += 1.0;
+                            let dst = &mut sums[c * d..(c + 1) * d];
                             for (s, &v) in dst.iter_mut().zip(x.row(i).iter()) {
                                 *s += v;
                             }
                         }
-                        (changed, partial)
+                        (changed, sums)
                     })
                 };
                 let mut changed = false;
@@ -377,14 +377,12 @@ fn dist_lloyd(
                     (local, inertia)
                 })
             };
-            let mut inertia = 0.0;
             let mut off = 0;
-            for (local, li) in parts {
-                assign[off..off + local.len()].copy_from_slice(&local);
+            for (local, _) in &parts {
+                assign[off..off + local.len()].copy_from_slice(local);
                 off += local.len();
-                inertia += li;
             }
-            inertia
+            reduce_partials(parts.iter().map(|(_, li)| *li))
         }
         DistAssignEngine::Pjrt {
             plans,
@@ -408,11 +406,7 @@ fn dist_lloyd(
                 rowwise_produce(led, "kmeans", n, p, |lo, hi| d2buf[lo..hi].iter().sum::<f64>())
             };
             assign.copy_from_slice(&fresh);
-            let mut inertia = 0.0;
-            for li in parts {
-                inertia += li;
-            }
-            inertia
+            reduce_partials(parts)
         }
     };
     led.charge("kmeans", cost.allreduce(1, p));
@@ -442,6 +436,7 @@ pub fn dist_kmeans(
             best = Some(run);
         }
     }
+    // PANICS: restarts.max(1) >= 1 loop iterations always set `best`.
     let (assignments, centroids, inertia, iterations) = best.unwrap();
     DistKmeansResult {
         assignments,

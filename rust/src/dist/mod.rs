@@ -113,6 +113,20 @@ pub(crate) fn merge_partials(acc: &mut [f64], parts: &[Vec<f64>]) {
     }
 }
 
+/// Scalar twin of [`merge_partials`]: fold per-rank scalar partials in
+/// ascending rank order, starting from 0.0 — bit-identical to the
+/// `iter().sum()` folds it replaces. Rule R7 funnels every float
+/// reduction over rank-indexed data through these two functions (plus
+/// the structured 2D merges in `spmm.rs`) so the fixed-order argument
+/// lives in one place instead of at every call site.
+pub(crate) fn reduce_partials(parts: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = 0.0;
+    for p in parts {
+        acc += p;
+    }
+    acc
+}
+
 /// Row-partitioned *in-place* superstep over a row-major buffer of
 /// `rows` rows with `stride` values per row: rank r updates exactly its
 /// own `[lo, hi)` row block, handed to the body as the mutable slice

@@ -8,7 +8,7 @@
 //! versus TSQR's O(log p) — the non-scaling orthonormalization the paper
 //! benchmarks against in Fig. 9.
 
-use super::{merge_partials, rowwise_produce, rowwise_update};
+use super::{merge_partials, reduce_partials, rowwise_produce, rowwise_update};
 use crate::linalg::Mat;
 use crate::mpi_sim::{CostModel, Ledger};
 
@@ -155,7 +155,7 @@ pub fn dgks_orthonormalize(
             }
             acc
         });
-        let nrm2: f64 = partial_nrm2.iter().sum();
+        let nrm2 = reduce_partials(partial_nrm2.iter().copied());
         led.charge(comp, cost.allreduce(1, p));
         let nrm = nrm2.sqrt();
         if nrm > 1e-300 {

@@ -59,6 +59,7 @@ pub fn tsqr(
             (qa.vcat(&qb), r)
         });
         let carry = if qs.len() % 2 == 1 {
+            // PANICS: len % 2 == 1 means the vectors are non-empty.
             Some((qs.pop().unwrap(), rs.pop().unwrap()))
         } else {
             None
@@ -84,6 +85,8 @@ pub fn tsqr(
         }
     }
 
+    // PANICS: the butterfly halves a non-empty list until exactly one
+    // (Q, R) pair remains — the loop invariant the reduction maintains.
     (qs.pop().unwrap(), rs.pop().unwrap())
 }
 

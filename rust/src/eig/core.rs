@@ -161,6 +161,7 @@ pub fn davidson_core<B: DavidsonBackend>(
         |block: &mut Mat, k_i: usize, count: usize, rng: &mut Rng, v_init: Option<&Mat>| {
             for c in 0..count {
                 if k_i + c < k_init {
+                    // PANICS: k_init > 0 here, so v_init is Some.
                     let col = v_init.unwrap().col(k_i + c);
                     block.set_col(c, &col);
                 } else {
@@ -299,7 +300,11 @@ pub fn davidson_core<B: DavidsonBackend>(
             }
         }
 
-        if std::env::var("BCHDAV_DEBUG").is_ok() && iterations <= 40 {
+        // CHEBDAV_DEBUG is the documented name; BCHDAV_DEBUG is read as
+        // a fallback for one release (see README run-control knobs).
+        if (std::env::var("CHEBDAV_DEBUG").is_ok() || std::env::var("BCHDAV_DEBUG").is_ok())
+            && iterations <= 40
+        {
             let vnorm = v.col_norm(k_c);
             eprintln!(
                 "it={iterations} k_c={k_c} k_act={k_act} k_sub={k_sub} cut={low_nwb:.4} e_c={e_c} ritz[..3]={:?} vcol_norm={vnorm:.3e}",
@@ -368,7 +373,7 @@ pub fn davidson_core<B: DavidsonBackend>(
         // Step 18: move the cut to the median of non-converged Ritz values.
         if !ritz.is_empty() {
             let mut sorted = ritz.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.sort_by(|a, b| a.total_cmp(b));
             let med = sorted[sorted.len() / 2];
             if med > lowb && med < upperb {
                 low_nwb = med;
@@ -378,7 +383,7 @@ pub fn davidson_core<B: DavidsonBackend>(
 
     // Sort locked pairs ascending (deflation locked them in batches).
     let mut idx: Vec<usize> = (0..k_c).collect();
-    idx.sort_by(|&i, &j| eval[i].partial_cmp(&eval[j]).unwrap());
+    idx.sort_by(|&i, &j| eval[i].total_cmp(&eval[j]));
     let mut out_vals = Vec::with_capacity(k_c);
     let mut out_vecs = Mat::zeros(n, k_c);
     for (newj, &oldj) in idx.iter().enumerate() {

@@ -201,7 +201,7 @@ pub fn lanczos_smallest<Op: SpmmOp + ?Sized>(a: &Op, opts: &LanczosOptions) -> L
     // within batches; sort to be safe)
     let k_out = k_c.min(opts.k_want.max(k_c));
     let mut idx: Vec<usize> = (0..k_out).collect();
-    idx.sort_by(|&i, &j| eigenvalues[i].partial_cmp(&eigenvalues[j]).unwrap());
+    idx.sort_by(|&i, &j| eigenvalues[i].total_cmp(&eigenvalues[j]));
     let mut vals = Vec::with_capacity(k_out);
     let mut vecs = Mat::zeros(n, k_out);
     for (newj, &oldj) in idx.iter().enumerate() {

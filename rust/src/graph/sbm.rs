@@ -96,6 +96,7 @@ pub struct SbmGraph {
 /// Sample block sizes: equal (LBSV) or power-law (HBSV), always summing
 /// to exactly n with every block non-empty.
 fn block_sizes(n: usize, blocks: usize, var: SizeVariation, rng: &mut Rng) -> Vec<usize> {
+    assert!(blocks >= 1, "SBM needs at least one block");
     match var {
         SizeVariation::Low => {
             let base = n / blocks;
@@ -119,12 +120,14 @@ fn block_sizes(n: usize, blocks: usize, var: SizeVariation, rng: &mut Rng) -> Ve
                 .collect();
             // fix rounding drift onto the largest block
             let sum: usize = sizes.iter().sum();
+            // PANICS: blocks >= 1 (asserted above), so max_by_key is Some.
             let argmax = (0..blocks).max_by_key(|&b| sizes[b]).unwrap();
             if sum < n {
                 sizes[argmax] += n - sum;
             } else {
                 let mut excess = sum - n;
                 while excess > 0 {
+                    // PANICS: blocks >= 1, so max_by_key is Some.
                     let b = (0..blocks).max_by_key(|&b| sizes[b]).unwrap();
                     let take = excess.min(sizes[b] - 1);
                     sizes[b] -= take;

@@ -30,7 +30,7 @@ pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
 
     // Sort ascending, permuting eigenvector columns along.
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    idx.sort_by(|&i, &j| d[i].total_cmp(&d[j]));
     let vals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
     let mut vecs = Mat::zeros(n, n);
     for (newj, &oldj) in idx.iter().enumerate() {
@@ -278,7 +278,7 @@ mod tests {
         let a = matmul(&qd, &q.transpose());
         let (vals, _) = eigh(&a);
         let mut sorted = planted.clone();
-        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sorted.sort_by(|x, y| x.total_cmp(y));
         for (got, want) in vals.iter().zip(sorted.iter()) {
             assert!((got - want).abs() < 1e-8, "{got} vs {want}");
         }

@@ -146,10 +146,6 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
-    pub fn to_f32(&self) -> Vec<f32> {
-        self.data.iter().map(|&x| x as f32).collect()
-    }
-
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
         assert_eq!(data.len(), rows * cols);
         Mat {

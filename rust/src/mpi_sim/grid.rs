@@ -10,6 +10,12 @@
 
 use crate::sparse::split_ranges;
 
+/// Round a process count down to the nearest perfect square's root
+/// (the 2D grid wants q x q; the paper uses counts like 121 = 11^2).
+pub fn grid_side(p: usize) -> usize {
+    (1..=p).take_while(|q| q * q <= p).last().unwrap_or(1)
+}
+
 /// The q x q process grid and its nested 1D dense-panel partition.
 #[derive(Clone, Debug)]
 pub struct Grid {
@@ -154,7 +160,6 @@ mod tests {
 
     #[test]
     fn grid_side_rounds_non_squares_down() {
-        use crate::coordinator::grid_side;
         // the benches feed arbitrary (non-square) process counts; the
         // grid wants the largest q with q^2 <= p
         for (p, want) in [(2usize, 1usize), (5, 2), (120, 10), (577, 24), (1024, 32)] {

@@ -32,5 +32,5 @@ pub mod ledger;
 
 pub use cost::{Charge, CostModel};
 pub use exec::{seq_ranks, set_seq_ranks};
-pub use grid::Grid;
+pub use grid::{grid_side, Grid};
 pub use ledger::Ledger;

@@ -20,7 +20,8 @@ use super::client::PjrtRuntime;
 use super::manifest::ManifestEntry;
 use crate::eig::SpmmOp;
 use crate::linalg::Mat;
-use crate::sparse::{Csr, EllHyb};
+use super::ell::EllHyb;
+use crate::sparse::Csr;
 use anyhow::{Context, Result};
 use std::rc::Rc;
 

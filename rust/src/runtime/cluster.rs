@@ -242,6 +242,7 @@ pub fn assign_runtime() -> Result<Rc<PjrtRuntime>, String> {
             };
             *slot = Some(loaded);
         }
+        // PANICS: the branch above just filled the empty slot.
         slot.as_ref().unwrap().clone()
     })
 }

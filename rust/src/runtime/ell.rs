@@ -1,5 +1,10 @@
 //! ELL / HYB storage: the PJRT-artifact format for the SpMM hot path.
 //!
+//! Lives under `runtime/` (not `sparse/`) deliberately: the f32 planes
+//! are the *device* precision contract, and rule R7 confines `as f32`
+//! narrowing casts to the runtime layer so the native f64 pipeline's
+//! bit-identity claims cannot silently route through a lossy cast.
+//!
 //! The Pallas kernel (python/compile/kernels/spmm_ell.py) consumes fixed
 //! (rows x width) value/column planes. Real graphs are heavy-tailed, so
 //! padding every row to the max degree would explode memory (MAWI-like
@@ -9,8 +14,8 @@
 //! the coordinator. `width` is chosen per-matrix as a high percentile of
 //! the degree distribution so the tail stays tiny.
 
-use super::Csr;
 use crate::linalg::Mat;
+use crate::sparse::Csr;
 
 #[derive(Clone, Debug)]
 pub struct EllHyb {

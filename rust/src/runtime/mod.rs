@@ -6,9 +6,11 @@
 pub mod backend;
 pub mod client;
 pub mod cluster;
+pub mod ell;
 pub mod manifest;
 
 pub use backend::PjrtOperator;
 pub use client::{PjrtRuntime, RuntimeStats};
 pub use cluster::{assign_runtime, try_plan, PjrtAssignPlan};
+pub use ell::EllHyb;
 pub use manifest::{Manifest, ManifestEntry};

@@ -37,6 +37,8 @@ impl Csr {
                 // same row (indptr not yet finalized: we track counts below)
                 if lc == c && indptr[r as usize + 1] == indices.len() {
                     // duplicate within the current row: sum
+                    // PANICS: indices.last() was Some, and values grows in
+                    // lockstep with indices.
                     *values.last_mut().unwrap() += v;
                     continue;
                 }

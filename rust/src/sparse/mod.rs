@@ -3,11 +3,9 @@
 //! Laplacian construction.
 
 pub mod csr;
-pub mod ell;
 pub mod laplacian;
 pub mod partition;
 
 pub use csr::Csr;
-pub use ell::EllHyb;
 pub use laplacian::{avg_degree, normalized_laplacian};
 pub use partition::{split_ranges, u_block_of, v_block_of, Partition1D, Partition2D};

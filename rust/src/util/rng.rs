@@ -116,7 +116,7 @@ impl Rng {
     pub fn weighted(&mut self, cumweights: &[f64]) -> usize {
         let total = *cumweights.last().expect("non-empty weights");
         let x = self.f64() * total;
-        match cumweights.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+        match cumweights.binary_search_by(|c| c.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cumweights.len() - 1),
             Err(i) => i.min(cumweights.len() - 1),
         }

@@ -150,7 +150,7 @@ impl ComponentTimers {
             .iter()
             .map(|(&k, &v)| (k, v, 100.0 * v / total))
             .collect();
-        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
         rows
     }
 

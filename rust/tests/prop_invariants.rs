@@ -10,7 +10,8 @@ use dist_chebdav::dist::{spmm_1p5d, tsqr, DistMatrix};
 use dist_chebdav::eig::filter_scalar;
 use dist_chebdav::linalg::{ortho_error, qr_residual, qr_thin, Mat};
 use dist_chebdav::mpi_sim::{CostModel, Grid, Ledger};
-use dist_chebdav::sparse::{normalized_laplacian, split_ranges, Csr, EllHyb};
+use dist_chebdav::runtime::EllHyb;
+use dist_chebdav::sparse::{normalized_laplacian, split_ranges, Csr};
 use dist_chebdav::util::Rng;
 
 fn random_laplacian(rng: &mut Rng, n: usize, density: f64) -> Csr {

@@ -1,0 +1,957 @@
+//! `cargo xtask analyze` — token-level static analysis (rules R6-R9)
+//! over the lexer in `lexer.rs`. Where `lint.rs` guards line-local
+//! invariants (R1-R5), this pass checks *structural* properties of the
+//! tree:
+//!
+//! * **R6 layering** — the `use crate::...` / path-qualified module
+//!   dependency graph of `rust/src` must match the declared DAG in
+//!   [`LAYERS`]: `util`/`linalg`/`sparse` at the bottom, `eig` never
+//!   importing `dist`, `mpi_sim` never importing `coordinator`, and
+//!   `runtime` reachable from below only through the declared
+//!   `SpmmOp`/`AssignKernel` seam files ([`RUNTIME_SEAM_FILES`]). The
+//!   observed graph (minus seam edges) must also be acyclic. The graph
+//!   is emitted as `target/analyze/modgraph.dot` (a CI artifact).
+//! * **R7 float determinism** — on the R4 determinism paths: (a) float
+//!   reductions over rank-indexed data (`/part/`-named values, the repo
+//!   naming convention for per-rank collections) must go through
+//!   `merge_partials`/`reduce_partials` in `dist/mod.rs` or the
+//!   structured 2D merges in `dist/spmm.rs` ([`R7_SITE_FNS`]) — the
+//!   fixed ascending-rank order argument lives there, not at call
+//!   sites; integer bookkeeping (`off += local.len()`, `i += 1`) is
+//!   recognized and skipped (an under-approximation, documented in
+//!   DESIGN.md); (b) `as f32` casts stay inside `runtime/` (the device
+//!   precision boundary); (c) float comparators use `total_cmp`, not
+//!   `partial_cmp` (total order, no unwrap on NaN).
+//! * **R8 knob registry** — every `std::env::var*("LITERAL")` in the
+//!   scanned tree must appear in README's `## Run-control knobs` table;
+//!   an undocumented knob is an invisible behavior switch.
+//! * **R9 panic surface** — on library (non-test) paths, bare
+//!   `.unwrap()`, `.expect(non-literal)` and message-less `panic!` need
+//!   a `// PANICS:` comment within the same 8-line window R1 uses for
+//!   SAFETY; `.expect("message")` and `panic!("message")` are
+//!   self-justifying; `todo!`/`unimplemented!` are always violations.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{has_word, is_ident_cont, CodeView, Tok, TokKind};
+use crate::lint::{collect_rs, map_scope, Violation, SAFETY_WINDOW};
+
+/// Declared module layering of `rust/src`: module -> modules it may
+/// import. This *is* the architecture document the code must match;
+/// loosening it is a reviewed decision, not a lint fix (see DESIGN.md
+/// §Verification for the rationale per layer).
+pub const LAYERS: &[(&str, &[&str])] = &[
+    ("util", &[]),
+    ("linalg", &["util"]),
+    ("sparse", &["util", "linalg"]),
+    ("graph", &["util", "sparse"]),
+    ("config", &["util", "mpi_sim"]),
+    ("mpi_sim", &["util", "sparse"]),
+    ("eig", &["util", "linalg", "sparse"]),
+    ("cluster", &["util", "linalg", "sparse", "graph", "eig"]),
+    ("runtime", &["util", "linalg", "sparse", "eig", "cluster"]),
+    ("dist", &["util", "linalg", "sparse", "graph", "mpi_sim", "eig", "cluster"]),
+    (
+        "coordinator",
+        &[
+            "util", "linalg", "sparse", "graph", "config", "mpi_sim", "eig", "cluster", "runtime",
+            "dist",
+        ],
+    ),
+];
+
+/// Files below the `runtime` layer allowed to import it: the
+/// `SpmmOp`/`AssignKernel` seam crossings where the device route is
+/// injected. These edges form the one declared cluster <-> runtime
+/// trait-injection cycle and are excluded from the acyclicity check.
+pub const RUNTIME_SEAM_FILES: &[&str] = &[
+    "rust/src/cluster/kmeans.rs",
+    "rust/src/cluster/assign.rs",
+    "rust/src/dist/cluster.rs",
+];
+
+/// Functions every float reduction over rank-indexed data must route
+/// through (R7a): the flat ascending-rank merges in `dist/mod.rs`.
+const R7_REDUCE_FNS: &[&str] = &["merge_partials", "reduce_partials"];
+
+/// Structured (file, fn) merge sites that cannot use the flat helpers:
+/// the ascending-rank 2D accumulations inside the SpMM merge phases.
+const R7_SITE_FNS: &[(&str, &str)] =
+    &[("rust/src/dist/spmm.rs", "spmm_1d"), ("rust/src/dist/spmm.rs", "spmm_1p5d_into")];
+
+/// One observed module-dependency edge: (from, to, via-seam-file).
+pub type Edge = (String, String, bool);
+
+fn allowed_deps(module: &str) -> Option<&'static [&'static str]> {
+    LAYERS.iter().find(|(m, _)| *m == module).map(|(_, deps)| *deps)
+}
+
+/// R7/R9 scope: library sources (`rust/src`), excluding dedicated test
+/// files; trailing test regions are excluded line-wise by the caller.
+fn lib_scope(path: &str) -> bool {
+    path.starts_with("rust/src/") && !path.ends_with("_tests.rs")
+}
+
+/// A maximal identifier word that is all-lowercase and contains `part`
+/// — the repo naming convention for rank-indexed values (`parts`,
+/// `partial_dots`, `sum_parts`, ...).
+fn mentions_part(line: &str) -> bool {
+    line.split(|c: char| !is_ident_cont(c)).any(|w| {
+        w.contains("part")
+            && w.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// `.sum` / `.fold(` / `.product` at an identifier boundary.
+fn has_reduce_call(line: &str) -> bool {
+    fn bounded(line: &str, pat: &str) -> bool {
+        let mut s = 0usize;
+        while let Some(p) = line[s..].find(pat) {
+            let after = s + p + pat.len();
+            if line[after..].chars().next().map(|c| !is_ident_cont(c)).unwrap_or(true) {
+                return true;
+            }
+            s = after;
+        }
+        false
+    }
+    bounded(line, ".sum") || line.contains(".fold(") || bounded(line, ".product")
+}
+
+/// Integer bookkeeping accumulation: `+= 1` (before `;`/`,`/`)`) or
+/// `+= ident.len()`. These are offsets and counters, not float merges.
+fn int_accum_idiom(line: &str) -> bool {
+    let cs: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    while i + 1 < cs.len() {
+        if cs[i] == '+' && cs[i + 1] == '=' {
+            let mut k = i + 2;
+            while k < cs.len() && (cs[k] == ' ' || cs[k] == '\t') {
+                k += 1;
+            }
+            if k < cs.len() && cs[k] == '1' {
+                let mut m = k + 1;
+                while m < cs.len() && (cs[m] == ' ' || cs[m] == '\t') {
+                    m += 1;
+                }
+                if m < cs.len() && matches!(cs[m], ';' | ',' | ')') {
+                    return true;
+                }
+            } else if k < cs.len() && (cs[k].is_ascii_lowercase() || cs[k] == '_') {
+                let mut m = k + 1;
+                while m < cs.len()
+                    && (cs[m].is_ascii_lowercase() || cs[m].is_ascii_digit() || cs[m] == '_')
+                {
+                    m += 1;
+                }
+                if cs[m..].starts_with(&['.', 'l', 'e', 'n', '(', ')']) {
+                    return true;
+                }
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// `as f32` at identifier boundaries (with whitespace between).
+fn casts_to_f32(line: &str) -> bool {
+    let cs: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    while i + 1 < cs.len() {
+        let boundary_before = i == 0 || !is_ident_cont(cs[i - 1]);
+        if boundary_before && cs[i] == 'a' && cs[i + 1] == 's' {
+            let mut k = i + 2;
+            let mut ws = 0usize;
+            while k < cs.len() && (cs[k] == ' ' || cs[k] == '\t') {
+                ws += 1;
+                k += 1;
+            }
+            if ws > 0
+                && cs[k..].starts_with(&['f', '3', '2'])
+                && cs.get(k + 3).map(|&c| !is_ident_cont(c)).unwrap_or(true)
+            {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+fn viol(out: &mut Vec<Violation>, file: &str, line0: usize, rule: &'static str, message: String) {
+    out.push(Violation { file: file.to_string(), line: line0 + 1, rule, message });
+}
+
+/// Analyze one file. `rel` is the repo-relative path with forward
+/// slashes; `knobs` is the README knob registry; observed R6 edges are
+/// appended to `edges`.
+pub fn analyze_file(
+    rel: &str,
+    src: &str,
+    knobs: &BTreeSet<String>,
+    edges: &mut BTreeSet<Edge>,
+) -> Vec<Violation> {
+    let view = CodeView::new(src);
+    let mut out = Vec::new();
+    let tests_from = view.test_region_start();
+
+    // ---- R6: module dependency edges (rust/src only, tests included —
+    // a test that reaches across layers is still a layering hole) ----
+    let this_mod = rel
+        .strip_prefix("rust/src/")
+        .and_then(|rest| rest.find('/').map(|p| &rest[..p]));
+    if let Some(m) = this_mod {
+        if allowed_deps(m).is_none() {
+            viol(
+                &mut out,
+                rel,
+                0,
+                "R6",
+                format!(
+                    "module `{m}` is not declared in the layering table \
+                     (LAYERS in xtask/src/analyze.rs); new top-level modules \
+                     must state their allowed imports there"
+                ),
+            );
+        }
+    }
+    let this_mod = this_mod.filter(|m| allowed_deps(m).is_some());
+    if let Some(this_mod) = this_mod {
+        let toks = &view.tokens;
+        let is_punct = |t: &Tok, p: &str| t.kind == TokKind::Punct && t.text == p;
+        for (k, t) in toks.iter().enumerate() {
+            let is_crate_path = t.kind == TokKind::Ident
+                && t.text == "crate"
+                && toks.get(k + 1).map(|x| is_punct(x, ":")).unwrap_or(false)
+                && toks.get(k + 2).map(|x| is_punct(x, ":")).unwrap_or(false);
+            if !is_crate_path {
+                continue;
+            }
+            let mut targets: Vec<(&str, usize)> = Vec::new();
+            match toks.get(k + 3) {
+                Some(nxt) if nxt.kind == TokKind::Ident => {
+                    targets.push((nxt.text.as_str(), nxt.line))
+                }
+                Some(nxt) if is_punct(nxt, "{") => {
+                    // use crate::{a::..., b::...}: first ident of each
+                    // depth-1 comma-separated item
+                    let mut depth = 1usize;
+                    let mut j = k + 4;
+                    let mut expect = true;
+                    while j < toks.len() && depth > 0 {
+                        let tt = &toks[j];
+                        if is_punct(tt, "{") {
+                            depth += 1;
+                        } else if is_punct(tt, "}") {
+                            depth -= 1;
+                        } else if depth == 1 && is_punct(tt, ",") {
+                            expect = true;
+                        } else if depth == 1 && expect && tt.kind == TokKind::Ident {
+                            targets.push((tt.text.as_str(), tt.line));
+                            expect = false;
+                        }
+                        j += 1;
+                    }
+                }
+                _ => {}
+            }
+            for (dep, line0) in targets {
+                if dep == this_mod || allowed_deps(dep).is_none() {
+                    continue;
+                }
+                let seam = dep == "runtime" && RUNTIME_SEAM_FILES.contains(&rel);
+                edges.insert((this_mod.to_string(), dep.to_string(), seam));
+                let allowed = allowed_deps(this_mod).map(|d| d.contains(&dep)).unwrap_or(false);
+                if !allowed && !seam {
+                    viol(
+                        &mut out,
+                        rel,
+                        line0,
+                        "R6",
+                        format!(
+                            "layering: `{this_mod}` must not import `{dep}` (declared DAG in \
+                             xtask/src/analyze.rs; DESIGN.md §Verification has the rationale)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- R7: float determinism ----
+    if lib_scope(rel) {
+        let in_scope = map_scope(rel);
+        let fns = view.enclosing_fns();
+        let mut part_for_depth: Option<i64> = None;
+        let mut brace_depth: i64 = 0;
+        for (idx, line) in view.code.iter().enumerate() {
+            if idx >= tests_from {
+                break;
+            }
+            let fn_name = fns[idx].as_deref();
+            let whitelisted = fn_name
+                .map(|f| R7_REDUCE_FNS.contains(&f) || R7_SITE_FNS.contains(&(rel, f)))
+                .unwrap_or(false);
+            if in_scope && !whitelisted {
+                let part = mentions_part(line);
+                let int_idiom = int_accum_idiom(line);
+                let reduces = has_reduce_call(line) || (line.contains("+=") && !int_idiom);
+                if part && reduces {
+                    viol(
+                        &mut out,
+                        rel,
+                        idx,
+                        "R7",
+                        "float reduction over rank-indexed data outside \
+                         merge_partials/reduce_partials (dist/mod.rs); the fixed \
+                         ascending-rank order argument must live there"
+                            .to_string(),
+                    );
+                }
+                if has_word(line, "for") && part && part_for_depth.is_none() {
+                    part_for_depth = Some(brace_depth);
+                } else if part_for_depth.map(|d| brace_depth > d).unwrap_or(false)
+                    && line.contains("+=")
+                    && !part
+                    && !int_idiom
+                {
+                    viol(
+                        &mut out,
+                        rel,
+                        idx,
+                        "R7",
+                        "accumulation inside a loop over rank-indexed data outside \
+                         merge_partials/reduce_partials (dist/mod.rs)"
+                            .to_string(),
+                    );
+                }
+            }
+            brace_depth += line.matches('{').count() as i64 - line.matches('}').count() as i64;
+            if part_for_depth.map(|d| brace_depth <= d).unwrap_or(false) {
+                part_for_depth = None;
+            }
+            // R7c: float comparators
+            if in_scope && line.contains("partial_cmp") {
+                viol(
+                    &mut out,
+                    rel,
+                    idx,
+                    "R7",
+                    "float comparator uses partial_cmp; use total_cmp (total order, \
+                     no unwrap on NaN, deterministic on every input)"
+                        .to_string(),
+                );
+            }
+            // R7b: f32 casts stay behind the device boundary
+            if !rel.starts_with("rust/src/runtime/") && casts_to_f32(line) {
+                viol(
+                    &mut out,
+                    rel,
+                    idx,
+                    "R7",
+                    "`as f32` outside runtime/ — device-precision casts live behind \
+                     the PJRT boundary so f64 semantics stay uniform elsewhere"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // ---- R8: env knob registry ----
+    {
+        let toks = &view.tokens;
+        let is_punct = |t: &Tok, p: &str| t.kind == TokKind::Punct && t.text == p;
+        for (k, t) in toks.iter().enumerate() {
+            let is_env_var = t.kind == TokKind::Ident
+                && (t.text == "var" || t.text == "var_os")
+                && k >= 3
+                && is_punct(&toks[k - 1], ":")
+                && is_punct(&toks[k - 2], ":")
+                && toks[k - 3].kind == TokKind::Ident
+                && toks[k - 3].text == "env"
+                && toks.get(k + 1).map(|x| is_punct(x, "(")).unwrap_or(false)
+                && toks.get(k + 2).map(|x| x.kind == TokKind::Str).unwrap_or(false);
+            if is_env_var {
+                let knob = &toks[k + 2];
+                if !knobs.contains(&knob.text) {
+                    viol(
+                        &mut out,
+                        rel,
+                        knob.line,
+                        "R8",
+                        format!(
+                            "env knob {:?} is not documented in README's \
+                             `## Run-control knobs` table; every behavior switch \
+                             must be discoverable there",
+                            knob.text
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- R9: panic surface ----
+    if lib_scope(rel) {
+        let toks = &view.tokens;
+        for (k, t) in toks.iter().enumerate() {
+            if t.line >= tests_from || t.kind != TokKind::Ident {
+                continue;
+            }
+            let idx = t.line;
+            let justified = || {
+                let lo = idx.saturating_sub(SAFETY_WINDOW);
+                view.comments[lo..=idx.min(view.comments.len() - 1)]
+                    .iter()
+                    .any(|c| c.contains("PANICS:"))
+            };
+            let tx = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+            let kd = |j: usize| toks.get(j).map(|t| t.kind);
+            if (t.text == "todo" || t.text == "unimplemented") && tx(k + 1) == "!" {
+                viol(
+                    &mut out,
+                    rel,
+                    idx,
+                    "R9",
+                    format!("`{}!` on a library path; finish it or make it an error", t.text),
+                );
+            } else if t.text == "unwrap"
+                && k >= 1
+                && tx(k - 1) == "."
+                && tx(k + 1) == "("
+                && tx(k + 2) == ")"
+            {
+                if !justified() {
+                    viol(
+                        &mut out,
+                        rel,
+                        idx,
+                        "R9",
+                        "bare `.unwrap()` without a `// PANICS:` justification within \
+                         8 lines above; state why the value is always Some/Ok, or use \
+                         `.expect(\"...\")` with the argument as the message"
+                            .to_string(),
+                    );
+                }
+            } else if t.text == "expect" && k >= 1 && tx(k - 1) == "." && tx(k + 1) == "(" {
+                if kd(k + 2) != Some(TokKind::Str) && !justified() {
+                    viol(
+                        &mut out,
+                        rel,
+                        idx,
+                        "R9",
+                        "`.expect(non-literal)` without a `// PANICS:` justification"
+                            .to_string(),
+                    );
+                }
+            } else if (t.text == "panic" || t.text == "unreachable")
+                && tx(k + 1) == "!"
+                && tx(k + 2) == "("
+                && kd(k + 3) != Some(TokKind::Str)
+            {
+                let bare_unreachable = t.text == "unreachable" && tx(k + 3) == ")";
+                if !bare_unreachable && !justified() {
+                    viol(
+                        &mut out,
+                        rel,
+                        idx,
+                        "R9",
+                        format!(
+                            "message-less `{}!` without a `// PANICS:` justification",
+                            t.text
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse README's `## Run-control knobs` table: every identifier word
+/// inside backticks on a table row. Returns the set, or `None` when the
+/// section is missing (a violation — the registry must exist).
+pub fn parse_readme_knobs(src: &str) -> Option<BTreeSet<String>> {
+    let mut knobs = BTreeSet::new();
+    let mut in_section = false;
+    let mut seen = false;
+    for l in src.lines() {
+        if l.starts_with("## ") {
+            in_section = l.trim() == "## Run-control knobs";
+            seen |= in_section;
+            continue;
+        }
+        if in_section && l.starts_with('|') {
+            let mut rest = l;
+            while let Some(a) = rest.find('`') {
+                let Some(b) = rest[a + 1..].find('`') else { break };
+                for w in rest[a + 1..a + 1 + b].split(|c: char| !is_ident_cont(c)) {
+                    if !w.is_empty() {
+                        knobs.insert(w.to_string());
+                    }
+                }
+                rest = &rest[a + 1 + b + 1..];
+            }
+        }
+    }
+    if seen {
+        Some(knobs)
+    } else {
+        None
+    }
+}
+
+/// Find a cycle in the observed module graph, *excluding* seam edges
+/// (the declared cluster <-> runtime trait injection). Returns the
+/// cycle as a module path `a -> b -> ... -> a` if one exists.
+pub fn find_cycle(edges: &BTreeSet<Edge>) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b, seam) in edges {
+        if !seam {
+            adj.entry(a.as_str()).or_default().push(b.as_str());
+        }
+    }
+    // iterative DFS with colors: 0 unvisited, 1 on stack, 2 done
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        path: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(node, 1);
+        path.push(node);
+        for &next in adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]) {
+            match color.get(next).copied().unwrap_or(0) {
+                0 => {
+                    if let Some(c) = dfs(next, adj, color, path) {
+                        return Some(c);
+                    }
+                }
+                1 => {
+                    let from = path.iter().position(|&p| p == next).unwrap_or(0);
+                    let mut cycle: Vec<String> =
+                        path[from..].iter().map(|s| s.to_string()).collect();
+                    cycle.push(next.to_string());
+                    return Some(cycle);
+                }
+                _ => {}
+            }
+        }
+        path.pop();
+        color.insert(node, 2);
+        None
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for node in nodes {
+        if color.get(node).copied().unwrap_or(0) == 0 {
+            let mut path = Vec::new();
+            if let Some(c) = dfs(node, &adj, &mut color, &mut path) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Emit the observed module graph as DOT under `<root>/target/analyze/`.
+/// An edge is drawn dashed when it exists *only* through seam files.
+pub fn write_modgraph(root: &Path, edges: &BTreeSet<Edge>) -> std::io::Result<PathBuf> {
+    let mut merged: BTreeMap<(&str, &str), bool> = BTreeMap::new();
+    for (a, b, seam) in edges {
+        merged
+            .entry((a.as_str(), b.as_str()))
+            .and_modify(|seam_only| *seam_only &= *seam)
+            .or_insert(*seam);
+    }
+    let mut dot = String::from(
+        "// Module dependency graph of rust/src, extracted by `cargo xtask analyze`.\n\
+         // Dashed edges exist only through the declared SpmmOp/AssignKernel seam\n\
+         // files (see RUNTIME_SEAM_FILES in xtask/src/analyze.rs).\n\
+         digraph modules {\n    rankdir = BT;\n",
+    );
+    for ((a, b), seam_only) in &merged {
+        dot.push_str(&format!(
+            "    \"{a}\" -> \"{b}\"{};\n",
+            if *seam_only { " [style = dashed]" } else { "" }
+        ));
+    }
+    dot.push_str("}\n");
+    let dir = root.join("target").join("analyze");
+    fs::create_dir_all(&dir)?;
+    let path = dir.join("modgraph.dot");
+    fs::write(&path, dot)?;
+    Ok(path)
+}
+
+/// Analyze the whole repository rooted at `root`. Deterministic: files
+/// are visited in sorted path order. Returns the violations plus the
+/// observed module graph (for DOT emission).
+pub fn analyze_tree(root: &Path) -> (Vec<Violation>, BTreeSet<Edge>) {
+    let mut edges = BTreeSet::new();
+    let readme = match fs::read_to_string(root.join("README.md")) {
+        Ok(s) => s,
+        Err(e) => {
+            return (
+                vec![Violation {
+                    file: "README.md".to_string(),
+                    line: 1,
+                    rule: "IO",
+                    message: format!("cannot read README for the knob registry: {e}"),
+                }],
+                edges,
+            )
+        }
+    };
+    let Some(knobs) = parse_readme_knobs(&readme) else {
+        return (
+            vec![Violation {
+                file: "README.md".to_string(),
+                line: 1,
+                rule: "R8",
+                message: "`## Run-control knobs` section not found; the env-knob \
+                          registry must exist"
+                    .to_string(),
+            }],
+            edges,
+        );
+    };
+
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches", "examples", "xtask/src"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f.strip_prefix(root).unwrap_or(f).to_string_lossy().replace('\\', "/");
+        match fs::read_to_string(f) {
+            Ok(src) => out.extend(analyze_file(&rel, &src, &knobs, &mut edges)),
+            Err(e) => out.push(Violation {
+                file: rel,
+                line: 1,
+                rule: "IO",
+                message: format!("cannot read file: {e}"),
+            }),
+        }
+    }
+    if let Some(cycle) = find_cycle(&edges) {
+        out.push(Violation {
+            file: "rust/src".to_string(),
+            line: 1,
+            rule: "R6",
+            message: format!(
+                "module dependency cycle (excluding declared seam edges): {}",
+                cycle.join(" -> ")
+            ),
+        });
+    }
+    (out, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> Vec<Violation> {
+        let knobs: BTreeSet<String> =
+            ["CHEBDAV_DEBUG", "CHEBDAV_THREADS"].iter().map(|s| s.to_string()).collect();
+        let mut edges = BTreeSet::new();
+        analyze_file(rel, src, &knobs, &mut edges)
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- R6 ----
+
+    #[test]
+    fn r6_eig_importing_dist_is_flagged() {
+        let v = run("rust/src/eig/foo.rs", "use crate::dist::DistMatrix;\nfn f() {}\n");
+        assert_eq!(rules(&v), vec!["R6"]);
+        assert!(v[0].message.contains("`eig` must not import `dist`"));
+    }
+
+    #[test]
+    fn r6_mpi_sim_importing_coordinator_is_flagged() {
+        let v = run("rust/src/mpi_sim/foo.rs", "use crate::coordinator::grid_side;\n");
+        assert_eq!(rules(&v), vec!["R6"]);
+    }
+
+    #[test]
+    fn r6_declared_edges_and_nonmodule_paths_pass() {
+        assert!(run("rust/src/eig/foo.rs", "use crate::linalg::Mat;\nuse crate::sparse::Csr;\n")
+            .is_empty());
+        // a qualified path counts the same as a use
+        let v = run("rust/src/mpi_sim/foo.rs", "fn f() -> crate::dist::DistMatrix { todo() }\n");
+        assert_eq!(rules(&v), vec!["R6"]);
+        // crate::<type> (no module segment in LAYERS) is ignored
+        assert!(run("rust/src/eig/foo.rs", "use crate::reexported_thing;\n").is_empty());
+    }
+
+    #[test]
+    fn r6_runtime_import_allowed_only_from_seam_files() {
+        let src = "use crate::runtime::cluster::PjrtAssignPlan;\nfn f() {}\n";
+        assert!(run("rust/src/cluster/kmeans.rs", src).is_empty());
+        assert!(run("rust/src/dist/cluster.rs", src).is_empty());
+        let v = run("rust/src/cluster/metrics.rs", src);
+        assert_eq!(rules(&v), vec!["R6"]);
+        let v = run("rust/src/dist/spmm.rs", src);
+        assert_eq!(rules(&v), vec!["R6"]);
+    }
+
+    #[test]
+    fn r6_grouped_use_extracts_every_item() {
+        let v = run(
+            "rust/src/eig/foo.rs",
+            "use crate::{linalg::Mat, dist::DistMatrix, sparse::Csr};\n",
+        );
+        assert_eq!(rules(&v), vec!["R6"]);
+        assert!(v[0].message.contains("dist"));
+    }
+
+    #[test]
+    fn r6_undeclared_source_modules_are_flagged() {
+        let v = run("rust/src/mystery/foo.rs", "fn f() {}\n");
+        assert_eq!(rules(&v), vec!["R6"]);
+        assert!(v[0].message.contains("not declared in the layering table"));
+        // files directly under rust/src (lib.rs, main.rs) have no module
+        assert!(run("rust/src/lib.rs", "pub mod util;\n").is_empty());
+    }
+
+    #[test]
+    fn declared_layer_dag_is_acyclic() {
+        let mut edges = BTreeSet::new();
+        for (m, deps) in LAYERS {
+            for d in *deps {
+                edges.insert((m.to_string(), d.to_string(), false));
+            }
+        }
+        assert_eq!(find_cycle(&edges), None);
+    }
+
+    #[test]
+    fn cycles_outside_the_seam_are_detected() {
+        let mut edges: BTreeSet<Edge> = BTreeSet::new();
+        edges.insert(("a".into(), "b".into(), false));
+        edges.insert(("b".into(), "c".into(), false));
+        edges.insert(("c".into(), "a".into(), false));
+        let cycle = find_cycle(&edges).expect("cycle must be found");
+        assert_eq!(cycle.first(), cycle.last());
+        // the same shape through a seam edge is the declared exception
+        let mut seamed: BTreeSet<Edge> = BTreeSet::new();
+        seamed.insert(("cluster".into(), "runtime".into(), true));
+        seamed.insert(("runtime".into(), "cluster".into(), false));
+        assert_eq!(find_cycle(&seamed), None);
+    }
+
+    // ---- R7 ----
+
+    #[test]
+    fn r7_reduction_over_rank_indexed_data_is_flagged() {
+        let src = "fn f(parts: &[f64]) -> f64 {\n    parts.iter().sum::<f64>()\n}\n";
+        let v = run("rust/src/dist/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R7"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn r7_the_reduce_helpers_themselves_are_the_sanctioned_sites() {
+        let src = "fn reduce_partials(parts: &[f64]) -> f64 {\n    let mut acc = 0.0;\n    for p in parts {\n        acc += p;\n    }\n    acc\n}\n";
+        assert!(run("rust/src/dist/mod.rs", src).is_empty());
+        // the same body under another name is a violation
+        let renamed = src.replace("reduce_partials", "my_fold");
+        let v = run("rust/src/dist/mod.rs", &renamed);
+        assert_eq!(rules(&v), vec!["R7"]);
+    }
+
+    #[test]
+    fn r7_loop_accumulation_over_parts_is_flagged() {
+        let src = "fn f(parts: Vec<f64>) -> f64 {\n    let mut inertia = 0.0;\n    for li in parts {\n        inertia += li;\n    }\n    inertia\n}\n";
+        let v = run("rust/src/dist/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R7"]);
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn r7_integer_bookkeeping_inside_part_loops_passes() {
+        let src = "fn f(parts: &[Vec<f64>], out: &mut [f64]) {\n    let mut off = 0;\n    let mut count = 0;\n    for local in parts {\n        out[off..off + local.len()].copy_from_slice(local);\n        off += local.len();\n        count += 1;\n    }\n    let _ = count;\n}\n";
+        assert!(run("rust/src/dist/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_sum_prefix_names_are_not_reduce_calls() {
+        // `.sum` must match at a boundary: a field/method *named* with a
+        // sum prefix is not a reduction
+        let src = "fn f(parts: &[f64], s: &mut S) {\n    s.summary(parts);\n}\n";
+        assert!(run("rust/src/dist/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_partial_cmp_on_determinism_paths_is_flagged() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let v = run("rust/src/eig/foo.rs", src);
+        assert!(rules(&v).contains(&"R7"), "{v:?}");
+        let fixed = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        assert!(run("rust/src/eig/foo.rs", fixed).is_empty());
+    }
+
+    #[test]
+    fn r7_f32_casts_allowed_only_in_runtime() {
+        let src = "fn f(x: f64) -> f32 {\n    x as f32\n}\n";
+        let v = run("rust/src/eig/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R7"]);
+        assert!(run("rust/src/runtime/foo.rs", src).is_empty());
+        // `as f32` inside a comment or string is prose, not a cast
+        let prose = "// the planes are stored as f32 on device\nfn f() {}\n";
+        assert!(run("rust/src/eig/foo.rs", prose).is_empty());
+    }
+
+    #[test]
+    fn r7_exempts_test_regions_and_non_library_paths() {
+        let src = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn f(parts: &[f64]) -> f64 {\n        parts.iter().sum::<f64>()\n    }\n}\n";
+        assert!(run("rust/src/dist/foo.rs", src).is_empty());
+        let bench = "fn f(parts: &[f64]) -> f64 {\n    parts.iter().sum::<f64>()\n}\n";
+        assert!(run("rust/benches/foo.rs", bench).is_empty());
+    }
+
+    // ---- R8 ----
+
+    #[test]
+    fn r8_undocumented_env_knob_is_flagged() {
+        let src = "fn f() -> bool {\n    std::env::var(\"SOME_SECRET_SWITCH\").is_ok()\n}\n";
+        let v = run("rust/src/eig/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R8"]);
+        assert!(v[0].message.contains("SOME_SECRET_SWITCH"));
+        // var_os through the same table
+        let vos = "fn f() {\n    let _ = std::env::var_os(\"ANOTHER_SWITCH\");\n}\n";
+        assert_eq!(rules(&run("rust/src/runtime/foo.rs", vos)), vec!["R8"]);
+    }
+
+    #[test]
+    fn r8_documented_knobs_and_non_literal_reads_pass() {
+        let src = "fn f() -> bool {\n    std::env::var(\"CHEBDAV_DEBUG\").is_ok()\n}\n";
+        assert!(run("rust/src/eig/foo.rs", src).is_empty());
+        let var = "fn f(name: &str) -> bool {\n    std::env::var(name).is_ok()\n}\n";
+        assert!(run("rust/src/eig/foo.rs", var).is_empty());
+    }
+
+    #[test]
+    fn readme_knob_table_parses_backticked_words() {
+        let readme = "# Title\n\n## Run-control knobs\n\n| knob | where | meaning |\n|---|---|---|\n| `CHEBDAV_DEBUG=1` | env | trace |\n| `cargo xtask analyze` | dev command | this pass |\n\n## Next section\n\n`NOT_A_KNOB`\n";
+        let knobs = parse_readme_knobs(readme).unwrap();
+        assert!(knobs.contains("CHEBDAV_DEBUG"));
+        assert!(knobs.contains("analyze"));
+        assert!(!knobs.contains("NOT_A_KNOB"));
+        assert_eq!(parse_readme_knobs("# no knob section\n"), None);
+    }
+
+    // ---- R9 ----
+
+    #[test]
+    fn r9_bare_unwrap_without_panics_comment_is_flagged() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let v = run("rust/src/eig/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R9"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn r9_panics_comment_or_message_literal_justifies() {
+        let ok = "fn f(x: Option<u32>) -> u32 {\n    // PANICS: caller guarantees Some by construction.\n    x.unwrap()\n}\n";
+        assert!(run("rust/src/eig/foo.rs", ok).is_empty());
+        let expect_lit = "fn f(x: Option<u32>) -> u32 {\n    x.expect(\"index in bounds\")\n}\n";
+        assert!(run("rust/src/eig/foo.rs", expect_lit).is_empty());
+        let panic_lit = "fn f() {\n    panic!(\"bad config\");\n}\n";
+        assert!(run("rust/src/eig/foo.rs", panic_lit).is_empty());
+    }
+
+    #[test]
+    fn r9_expect_with_non_literal_needs_justification() {
+        let src = "fn f(x: Option<u32>, msg: &str) -> u32 {\n    x.expect(msg)\n}\n";
+        assert_eq!(rules(&run("rust/src/eig/foo.rs", src)), vec!["R9"]);
+    }
+
+    #[test]
+    fn r9_todo_and_unimplemented_are_always_violations() {
+        let src = "fn f() {\n    todo!(\"later\")\n}\nfn g() {\n    unimplemented!()\n}\n";
+        let v = run("rust/src/eig/foo.rs", src);
+        assert_eq!(rules(&v), vec!["R9", "R9"]);
+    }
+
+    #[test]
+    fn r9_exempts_tests_and_non_library_code() {
+        let tests = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(run("rust/src/eig/foo.rs", tests).is_empty());
+        assert!(run("rust/tests/foo.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n").is_empty());
+        assert!(run("rust/src/util/loom_tests.rs", "fn z() {}\n").is_empty());
+    }
+
+    #[test]
+    fn r9_unwrap_inside_a_raw_string_is_prose() {
+        let src = "fn f() -> &'static str {\n    r#\"x.unwrap() and panic!() here are text\"#\n}\n";
+        assert!(run("rust/src/eig/foo.rs", src).is_empty());
+    }
+
+    // ---- the real tree ----
+
+    #[test]
+    fn repository_tree_is_analyze_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let (v, edges) = analyze_tree(root);
+        assert!(
+            v.is_empty(),
+            "analyze violations:\n{}",
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+        );
+        // the observed graph must cover the load-bearing declared edges
+        let has = |a: &str, b: &str| edges.iter().any(|(x, y, _)| x == a && y == b);
+        assert!(has("dist", "mpi_sim"));
+        assert!(has("eig", "linalg"));
+        assert!(has("coordinator", "dist"));
+        // runtime edges from below exist only via seam files
+        assert!(edges
+            .iter()
+            .filter(|(a, b, _)| (a == "cluster" || a == "dist") && b == "runtime")
+            .all(|(_, _, seam)| *seam));
+    }
+
+    #[test]
+    fn real_readme_documents_the_known_knobs() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let knobs =
+            parse_readme_knobs(&fs::read_to_string(root.join("README.md")).unwrap()).unwrap();
+        for k in [
+            "CHEBDAV_THREADS",
+            "CHEBDAV_SEQ_RANKS",
+            "CHEBDAV_ASSIGN",
+            "CHEBDAV_BENCH_N",
+            "CHEBDAV_BENCH_FULL",
+            "CHEBDAV_ARTIFACTS",
+            "CHEBDAV_DEBUG",
+            "BCHDAV_DEBUG",
+        ] {
+            assert!(knobs.contains(k), "README knob table is missing {k}");
+        }
+    }
+
+    #[test]
+    fn modgraph_dot_is_deterministic_and_marks_seams() {
+        let mut edges: BTreeSet<Edge> = BTreeSet::new();
+        edges.insert(("cluster".into(), "runtime".into(), true));
+        edges.insert(("coordinator".into(), "runtime".into(), false));
+        edges.insert(("cluster".into(), "eig".into(), false));
+        let dir = std::env::temp_dir().join(format!("xtask-analyze-test-{}", std::process::id()));
+        let path = write_modgraph(&dir, &edges).unwrap();
+        let dot = fs::read_to_string(&path).unwrap();
+        assert!(dot.contains("\"cluster\" -> \"runtime\" [style = dashed];"));
+        assert!(dot.contains("\"coordinator\" -> \"runtime\";"));
+        assert!(dot.starts_with("// Module dependency graph"));
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,790 @@
+//! A minimal, dependency-free Rust lexer and the per-file *code view*
+//! the rule passes in `lint.rs` (R1-R5) and `analyze.rs` (R6-R9) run
+//! over.
+//!
+//! The previous lint scanner worked by blanking characters while
+//! walking the source once; it handled the common cases but had real
+//! blind spots (a `SAFETY` marker inside an `r#"..."#` body satisfied
+//! R1, `#[cfg(not(test))]` opened a "test region" because the word
+//! `test` appeared on the line, `'\''` terminated one character early).
+//! This module replaces that with an actual token stream:
+//!
+//! * shebang lines (`#!...` at byte 0 only, and never `#![`, which is
+//!   an inner attribute);
+//! * line comments (`//`, `///`, `//!`) and *nested* block comments;
+//! * plain, raw (`r#"..."#` with any hash count), byte (`b"..."`) and
+//!   raw byte (`br#"..."#`) strings — the recorded token text is the
+//!   literal body, so rules can inspect string contents per line;
+//! * char literals vs lifetimes (`'a` is a lifetime, `'x'` and `'\''`
+//!   are chars), byte chars (`b'x'`), raw identifiers (`r#ident`);
+//! * identifiers, numbers (hex/exponent/suffix; `0..n` keeps the dots
+//!   as punctuation), and single-character punctuation.
+//!
+//! [`CodeView`] derives three line-indexed projections from the tokens
+//! — `code` (source with comment/string/char/shebang spans blanked,
+//! columns preserved), `comments`, and `strings` — plus the filtered
+//! token stream itself for the passes that need real structure (test
+//! region detection, module-path extraction, the panic-surface rule).
+//!
+//! Spans are in characters (not bytes): the rules only consume line
+//! numbers and per-line text, so the unit just has to be consistent.
+
+/// Token classification. `Comment` and `Shebang` are produced by
+/// [`lex`] but dropped from [`CodeView::tokens`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Char,
+    Str,
+    Num,
+    Punct,
+    Comment,
+    Shebang,
+}
+
+/// One token. For `Str` tokens `text` is the literal *body* (no quotes,
+/// prefix, or hashes); for everything else it is the raw source text.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 0-based line the token starts on.
+    pub line: usize,
+    /// Char-index span `[start, end)` in the source.
+    pub start: usize,
+    pub end: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+pub(crate) fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Total: every character lands in exactly one token or
+/// in inter-token whitespace; unterminated literals extend to EOF.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 0usize;
+
+    let text_of = |chars: &[char], a: usize, b: usize| chars[a..b.min(chars.len())].iter().collect::<String>();
+
+    // shebang: only at char 0, and `#!` not followed by `[` (that is the
+    // crate-level inner attribute `#![...]`, which must stay code)
+    if src.starts_with("#!") && !src.starts_with("#![") {
+        let j = chars.iter().position(|&c| c == '\n').unwrap_or(n);
+        toks.push(Tok {
+            kind: TokKind::Shebang,
+            text: text_of(&chars, 0, j),
+            line: 0,
+            start: 0,
+            end: j,
+        });
+        i = j;
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (covers /// and //!)
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let j = (i..n).find(|&k| chars[k] == '\n').unwrap_or(n);
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: text_of(&chars, i, j),
+                line,
+                start: i,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let (start, line0) = (i, line);
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: text_of(&chars, start, j),
+                line: line0,
+                start,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        // raw / byte string prefixes (r" r#" b" br" br#"), raw
+        // identifiers (r#ident), byte chars (b'x') — only when the r/b
+        // is not glued to a preceding identifier character
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident_cont(chars[i - 1])) {
+            let mut j = i + 1;
+            if c == 'b' && chars.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let raw = c == 'r' || j > i + 1;
+            let mut hashes = 0usize;
+            if raw {
+                while chars.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if chars.get(j) == Some(&'"') {
+                let (start, line0) = (i, line);
+                j += 1;
+                let mut body = String::new();
+                while j < n {
+                    let ch = chars[j];
+                    if ch == '\n' {
+                        line += 1;
+                        body.push(ch);
+                        j += 1;
+                        continue;
+                    }
+                    if !raw && ch == '\\' {
+                        body.push(ch);
+                        if let Some(&nx) = chars.get(j + 1) {
+                            body.push(nx);
+                            if nx == '\n' {
+                                line += 1;
+                            }
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if ch == '"' {
+                        if !raw {
+                            j += 1;
+                            break;
+                        }
+                        if (0..hashes).all(|h| chars.get(j + 1 + h) == Some(&'#')) {
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    body.push(ch);
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: body,
+                    line: line0,
+                    start,
+                    end: j.min(n),
+                });
+                i = j;
+                continue;
+            }
+            if c == 'r' && hashes == 1 && j < n && is_ident_start(chars[j]) {
+                // raw identifier r#ident
+                let start = i;
+                j += 1;
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: text_of(&chars, start, j),
+                    line,
+                    start,
+                    end: j,
+                });
+                i = j;
+                continue;
+            }
+            if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                // byte char literal b'x' / b'\n'
+                let (start, line0) = (i, line);
+                let mut j = i + 2;
+                if chars.get(j) == Some(&'\\') {
+                    j += 2; // backslash + escaped char
+                } else {
+                    j += 1;
+                }
+                while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                    j += 1;
+                }
+                j += 1; // closing quote
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: text_of(&chars, start, j),
+                    line: line0,
+                    start,
+                    end: j.min(n),
+                });
+                i = j;
+                continue;
+            }
+            // plain identifier starting with r/b
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: text_of(&chars, i, j),
+                line,
+                start: i,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        // plain string
+        if c == '"' {
+            let (start, line0) = (i, line);
+            let mut j = i + 1;
+            let mut body = String::new();
+            while j < n {
+                let ch = chars[j];
+                if ch == '\\' {
+                    body.push(ch);
+                    if let Some(&nx) = chars.get(j + 1) {
+                        body.push(nx);
+                        if nx == '\n' {
+                            line += 1;
+                        }
+                    }
+                    j += 2;
+                    continue;
+                }
+                if ch == '"' {
+                    j += 1;
+                    break;
+                }
+                if ch == '\n' {
+                    line += 1;
+                }
+                body.push(ch);
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: body,
+                line: line0,
+                start,
+                end: j.min(n),
+            });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // escaped char: consume backslash + escaped char, then
+                // scan to the closing quote ('\'' closes right there)
+                let (start, line0) = (i, line);
+                let mut j = i + 3;
+                while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                    j += 1;
+                }
+                j += 1;
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: text_of(&chars, start, j),
+                    line: line0,
+                    start,
+                    end: j.min(n),
+                });
+                i = j;
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: text_of(&chars, i, i + 3),
+                    line,
+                    start: i,
+                    end: i + 3,
+                });
+                i += 3;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: text_of(&chars, i, j),
+                    line,
+                    start: i,
+                    end: j,
+                });
+                i = j;
+                continue;
+            }
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "'".to_string(),
+                line,
+                start: i,
+                end: i + 1,
+            });
+            i += 1;
+            continue;
+        }
+        // identifier
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: text_of(&chars, i, j),
+                line,
+                start: i,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        // number: int/float/hex/exponent/suffix — `0..n` keeps the dots
+        // as puncts because '.' is consumed only when a digit follows
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            if c == '0' && matches!(chars.get(j), Some('x' | 'X' | 'o' | 'O' | 'b' | 'B')) {
+                j += 1;
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'.')
+                    && chars.get(j + 1).map(|c| c.is_ascii_digit()).unwrap_or(false)
+                {
+                    j += 1;
+                    while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                        j += 1;
+                    }
+                }
+                if matches!(chars.get(j), Some('e' | 'E')) {
+                    let mut k = j + 1;
+                    if matches!(chars.get(k), Some('+' | '-')) {
+                        k += 1;
+                    }
+                    if chars.get(k).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                        j = k;
+                        while j < n && chars[j].is_ascii_digit() {
+                            j += 1;
+                        }
+                    }
+                }
+                // suffix (f64, usize, ...)
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: text_of(&chars, i, j),
+                line,
+                start: i,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+            start: i,
+            end: i + 1,
+        });
+        i += 1;
+    }
+    toks
+}
+
+/// Line-indexed projections of one source file, derived from the token
+/// stream. Every rule pass consumes this instead of re-scanning text.
+pub struct CodeView {
+    /// Source lines with comment/string/char/shebang spans blanked
+    /// (columns preserved so reported line content stays aligned).
+    pub code: Vec<String>,
+    /// Concatenated comment text per line (line + block + doc).
+    pub comments: Vec<String>,
+    /// String-literal bodies *starting* on each line, in order.
+    pub strings: Vec<Vec<String>>,
+    /// Code tokens (comments and shebang dropped).
+    pub tokens: Vec<Tok>,
+}
+
+impl CodeView {
+    pub fn new(src: &str) -> CodeView {
+        let toks = lex(src);
+        let nlines = src.split('\n').count().max(1);
+        let mut blanked: Vec<char> = src.chars().collect();
+        let mut comments = vec![String::new(); nlines];
+        let mut strings = vec![Vec::new(); nlines];
+        for t in &toks {
+            if matches!(t.kind, TokKind::Comment | TokKind::Shebang | TokKind::Str | TokKind::Char)
+            {
+                for slot in blanked[t.start..t.end.min(blanked.len())].iter_mut() {
+                    if *slot != '\n' {
+                        *slot = ' ';
+                    }
+                }
+            }
+            match t.kind {
+                TokKind::Comment => {
+                    for (off, part) in t.text.split('\n').enumerate() {
+                        if let Some(c) = comments.get_mut(t.line + off) {
+                            c.push_str(part);
+                        }
+                    }
+                }
+                TokKind::Str => strings[t.line].push(t.text.clone()),
+                _ => {}
+            }
+        }
+        let mut code: Vec<String> =
+            blanked.iter().collect::<String>().split('\n').map(String::from).collect();
+        while code.len() < nlines {
+            code.push(String::new());
+        }
+        let tokens =
+            toks.into_iter().filter(|t| !matches!(t.kind, TokKind::Comment | TokKind::Shebang)).collect();
+        CodeView { code, comments, strings, tokens }
+    }
+
+    /// 0-based line where the file's trailing test region begins: the
+    /// first `#[cfg(...)]` attribute that (a) enables `test` outside
+    /// any `not(...)` group and (b) is attached — possibly through
+    /// further attributes — to a `mod` (or `pub mod`) item. The repo
+    /// convention keeps unit tests as the last item of a file. Both
+    /// conditions are token-level: `#[cfg(not(test))]` and a stray
+    /// `#[cfg(test)] use ...` do not open a region (blind spots of the
+    /// old string scanner). Returns `code.len()` if absent.
+    pub fn test_region_start(&self) -> usize {
+        let toks = &self.tokens;
+        let is_punct = |t: &Tok, p: &str| t.kind == TokKind::Punct && t.text == p;
+        let mut i = 0usize;
+        while i < toks.len() {
+            if is_punct(&toks[i], "#") && toks.get(i + 1).map(|t| is_punct(t, "[")).unwrap_or(false)
+            {
+                let attr_line = toks[i].line;
+                let mut j = i + 2;
+                let mut depth = 1usize;
+                let attr_start = j;
+                while j < toks.len() && depth > 0 {
+                    if is_punct(&toks[j], "[") {
+                        depth += 1;
+                    } else if is_punct(&toks[j], "]") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let attr = &toks[attr_start..j.min(toks.len())];
+                let end = j; // index of the closing ']'
+                let is_cfg_test = attr
+                    .first()
+                    .map(|t| t.kind == TokKind::Ident && t.text == "cfg")
+                    .unwrap_or(false)
+                    && cfg_enables_test(attr.get(1..).unwrap_or(&[]));
+                if is_cfg_test {
+                    // skip further attributes, then require `mod`/`pub`
+                    let mut k = end + 1;
+                    while k + 1 < toks.len()
+                        && is_punct(&toks[k], "#")
+                        && is_punct(&toks[k + 1], "[")
+                    {
+                        let mut d2 = 1usize;
+                        k += 2;
+                        while k < toks.len() && d2 > 0 {
+                            if is_punct(&toks[k], "[") {
+                                d2 += 1;
+                            } else if is_punct(&toks[k], "]") {
+                                d2 -= 1;
+                            }
+                            k += 1;
+                        }
+                    }
+                    if toks
+                        .get(k)
+                        .map(|t| t.kind == TokKind::Ident && (t.text == "mod" || t.text == "pub"))
+                        .unwrap_or(false)
+                    {
+                        return attr_line;
+                    }
+                }
+                i = end + 1;
+                continue;
+            }
+            i += 1;
+        }
+        self.code.len()
+    }
+
+    /// Per-line innermost enclosing `fn` name. Lightweight item scan:
+    /// `fn NAME ... {` pushes at its opening brace; closures do not
+    /// introduce a scope (the enclosing named fn is what rule
+    /// whitelists mean).
+    pub fn enclosing_fns(&self) -> Vec<Option<String>> {
+        let mut names: Vec<Option<String>> = vec![None; self.code.len()];
+        let mut stack: Vec<(String, usize)> = Vec::new(); // (name, depth at open)
+        let mut depth = 0usize;
+        let mut pending: Option<String> = None;
+        let toks = &self.tokens;
+        for (idx, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Ident && t.text == "fn" {
+                if let Some(nx) = toks.get(idx + 1) {
+                    if nx.kind == TokKind::Ident {
+                        pending = Some(nx.text.clone());
+                    }
+                }
+            } else if t.kind == TokKind::Punct && t.text == ";" {
+                pending = None; // fn signature without a body (trait decl)
+            } else if t.kind == TokKind::Punct && t.text == "{" {
+                depth += 1;
+                if let Some(p) = pending.take() {
+                    stack.push((p, depth));
+                }
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                if stack.last().map(|s| s.1 == depth).unwrap_or(false) {
+                    stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+            if let Some((name, _)) = stack.last() {
+                if let Some(slot) = names.get_mut(t.line) {
+                    *slot = Some(name.clone());
+                }
+            }
+        }
+        names
+    }
+}
+
+/// Does a `cfg(...)` argument list enable `test`? True iff the ident
+/// `test` appears at a position not under a `not(...)` group — so
+/// `cfg(test)` and `cfg(all(test, feature = "x"))` enable it, while
+/// `cfg(not(test))` and `cfg(any(not(test)))` do not.
+fn cfg_enables_test(toks: &[Tok]) -> bool {
+    let mut stack: Vec<String> = Vec::new(); // group names
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Ident
+            && toks
+                .get(k + 1)
+                .map(|n| n.kind == TokKind::Punct && n.text == "(")
+                .unwrap_or(false)
+        {
+            stack.push(t.text.clone());
+            k += 2;
+            continue;
+        }
+        if t.kind == TokKind::Punct && t.text == "(" {
+            stack.push(String::new());
+            k += 1;
+            continue;
+        }
+        if t.kind == TokKind::Punct && t.text == ")" {
+            stack.pop();
+            k += 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "test" && !stack.iter().any(|g| g == "not") {
+            return true;
+        }
+        k += 1;
+    }
+    false
+}
+
+/// First occurrence of `word` in `line` at identifier boundaries.
+pub fn has_word(line: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !line[..p].chars().next_back().map(is_ident_cont).unwrap_or(false);
+        let after = p + word.len();
+        let after_ok =
+            after >= line.len() || !line[after..].chars().next().map(is_ident_cont).unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn shebang_only_at_byte_zero_and_not_inner_attr() {
+        let t = lex("#!/usr/bin/env run\nfn main() {}\n");
+        assert_eq!(t[0].kind, TokKind::Shebang);
+        assert_eq!(t[0].text, "#!/usr/bin/env run");
+        // inner attribute is NOT a shebang
+        let t = lex("#![warn(missing_docs)]\n");
+        assert!(t.iter().all(|x| x.kind != TokKind::Shebang));
+        assert_eq!(t[0].text, "#");
+        // `#!` later in the file is not a shebang either
+        let t = lex("fn a() {}\n#!/not/a/shebang\n");
+        assert!(t.iter().all(|x| x.kind != TokKind::Shebang));
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_matching_depth() {
+        let t = kinds("/* outer /* inner */ still comment */ fn a() {}");
+        assert_eq!(t[0].0, TokKind::Comment);
+        assert_eq!(t[0].1, "/* outer /* inner */ still comment */");
+        assert_eq!(t[1], (TokKind::Ident, "fn".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_with_hash_counts() {
+        let t = kinds("let a = r\"x\"; let b = r#\"say \"hi\"\"#; let c = r##\"one \"# two\"##;");
+        let strs: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Str).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(strs, vec!["x", "say \"hi\"", "one \"# two"]);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let t = kinds("let a = b\"bytes\\n\"; let b = br#\"raw \"bytes\"\"#;");
+        let strs: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Str).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(strs, vec!["bytes\\n", "raw \"bytes\""]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let t = kinds("fn f<'a>(x: &'a u32) { let c = 'x'; let q = '\\''; let nl = '\\n'; }");
+        let lifetimes: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Lifetime).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let chars: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Char).map(|(_, s)| s.as_str()).collect();
+        // '\'' must close at its own quote, not run on ('x' | '\'' | '\n')
+        assert_eq!(chars, vec!["'x'", "'\\''", "'\\n'"]);
+    }
+
+    #[test]
+    fn byte_chars_and_raw_identifiers() {
+        let t = kinds("let a = b'x'; let b = b'\\n'; let r#type = 1;");
+        let chars: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Char).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(chars, vec!["b'x'", "b'\\n'"]);
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Ident && s == "r#type"));
+    }
+
+    #[test]
+    fn an_r_or_b_glued_to_an_ident_is_not_a_prefix() {
+        // `number"text"` must not treat the trailing r/b as a string prefix
+        let t = kinds("var\"s\"");
+        assert_eq!(t[0], (TokKind::Ident, "var".to_string()));
+        assert_eq!(t[1], (TokKind::Str, "s".to_string()));
+    }
+
+    #[test]
+    fn numbers_keep_range_dots_as_puncts() {
+        let t = kinds("for i in 0..n { let x = 1.5e-3; let y = 0xFF; let z = 1_000f64; }");
+        let nums: Vec<&str> =
+            t.iter().filter(|(k, _)| *k == TokKind::Num).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(nums, vec!["0", "1.5e-3", "0xFF", "1_000f64"]);
+        let dots = t.iter().filter(|(k, s)| *k == TokKind::Punct && s == ".").count();
+        assert_eq!(dots, 2, "both range dots survive as punctuation");
+    }
+
+    #[test]
+    fn code_view_blanks_comment_string_and_char_spans() {
+        let view =
+            CodeView::new("let s = r#\"unsafe in a raw string\"#; // unsafe in a comment\n");
+        assert!(!view.code.join("\n").contains("unsafe"));
+        assert!(view.comments[0].contains("unsafe in a comment"));
+        assert_eq!(view.strings[0], vec!["unsafe in a raw string".to_string()]);
+        // columns preserved: the blanked line has the original length
+        assert_eq!(view.code[0].chars().count(), "let s = r#\"unsafe in a raw string\"#; // unsafe in a comment".chars().count());
+    }
+
+    #[test]
+    fn multi_line_strings_record_on_their_start_line() {
+        let view = CodeView::new("let s = \"a\nb\";\nlet t = 1;\n");
+        assert_eq!(view.strings[0], vec!["a\nb".to_string()]);
+        assert!(view.strings[1].is_empty());
+        assert!(view.code[2].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn cfg_not_test_does_not_open_a_test_region() {
+        let view = CodeView::new("#[cfg(not(test))]\nmod imp;\nfn a() {}\n");
+        assert_eq!(view.test_region_start(), view.code.len());
+        let view = CodeView::new("fn a() {}\n#[cfg(test)]\nmod tests {\n}\n");
+        assert_eq!(view.test_region_start(), 1);
+        let view = CodeView::new("fn a() {}\n#[cfg(all(test, feature = \"loom-tests\"))]\nmod loom_tests {\n}\n");
+        assert_eq!(view.test_region_start(), 1);
+    }
+
+    #[test]
+    fn cfg_test_needs_a_mod_item_to_open_a_region() {
+        // a stray cfg(test) import at the top must not exempt the file
+        let view = CodeView::new("#[cfg(test)]\nuse crate::util::Rng;\nfn a() {}\n");
+        assert_eq!(view.test_region_start(), view.code.len());
+        // attribute stacking between cfg and mod is fine
+        let view = CodeView::new("fn a() {}\n#[cfg(test)]\n#[allow(dead_code)]\nmod tests {\n}\n");
+        assert_eq!(view.test_region_start(), 1);
+    }
+
+    #[test]
+    fn enclosing_fns_tracks_the_innermost_named_fn() {
+        let src = "fn outer() {\n    let c = |x: u32| {\n        x + 1\n    };\n    c(2);\n}\nfn merge_partials() {\n    let y = 3;\n}\n";
+        let view = CodeView::new(src);
+        let fns = view.enclosing_fns();
+        assert_eq!(fns[2].as_deref(), Some("outer"), "closure body stays in outer");
+        assert_eq!(fns[7].as_deref(), Some("merge_partials"));
+    }
+
+    #[test]
+    fn trait_method_signatures_do_not_capture_following_blocks() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n}\nfn real() {\n    let x = 1;\n}\n";
+        let view = CodeView::new(src);
+        let fns = view.enclosing_fns();
+        assert_eq!(fns[4].as_deref(), Some("real"));
+    }
+}

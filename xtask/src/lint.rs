@@ -29,17 +29,21 @@
 //!   `rust/src/mpi_sim/ledger.rs` (the figure benches read those exact
 //!   keys back; a typoed key silently drops a bar from a figure).
 //!
-//! The scanner works on a *code view* of each file: comments and
-//! string/char literal bodies are blanked so rule patterns never match
-//! prose, and comment text / string literals are kept per line for R1
-//! and R5. A file's trailing test region (from the first `#[cfg(...)]`
-//! attribute mentioning `test` to end of file — the repo convention
-//! puts unit tests last) is exempt from R3-R5; R1/R2 apply everywhere.
+//! The rules run over [`crate::lexer::CodeView`] — the real token
+//! stream of `lexer.rs`, re-projected per line with comment and
+//! string/char literal spans blanked so rule patterns never match
+//! prose, and with comment text / string literals kept per line for R1
+//! and R5. A file's trailing test region (the first `#[cfg(...)]`
+//! attribute that *enables* `test` and attaches to a `mod` item — the
+//! repo convention puts unit tests last) is exempt from R3-R5; R1/R2
+//! apply everywhere. The structural rules R6-R9 live in `analyze.rs`.
 
 use std::collections::BTreeSet;
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
+
+use crate::lexer::{has_word, CodeView};
 
 /// One rule violation at a file:line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -48,7 +52,7 @@ pub struct Violation {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
-    /// Rule id: "R1".."R5" (or "IO" for unreadable inputs).
+    /// Rule id: "R1".."R9" (or "IO" for unreadable inputs).
     pub rule: &'static str,
     /// Human-readable description.
     pub message: String,
@@ -71,8 +75,9 @@ const UNSAFE_WHITELIST: &[&str] = &[
     "rust/src/linalg/gemm.rs",
 ];
 
-/// How far above an `unsafe` token R1 looks for a SAFETY comment.
-const SAFETY_WINDOW: usize = 8;
+/// How far above an `unsafe` token R1 looks for a SAFETY comment (and
+/// R9 in analyze.rs for a `// PANICS:` justification).
+pub(crate) const SAFETY_WINDOW: usize = 8;
 
 /// Call patterns whose first string-literal argument is a ledger
 /// component key (R5). Sites passing a variable instead of a literal
@@ -90,234 +95,6 @@ const LEDGER_PATTERNS: &[&str] = &[
     "spmm_1d(",
 ];
 
-/// Per-line decomposition of one source file.
-struct FileView {
-    /// Source lines with comments and string/char bodies blanked.
-    code: Vec<String>,
-    /// Concatenated comment text per line (line + block + doc).
-    comments: Vec<String>,
-    /// String literals *starting* on each line, in order.
-    strings: Vec<Vec<String>>,
-}
-
-fn is_ident(c: char) -> bool {
-    c.is_ascii_alphanumeric() || c == '_'
-}
-
-/// Split a source file into code / comment / string views. Handles
-/// line and nested block comments, plain and raw (`r#"..."#`) strings,
-/// byte strings, char literals, and lifetimes (`'a` is not a char).
-fn scan(src: &str) -> FileView {
-    let chars: Vec<char> = src.chars().collect();
-    let mut code: Vec<String> = vec![String::new()];
-    let mut comments: Vec<String> = vec![String::new()];
-    let mut strings: Vec<Vec<String>> = vec![Vec::new()];
-    let newline =
-        |code: &mut Vec<String>, comments: &mut Vec<String>, strings: &mut Vec<Vec<String>>| {
-            code.push(String::new());
-            comments.push(String::new());
-            strings.push(Vec::new());
-        };
-
-    let mut i = 0usize;
-    while i < chars.len() {
-        let c = chars[i];
-        if c == '\n' {
-            newline(&mut code, &mut comments, &mut strings);
-            i += 1;
-            continue;
-        }
-        // line comment (covers ///, //!)
-        if c == '/' && chars.get(i + 1) == Some(&'/') {
-            while i < chars.len() && chars[i] != '\n' {
-                comments.last_mut().unwrap().push(chars[i]);
-                i += 1;
-            }
-            continue;
-        }
-        // block comment, nested
-        if c == '/' && chars.get(i + 1) == Some(&'*') {
-            let mut depth = 1usize;
-            comments.last_mut().unwrap().push_str("/*");
-            i += 2;
-            while i < chars.len() && depth > 0 {
-                if chars[i] == '\n' {
-                    newline(&mut code, &mut comments, &mut strings);
-                    i += 1;
-                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
-                    depth += 1;
-                    comments.last_mut().unwrap().push_str("/*");
-                    i += 2;
-                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
-                    depth -= 1;
-                    comments.last_mut().unwrap().push_str("*/");
-                    i += 2;
-                } else {
-                    comments.last_mut().unwrap().push(chars[i]);
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // raw / byte string prefixes: r", r#"..., b", br#"...
-        if c == 'r' || c == 'b' {
-            let prev_ident = i > 0 && is_ident(chars[i - 1]);
-            if !prev_ident {
-                let mut j = i + 1;
-                if c == 'b' && chars.get(j) == Some(&'r') {
-                    j += 1;
-                }
-                let raw = c == 'r' || (c == 'b' && j > i + 1);
-                let mut hashes = 0usize;
-                if raw {
-                    while chars.get(j) == Some(&'#') {
-                        hashes += 1;
-                        j += 1;
-                    }
-                }
-                if chars.get(j) == Some(&'"') && (raw || c == 'b') {
-                    // consume the literal; record its body
-                    let start_line = code.len() - 1;
-                    let mut lit = String::new();
-                    i = j + 1;
-                    'lit: while i < chars.len() {
-                        if chars[i] == '\n' {
-                            lit.push('\n');
-                            newline(&mut code, &mut comments, &mut strings);
-                            i += 1;
-                            continue;
-                        }
-                        if !raw && chars[i] == '\\' {
-                            lit.push(chars[i]);
-                            if let Some(&n) = chars.get(i + 1) {
-                                lit.push(n);
-                                if n == '\n' {
-                                    newline(&mut code, &mut comments, &mut strings);
-                                }
-                            }
-                            i += 2;
-                            continue;
-                        }
-                        if chars[i] == '"' {
-                            if raw {
-                                // need `"` followed by `hashes` hashes
-                                let mut ok = true;
-                                for h in 0..hashes {
-                                    if chars.get(i + 1 + h) != Some(&'#') {
-                                        ok = false;
-                                        break;
-                                    }
-                                }
-                                if ok {
-                                    i += 1 + hashes;
-                                    break 'lit;
-                                }
-                            } else {
-                                i += 1;
-                                break 'lit;
-                            }
-                        }
-                        lit.push(chars[i]);
-                        i += 1;
-                    }
-                    strings[start_line].push(lit);
-                    continue;
-                }
-            }
-            // plain identifier character
-            code.last_mut().unwrap().push(c);
-            i += 1;
-            continue;
-        }
-        // plain string
-        if c == '"' {
-            let start_line = code.len() - 1;
-            let mut lit = String::new();
-            i += 1;
-            while i < chars.len() {
-                let ch = chars[i];
-                if ch == '\\' {
-                    lit.push(ch);
-                    if let Some(&n) = chars.get(i + 1) {
-                        lit.push(n);
-                        if n == '\n' {
-                            newline(&mut code, &mut comments, &mut strings);
-                        }
-                    }
-                    i += 2;
-                    continue;
-                }
-                if ch == '"' {
-                    i += 1;
-                    break;
-                }
-                if ch == '\n' {
-                    lit.push('\n');
-                    newline(&mut code, &mut comments, &mut strings);
-                    i += 1;
-                    continue;
-                }
-                lit.push(ch);
-                i += 1;
-            }
-            strings[start_line].push(lit);
-            continue;
-        }
-        // char literal vs lifetime
-        if c == '\'' {
-            if chars.get(i + 1) == Some(&'\\') {
-                // escaped char literal: skip to closing quote
-                i += 2;
-                while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
-                    i += 1;
-                }
-                i += 1;
-            } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
-                i += 3; // 'x'
-            } else {
-                // lifetime: keep the tick so generics stay readable
-                code.last_mut().unwrap().push('\'');
-                i += 1;
-            }
-            continue;
-        }
-        code.last_mut().unwrap().push(c);
-        i += 1;
-    }
-    FileView { code, comments, strings }
-}
-
-/// First occurrence of `word` in `line` at identifier boundaries.
-fn has_word(line: &str, word: &str) -> bool {
-    let mut start = 0usize;
-    while let Some(pos) = line[start..].find(word) {
-        let p = start + pos;
-        let before_ok = p == 0 || !line[..p].chars().next_back().map(is_ident).unwrap_or(false);
-        let after = p + word.len();
-        let after_ok =
-            after >= line.len() || !line[after..].chars().next().map(is_ident).unwrap_or(false);
-        if before_ok && after_ok {
-            return true;
-        }
-        start = p + word.len();
-    }
-    false
-}
-
-/// Line index (0-based) where the file's trailing test region begins:
-/// the first `#[cfg(...)]` attribute that mentions `test` in code. The
-/// repo convention keeps unit tests as the last item of a file, so
-/// everything from there on is test code. Returns `len` if absent.
-fn test_region_start(code: &[String]) -> usize {
-    for (idx, line) in code.iter().enumerate() {
-        let t = line.trim_start();
-        if t.starts_with("#[cfg(") && has_word(line, "test") {
-            return idx;
-        }
-    }
-    code.len()
-}
-
 /// R5 scope: files where ledger component keys are charged or read on
 /// the real reporting path. `eig/lobpcg.rs` and `eig/lanczos.rs` bill a
 /// different sink (`ComponentTimers` with its own "rr"/"spmv" keys) and
@@ -333,8 +110,8 @@ fn ledger_scope(path: &str) -> bool {
 }
 
 /// R4 scope: the determinism-critical paths (float merges and
-/// serialized report output).
-fn map_scope(path: &str) -> bool {
+/// serialized report output). Shared with R7 in analyze.rs.
+pub(crate) fn map_scope(path: &str) -> bool {
     path.starts_with("rust/src/mpi_sim/")
         || path.starts_with("rust/src/coordinator/")
         || path.starts_with("rust/src/dist/")
@@ -345,10 +122,10 @@ fn map_scope(path: &str) -> bool {
 /// Lint one file. `rel` is the repo-relative path with forward
 /// slashes; `vocab` is the ledger component-key vocabulary.
 pub fn lint_file(rel: &str, src: &str, vocab: &BTreeSet<String>) -> Vec<Violation> {
-    let view = scan(src);
+    let view = CodeView::new(src);
     let mut out = Vec::new();
     let whitelisted = UNSAFE_WHITELIST.contains(&rel);
-    let tests_from = test_region_start(&view.code);
+    let tests_from = view.test_region_start();
 
     for (idx, line) in view.code.iter().enumerate() {
         let lineno = idx + 1;
@@ -484,7 +261,7 @@ pub fn parse_vocab(ledger_src: &str) -> Result<BTreeSet<String>, Violation> {
 }
 
 /// Recursively collect `.rs` files, skipping `vendor` and `target`.
-fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+pub(crate) fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
     let entries = match fs::read_dir(dir) {
         Ok(e) => e,
         Err(_) => return, // missing directory: nothing to lint
@@ -564,11 +341,12 @@ mod tests {
         v.iter().map(|x| x.rule).collect()
     }
 
-    // ---- tokenizer ----
+    // ---- the code view, as the rules consume it ----
 
     #[test]
     fn comments_are_blanked_from_the_code_view() {
-        let view = scan("let x = 1; // a HashMap lives here\n/* and\n   here */ let y = 2;\n");
+        let view =
+            CodeView::new("let x = 1; // a HashMap lives here\n/* and\n   here */ let y = 2;\n");
         assert!(!view.code.join("\n").contains("HashMap"));
         assert!(view.comments[0].contains("HashMap"));
         assert!(view.comments[1].contains("and"));
@@ -577,7 +355,7 @@ mod tests {
 
     #[test]
     fn string_bodies_are_blanked_and_recorded_per_line() {
-        let view = scan("let s = \"spmm\";\nlet t = \"a\\\"b\";\n");
+        let view = CodeView::new("let s = \"spmm\";\nlet t = \"a\\\"b\";\n");
         assert!(!view.code.join("\n").contains("spmm"));
         assert_eq!(view.strings[0], vec!["spmm".to_string()]);
         assert_eq!(view.strings[1], vec!["a\\\"b".to_string()]);
@@ -585,7 +363,7 @@ mod tests {
 
     #[test]
     fn raw_strings_are_handled() {
-        let view = scan("let s = r#\"no \"escape\" here\"#;\nlet b = b\"bytes\";\n");
+        let view = CodeView::new("let s = r#\"no \"escape\" here\"#;\nlet b = b\"bytes\";\n");
         assert_eq!(view.strings[0], vec!["no \"escape\" here".to_string()]);
         assert_eq!(view.strings[1], vec!["bytes".to_string()]);
         assert!(!view.code.join("\n").contains("escape"));
@@ -593,19 +371,32 @@ mod tests {
 
     #[test]
     fn lifetimes_are_not_char_literals() {
-        let view = scan("fn f<'a>(x: &'a u32) -> &'a u32 { let c = 'x'; let _ = c; x }\n");
+        let view =
+            CodeView::new("fn f<'a>(x: &'a u32) -> &'a u32 { let c = 'x'; let _ = c; x }\n");
         assert!(view.code[0].contains("fn f<'a>(x: &'a u32)"));
         assert!(!view.code[0].contains("'x'"));
     }
 
     #[test]
     fn test_region_starts_at_the_cfg_test_attribute() {
-        let view = scan("fn a() {}\n#[cfg(test)]\nmod tests {\n}\n");
-        assert_eq!(test_region_start(&view.code), 1);
+        let view = CodeView::new("fn a() {}\n#[cfg(test)]\nmod tests {\n}\n");
+        assert_eq!(view.test_region_start(), 1);
         // a feature cfg whose name merely contains "test" inside a
         // string literal does not open a test region
-        let view = scan("#[cfg(feature = \"loom-tests\")]\nfn b() {}\n");
-        assert_eq!(test_region_start(&view.code), view.code.len());
+        let view = CodeView::new("#[cfg(feature = \"loom-tests\")]\nmod b {}\n");
+        assert_eq!(view.test_region_start(), view.code.len());
+    }
+
+    #[test]
+    fn cfg_not_test_does_not_open_a_test_region() {
+        // the pre-lexer scanner matched any `#[cfg(...)]` mentioning the
+        // word `test`; the token-level parser reads the polarity
+        let view = CodeView::new("#[cfg(not(test))]\nmod imp;\nfn a() { let _ = 1; }\n");
+        assert_eq!(view.test_region_start(), view.code.len());
+        // ... so R3-R5 still apply to the not(test) half of a file
+        let src = "#[cfg(not(test))]\nmod imp;\nfn f() {\n    let t = std::thread::spawn(|| 1);\n    t.join().unwrap();\n}\n";
+        let v = lint_file("rust/src/graph/gen.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R3"]);
     }
 
     // ---- R1 / R2 ----
@@ -633,6 +424,16 @@ mod tests {
     }
 
     #[test]
+    fn r1_safety_prose_inside_a_raw_string_does_not_justify() {
+        // the old char-blanking scanner kept raw-string bodies only in
+        // the strings view, but a SAFETY inside one must never count as
+        // the comment R1 demands
+        let src = "fn f(p: *mut f64) {\n    let _doc = r#\"SAFETY: this is prose, not a review\"#;\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 1) };\n    s[0] = 0.0;\n}\n";
+        let v = lint_file("rust/src/sparse/csr.rs", src, &vocab());
+        assert_eq!(rules(&v), vec!["R1"]);
+    }
+
+    #[test]
     fn r2_unsafe_outside_the_whitelist_is_flagged() {
         let src = "fn f(p: *mut f64) {\n    // SAFETY: a comment does not make it allowed.\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 1) };\n    s[0] = 0.0;\n}\n";
         let v = lint_file("rust/src/eig/core.rs", src, &vocab());
@@ -642,6 +443,14 @@ mod tests {
     #[test]
     fn the_word_unsafe_in_comments_and_strings_is_ignored() {
         let src = "// unsafe is discussed here only\nfn f() { let _ = \"unsafe\"; }\n";
+        let v = lint_file("rust/src/eig/core.rs", src, &vocab());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r2_unsafe_inside_raw_strings_is_prose() {
+        // raw strings with any hash depth are literal bodies, not code
+        let src = "fn f() -> &'static str {\n    r##\"calling unsafe { transmute } would be wrong\"##\n}\n";
         let v = lint_file("rust/src/eig/core.rs", src, &vocab());
         assert!(v.is_empty(), "{v:?}");
     }

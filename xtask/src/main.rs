@@ -1,10 +1,14 @@
-//! `cargo xtask` — repo task runner. Two tasks: `lint`, the
-//! repo-invariant pass (rules R1-R5, see lint.rs), and `check-bench`,
-//! the schema check for the repo root's append-only `BENCH_*.json` perf
-//! trajectories (see check_bench.rs). Exit code 0 when clean, 1 with
-//! one line per violation otherwise.
+//! `cargo xtask` — repo task runner. Three tasks: `lint`, the
+//! line-invariant pass (rules R1-R5, see lint.rs), `analyze`, the
+//! token-level structural pass (rules R6-R9 over the in-tree Rust lexer,
+//! see lexer.rs + analyze.rs; also emits `target/analyze/modgraph.dot`),
+//! and `check-bench`, the schema check for the repo root's append-only
+//! `BENCH_*.json` perf trajectories (see check_bench.rs). Exit code 0
+//! when clean, 1 with one line per violation otherwise.
 
+mod analyze;
 mod check_bench;
+mod lexer;
 mod lint;
 
 use std::path::{Path, PathBuf};
@@ -29,6 +33,13 @@ fn usage() {
          \x20        R3  no thread::spawn outside util/threadpool.rs\n\
          \x20        R4  no HashMap/HashSet on determinism-critical paths\n\
          \x20        R5  ledger component keys match the documented vocabulary\n\
+         \x20 analyze\n\
+         \x20        run the token-level structural pass (and emit the module\n\
+         \x20        graph to target/analyze/modgraph.dot):\n\
+         \x20        R6  module imports match the declared layering DAG\n\
+         \x20        R7  float reductions/casts/comparators stay deterministic\n\
+         \x20        R8  env knobs are documented in README's knob table\n\
+         \x20        R9  library panics carry a PANICS: justification\n\
          \x20 check-bench [path]\n\
          \x20        schema-check an append-only BENCH_*.json perf trajectory\n\
          \x20        (default: <repo root>/BENCH_kernels.json)"
@@ -49,6 +60,24 @@ fn main() -> ExitCode {
                     eprintln!("{v}");
                 }
                 eprintln!("xtask lint: {} violation(s)", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        Some("analyze") => {
+            let root = repo_root();
+            let (violations, edges) = analyze::analyze_tree(&root);
+            match analyze::write_modgraph(&root, &edges) {
+                Ok(path) => println!("xtask analyze: module graph -> {}", path.display()),
+                Err(e) => eprintln!("xtask analyze: cannot write modgraph.dot: {e}"),
+            }
+            if violations.is_empty() {
+                println!("xtask analyze: tree clean (rules R6-R9, {} module edges)", edges.len());
+                ExitCode::SUCCESS
+            } else {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                eprintln!("xtask analyze: {} violation(s)", violations.len());
                 ExitCode::FAILURE
             }
         }
