@@ -1,0 +1,100 @@
+//! Streaming re-cluster service bench (repo extension — the ROADMAP
+//! "heavy traffic" scenario): run an SBM evolution trace through the
+//! warm-started [`StreamingSession`] with the cold comparison on, and
+//! report the per-step warm-vs-cold Davidson iteration margin, SpMM
+//! counts, billed comm and step quality (ARI vs the previous step).
+//!
+//! Shape to reproduce: Zhuzhunashvili & Knyazev (arXiv 1708.07481) —
+//! warm-started block eigensolvers need only a handful of iterations
+//! per streaming step, so amortized re-clusters are much cheaper than
+//! cold solves at every churn level the service is meant for.
+//!
+//! Each run appends one record per step to the repo root's append-only
+//! `BENCH_streaming.json` trajectory (`cargo xtask check-bench`
+//! validates the streaming record shape).
+//!
+//! [`StreamingSession`]: dist_chebdav::coordinator::StreamingSession
+
+mod common;
+
+use dist_chebdav::config::{ExperimentConfig, StreamConfig};
+use dist_chebdav::coordinator::{fmt_f, fmt_secs, streaming_scaling, Table};
+use dist_chebdav::util::Json;
+
+fn main() {
+    common::apply_run_defaults();
+    let n = common::bench_n(4_096);
+    common::banner(
+        "Streaming",
+        "warm-started re-solves take a handful of iterations per delta batch (1708.07481)",
+    );
+    let base = ExperimentConfig {
+        n,
+        k: 8,
+        k_b: 4,
+        m: 15,
+        tol: 1e-3,
+        seed: 31,
+        ..Default::default()
+    };
+    let cfg = StreamConfig {
+        base,
+        steps: 8,
+        fraction: 0.02,
+        same_block_prob: 0.9,
+        p: 4,
+        validate: true,
+        compare_cold: true,
+        ..StreamConfig::default()
+    };
+    let mut table = Table::new(
+        &format!(
+            "Streaming: warm vs cold per delta step, n~{n}, churn={}, p={}",
+            cfg.fraction, cfg.p
+        ),
+        &["step", "warm it", "cold it", "warm spmm", "cold spmm", "ARI prev", "wall"],
+    );
+    let rows = match streaming_scaling(&cfg) {
+        Ok(rows) => rows,
+        Err(e) => {
+            println!("streaming bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut records: Vec<Json> = Vec::new();
+    for r in &rows {
+        table.row(&[
+            r.step.to_string(),
+            r.warm_iters.to_string(),
+            r.cold_iters.to_string(),
+            r.spmm.to_string(),
+            r.cold_spmm.to_string(),
+            if r.ari_prev.is_finite() {
+                fmt_f(r.ari_prev, 4)
+            } else {
+                "-".into()
+            },
+            fmt_secs(r.wall_s),
+        ]);
+        records.push(r.to_json());
+    }
+    print!("{}", table.render());
+    common::save("streaming", &table);
+
+    let record = Json::obj()
+        .put("bench", "streaming")
+        .put("rev", common::git_rev())
+        .put("unix_time", common::unix_now() as i64)
+        .put(
+            "config",
+            Json::obj()
+                .put("n", n)
+                .put("threads", dist_chebdav::util::configured_threads())
+                .put("steps", cfg.steps)
+                .put("fraction", cfg.fraction)
+                .put("p", cfg.p)
+                .put("full", common::full()),
+        )
+        .put("records", records);
+    common::append_trajectory("streaming", &record);
+}

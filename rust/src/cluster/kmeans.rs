@@ -300,6 +300,32 @@ pub fn kmeans(x: &Mat, opts: &KmeansOptions) -> KmeansResult {
     best.unwrap()
 }
 
+/// Warm-started k-means: one Lloyd run seeded from caller-provided
+/// centroids (the previous streaming step's output) instead of
+/// k-means++ restarts. No seeding draws happen, so the only RNG use is
+/// the empty-cluster reseed path inside `finalize_centroids` — the
+/// exact draw pattern the distributed twin `dist::dist_kmeans_warm`
+/// replicates, which is what keeps the two bit-identical at p = 1.
+pub fn kmeans_warm(x: &Mat, opts: &KmeansOptions, init: &Mat) -> KmeansResult {
+    assert!(opts.k >= 1 && x.rows >= opts.k);
+    assert_eq!(init.rows, opts.k, "warm-start centroid count != k");
+    assert_eq!(init.cols, x.cols, "warm-start centroid dim != data dim");
+    let (n, k, d) = (x.rows, opts.k, x.cols);
+    let mut rng = Rng::new(opts.seed);
+    let engine = AssignEngine::resolve(x, k);
+    let mut s = KmeansScratch::new(n, k, d);
+    let mut cent = init.clone();
+    // s.assign is freshly zeroed — the changed-detection baseline
+    // lloyd_into documents.
+    let (inertia, iterations) = lloyd_into(x, &mut cent, opts.max_iters, &mut rng, &engine, &mut s);
+    KmeansResult {
+        assignments: s.assign.clone(),
+        centroids: cent,
+        inertia,
+        iterations,
+    }
+}
+
 /// Normalize one row in place per the step-4 convention: scale to unit
 /// L2 norm, mapping degenerate rows (norm <= 1e-12) to the exact zero
 /// row. Shared by the sequential `row_normalize` and the distributed

@@ -8,7 +8,7 @@ pub mod metrics;
 pub mod pipeline;
 
 pub use assign::{assign_route, set_assign_route, AssignKernel, AssignRoute, NativeAssign};
-pub use kmeans::{kmeans, row_normalize, KmeansOptions, KmeansResult};
+pub use kmeans::{kmeans, kmeans_warm, row_normalize, KmeansOptions, KmeansResult};
 pub use metrics::{adjusted_rand_index, normalized_mutual_information};
 pub use pipeline::{
     default_k, quality, spectral_clustering, spectral_clustering_op, ClusteringRun, Eigensolver,

@@ -116,6 +116,81 @@ impl ExperimentConfig {
     }
 }
 
+/// Evolution-trace description consumed by `chebdav serve` and the
+/// `streaming_scaling` experiment: the base experiment config (graph,
+/// solver, comm model, runtime knobs) plus the `[stream]` section that
+/// describes the churn process and the service route.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Graph/solver/comm/runtime settings shared with the batch CLI.
+    pub base: ExperimentConfig,
+    /// Delta batches applied after the initial snapshot.
+    pub steps: usize,
+    /// Fraction of edges rewired per step (`graph::streaming::evolve`).
+    pub fraction: f64,
+    /// Probability a rewire stays within its ground-truth block.
+    pub same_block_prob: f64,
+    /// Simulated rank count for the distributed route; 1 keeps the
+    /// grid degenerate (collectives are free, outputs bit-match the
+    /// sequential pipeline).
+    pub p: usize,
+    /// `"dist"` (default) solves on the rank grid with billed
+    /// collectives; `"seq"` uses the in-process sequential pipeline.
+    pub route: String,
+    /// Assert the patched Laplacian bit-equals a from-scratch rebuild
+    /// after every delta batch (the equivalence assertion path).
+    pub validate: bool,
+    /// Also run a cold solve per step and report the iteration margin.
+    pub compare_cold: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            base: ExperimentConfig::default(),
+            steps: 20,
+            fraction: 0.02,
+            same_block_prob: 0.9,
+            p: 1,
+            route: "dist".to_string(),
+            validate: false,
+            compare_cold: true,
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Read a stream config (base sections + `[stream]`) from a file.
+    pub fn from_file(path: &Path) -> Result<StreamConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text; missing keys take the defaults above.
+    pub fn from_toml(text: &str) -> Result<StreamConfig> {
+        let base = ExperimentConfig::from_toml(text)?;
+        let t = Toml::parse(text)?;
+        let d = StreamConfig::default();
+        Ok(StreamConfig {
+            base,
+            steps: t.get_or("stream", "steps", d.steps, |v| {
+                v.as_int().map(|i| i.max(0) as usize)
+            }),
+            fraction: t.get_or("stream", "fraction", d.fraction, |v| v.as_float()),
+            same_block_prob: t.get_or("stream", "same_block_prob", d.same_block_prob, |v| {
+                v.as_float()
+            }),
+            p: t.get_or("stream", "p", d.p, |v| v.as_int().map(|i| i.max(1) as usize)),
+            route: t.get_or("stream", "route", d.route.clone(), |v| {
+                v.as_str().map(String::from)
+            }),
+            validate: t.get_or("stream", "validate", d.validate, |v| v.as_bool()),
+            compare_cold: t.get_or("stream", "compare_cold", d.compare_cold, |v| v.as_bool()),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +237,39 @@ seq_ranks = true
         assert_eq!(c.assign, "pjrt");
         assert_eq!(c.threads, 3);
         assert!(c.seq_ranks);
+    }
+
+    #[test]
+    fn stream_section_roundtrip_and_defaults() {
+        let text = r#"
+name = "stream-smoke"
+[graph]
+n = 4096
+[stream]
+steps = 5
+fraction = 0.1
+same_block_prob = 0.75
+p = 4
+route = "seq"
+validate = true
+compare_cold = false
+"#;
+        let c = StreamConfig::from_toml(text).unwrap();
+        assert_eq!(c.base.name, "stream-smoke");
+        assert_eq!(c.base.n, 4096);
+        assert_eq!(c.steps, 5);
+        assert_eq!(c.fraction, 0.1);
+        assert_eq!(c.same_block_prob, 0.75);
+        assert_eq!(c.p, 4);
+        assert_eq!(c.route, "seq");
+        assert!(c.validate);
+        assert!(!c.compare_cold);
+        let d = StreamConfig::from_toml("name = \"x\"").unwrap();
+        assert_eq!(d.steps, 20);
+        assert_eq!(d.p, 1);
+        assert_eq!(d.route, "dist");
+        assert!(!d.validate);
+        assert!(d.compare_cold);
     }
 
     #[test]

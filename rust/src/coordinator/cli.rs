@@ -6,16 +6,18 @@
 //! chebdav cluster [same flags]               # Algorithm 1, sequential
 //! chebdav scale   <config.toml>              # Fig. 7-style sweep
 //! chebdav cluster-scaling <config.toml>      # Fig. 10-style e2e sweep
+//! chebdav serve   <stream.toml>              # streaming re-cluster service
 //! chebdav table2  [--n N]                    # matrix properties
 //! chebdav info                               # runtime / artifact info
 //! ```
 
 use super::experiments::{self, ledger_to_row};
 use super::report::{fmt_f, fmt_secs, Table};
+use super::streaming::open_stream;
 use crate::cluster::{quality, spectral_clustering, Eigensolver};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, StreamConfig};
 use crate::eig::{bchdav, BchdavOptions, SpmmOp};
-use crate::graph::table2_matrix;
+use crate::graph::{table2_matrix, EdgeDelta};
 use crate::runtime::{PjrtOperator, PjrtRuntime};
 use anyhow::{bail, Context, Result};
 
@@ -86,6 +88,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "cluster" => cmd_cluster(&args),
         "scale" => cmd_scale(&args),
         "cluster-scaling" => cmd_cluster_scaling(&args),
+        "serve" => cmd_serve(&args),
         "table2" => cmd_table2(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -107,6 +110,14 @@ USAGE:
   chebdav cluster-scaling <config.toml> [--threads W]
                 end-to-end Algorithm 1 on the rank grid (eigensolver +
                 embedding + distributed K-means), per-stage breakdown
+  chebdav serve   <stream.toml> [--steps S --p P --out FILE --no-timing --validate]
+                streaming re-cluster service: apply the [stream]-described
+                evolution trace delta-by-delta, warm-starting the Davidson
+                core from the previous Ritz panel and K-means from the
+                previous centroids; one JSONL row per step on stdout
+                (--no-timing drops the wall_s field, making the output a
+                byte-exact function of the config; --validate asserts the
+                patched Laplacian equals a from-scratch rebuild each step)
   chebdav table2  [--n N --seed S]
   chebdav info
 
@@ -282,6 +293,53 @@ fn cmd_cluster_scaling(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::Write;
+    let path = args
+        .positional
+        .first()
+        .context("usage: chebdav serve <stream.toml> [--steps S --p P --out FILE --no-timing]")?;
+    let mut cfg = StreamConfig::from_file(std::path::Path::new(path))?;
+    cfg.steps = args.get("steps", cfg.steps);
+    cfg.p = args.get("p", cfg.p);
+    cfg.base.threads = args.get("threads", cfg.base.threads);
+    if args.has("validate") {
+        cfg.validate = true;
+    }
+    experiments::apply_run_settings(&cfg.base);
+    let with_timing = !args.has("no-timing");
+    // Banner on stderr: stdout stays pure JSONL.
+    eprintln!(
+        "serving `{}` — {} n={} route={} p={} steps={} churn={} validate={}",
+        cfg.base.name,
+        cfg.base.graph,
+        cfg.base.n,
+        cfg.route,
+        cfg.p,
+        cfg.steps,
+        cfg.fraction,
+        cfg.validate
+    );
+    let mut sink: Box<dyn Write> = match args.flags.get("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p).with_context(|| format!("creating {p}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let (mut trace, mut session) = open_stream(&cfg)?;
+    for step in 0..=cfg.steps {
+        let delta = if step == 0 {
+            EdgeDelta::default()
+        } else {
+            trace.advance(step)
+        };
+        let outcome = session.step(&delta, cfg.compare_cold);
+        writeln!(sink, "{}", outcome.report.to_json(with_timing).render())?;
+        sink.flush()?;
+    }
     Ok(())
 }
 

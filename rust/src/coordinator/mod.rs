@@ -4,6 +4,7 @@
 pub mod cli;
 pub mod experiments;
 pub mod report;
+pub mod streaming;
 
 pub use experiments::{
     apply_run_settings, cluster_scaling, component_scaling, dist_run, dist_scaling_sweep,
@@ -11,3 +12,7 @@ pub use experiments::{
     DistRunRow, E2eScalingRow, QualityRow, Table1Row, Table2Row, VsParsecRow,
 };
 pub use report::{append_bench_record, fmt_f, fmt_secs, save_json, Table};
+pub use streaming::{
+    open_stream, run_stream, streaming_scaling, EvolutionTrace, SolveSpec, StepOutcome,
+    StepReport, StreamRoute, StreamingScalingRow, StreamingSession,
+};

@@ -447,6 +447,38 @@ pub fn dist_kmeans(
     }
 }
 
+/// Warm-started distributed K-means: one Lloyd run from caller-provided
+/// centroids (the previous streaming step's replicated output) instead
+/// of seeding + restarts. Bills the one d-words-per-centroid broadcast
+/// that replicates the warm panel across ranks, then the usual Lloyd
+/// collectives. Mirrors `cluster::kmeans_warm` draw-for-draw (the only
+/// draws either side makes are the empty-cluster reseeds inside the
+/// shared `finalize_centroids`), so outputs are bit-identical to the
+/// sequential warm run at p = 1.
+pub fn dist_kmeans_warm(
+    x: &Mat,
+    opts: &KmeansOptions,
+    init: &Mat,
+    p: usize,
+    cost: &CostModel,
+    led: &mut Ledger,
+) -> DistKmeansResult {
+    assert!(opts.k >= 1 && x.rows >= opts.k);
+    assert!(init.rows == opts.k && init.cols == x.cols, "warm-start centroid shape");
+    let mut rng = Rng::new(opts.seed);
+    let engine = DistAssignEngine::resolve(x, opts.k, p, led);
+    led.charge("kmeans", cost.bcast(opts.k * x.cols, p));
+    let (assignments, centroids, inertia, iterations) =
+        dist_lloyd(x, init.clone(), opts.max_iters, &mut rng, p, cost, led, &engine);
+    DistKmeansResult {
+        assignments,
+        centroids,
+        inertia,
+        iterations,
+        rng_draws: rng.draws(),
+    }
+}
+
 /// What the end-to-end distributed Algorithm 1 returns: clustering
 /// output, eigensolver output, both RNG draw counts (for the
 /// parallel-vs-sequential rank-execution identity tests), and the one

@@ -57,8 +57,8 @@ pub mod tsqr;
 
 pub use bchdav::{dist_bchdav, laplacian_opts, DistBackend, DistBchdavResult};
 pub use cluster::{
-    dist_kmeans, dist_row_normalize, dist_spectral_clustering, DistClusteringResult,
-    DistKmeansResult,
+    dist_kmeans, dist_kmeans_warm, dist_row_normalize, dist_spectral_clustering,
+    DistClusteringResult, DistKmeansResult,
 };
 pub use filter::dist_cheb_filter;
 pub use matrix::DistMatrix;

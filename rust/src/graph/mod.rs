@@ -10,6 +10,7 @@ pub mod sbm;
 pub mod streaming;
 
 pub use pa::PaParams;
+pub use streaming::{diff_edges, evolve, EdgeDelta};
 pub use rmat::RmatParams;
 pub use sbm::{Category, Overlap, SbmGraph, SbmParams, SizeVariation};
 

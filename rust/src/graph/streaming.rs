@@ -18,6 +18,14 @@ use crate::util::Rng;
 /// not collapse them. The output is deduplicated on the undirected
 /// (min, max) key, order-preserving (first occurrence wins) — so a
 /// duplicate already present in the *input* is collapsed too.
+///
+/// The returned list never contains self-loops either. Rewiring keeps
+/// `u` and falls back to the original edge when the resampled endpoint
+/// collides with `u`, so a rewire can't *create* a (u, u) pair — but an
+/// input self-loop used to survive both the pass-through branch and
+/// that fallback. Self-loops are now dropped up front (the Laplacian
+/// builder ignores them anyway, so this only changes what downstream
+/// delta extraction sees).
 pub fn evolve(
     n: usize,
     edges: &[(u32, u32)],
@@ -34,6 +42,9 @@ pub fn evolve(
     }
     let mut out = Vec::with_capacity(edges.len());
     for &(u, v) in edges {
+        if u == v {
+            continue;
+        }
         if rng.f64() >= fraction {
             out.push((u, v));
             continue;
@@ -59,6 +70,63 @@ fn dedup_undirected(mut edges: Vec<(u32, u32)>) -> Vec<(u32, u32)> {
     let mut seen = std::collections::HashSet::with_capacity(edges.len());
     edges.retain(|&(u, v)| seen.insert(if u < v { (u, v) } else { (v, u) }));
     edges
+}
+
+/// An undirected edge-churn batch: what the streaming session applies
+/// per step. Both lists hold canonical `(min, max)` pairs with no
+/// self-loops and no duplicates; a batch is applied removals-first,
+/// and entries that don't change membership (removing an absent edge,
+/// adding a present one) are no-ops at the consumer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EdgeDelta {
+    /// Edges present in the new snapshot but not the old one.
+    pub added: Vec<(u32, u32)>,
+    /// Edges present in the old snapshot but not the new one.
+    pub removed: Vec<(u32, u32)>,
+}
+
+impl EdgeDelta {
+    /// True when the batch changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty()
+    }
+
+    /// Total number of edge mutations in the batch.
+    pub fn len(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+}
+
+/// Extract the [`EdgeDelta`] between two edge-list snapshots.
+///
+/// Both inputs are canonicalized first (undirected `(min, max)` key,
+/// self-loops dropped, duplicates collapsed), so the delta describes
+/// set membership, not list layout. Output order follows the input
+/// lists (first occurrence wins) and is therefore deterministic for
+/// deterministic inputs.
+pub fn diff_edges(old: &[(u32, u32)], new: &[(u32, u32)]) -> EdgeDelta {
+    let canon = |edges: &[(u32, u32)]| -> Vec<(u32, u32)> {
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        let mut out = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            let k = if u < v { (u, v) } else { (v, u) };
+            if seen.insert(k) {
+                out.push(k);
+            }
+        }
+        out
+    };
+    let old_c = canon(old);
+    let new_c = canon(new);
+    let old_set: std::collections::HashSet<(u32, u32)> = old_c.iter().copied().collect();
+    let new_set: std::collections::HashSet<(u32, u32)> = new_c.iter().copied().collect();
+    EdgeDelta {
+        added: new_c.iter().copied().filter(|k| !old_set.contains(k)).collect(),
+        removed: old_c.iter().copied().filter(|k| !new_set.contains(k)).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +182,44 @@ mod tests {
             );
             assert!(e2.iter().all(|&(u, v)| u != v), "self-loop at fraction {fraction}");
         }
+    }
+
+    #[test]
+    fn rewires_never_emit_self_loops_and_input_self_loops_are_dropped() {
+        // Adversarial rewire setup: every edge rewired (fraction 1.0),
+        // always same-block, with single-member blocks — the resample
+        // can only pick u itself, so the fallback branch fires on every
+        // edge. Before the fix, an input self-loop survived both the
+        // pass-through and the fallback; now it must vanish while the
+        // fallback still restores real edges.
+        let labels: Vec<u32> = (0..4).collect(); // 4 singleton blocks
+        let edges = vec![(0u32, 1u32), (2, 2), (1, 3)];
+        for seed in 0..32 {
+            let out = evolve(4, &edges, &labels, 1.0, 1.0, seed);
+            assert!(out.iter().all(|&(u, v)| u != v), "self-loop at seed {seed}");
+            // Singleton blocks force the fallback, so the real edges
+            // must survive verbatim and the self-loop must be gone.
+            assert_eq!(out, vec![(0, 1), (1, 3)]);
+        }
+        // And at fraction 0 the pass-through branch also drops it.
+        let out = evolve(4, &edges, &labels, 0.0, 1.0, 7);
+        assert_eq!(out, vec![(0, 1), (1, 3)]);
+    }
+
+    #[test]
+    fn diff_edges_membership_and_canonicalization() {
+        let old = vec![(0u32, 1u32), (1, 2), (3, 2)];
+        // (2,3) is (3,2) reversed; (1,1) is a self-loop; (0,1) repeats.
+        let new = vec![(2u32, 3u32), (1, 1), (0, 1), (1, 0), (0, 2)];
+        let d = diff_edges(&old, &new);
+        assert_eq!(d.added, vec![(0, 2)]);
+        assert_eq!(d.removed, vec![(1, 2)]);
+        assert_eq!(d.len(), 2);
+        assert!(!d.is_empty());
+        assert!(diff_edges(&new, &new).is_empty());
+        // Orientation and duplicates never show up as churn.
+        let flipped: Vec<(u32, u32)> = old.iter().map(|&(u, v)| (v, u)).collect();
+        assert!(diff_edges(&old, &flipped).is_empty());
     }
 
     #[test]

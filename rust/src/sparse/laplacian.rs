@@ -50,6 +50,261 @@ pub fn avg_degree(lap: &Csr) -> f64 {
     offdiag as f64 / lap.nrows as f64
 }
 
+/// Fallback rule for [`IncrementalLaplacian::apply_delta`]: when a
+/// delta batch touches more than this fraction of the rows, patching
+/// copies most of the matrix anyway, so the update falls back to a
+/// from-scratch [`normalized_laplacian`] rebuild.
+pub const REBUILD_ROW_FRACTION: f64 = 0.5;
+
+/// Outcome of one [`IncrementalLaplacian::apply_delta`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LapUpdate {
+    /// `rows` rows were regenerated; every other row was spliced from
+    /// the previous matrix byte-for-byte.
+    Patched {
+        /// Number of rows rebuilt by the patch.
+        rows: usize,
+    },
+    /// The affected-row set crossed [`REBUILD_ROW_FRACTION`] and the
+    /// whole Laplacian was rebuilt from scratch.
+    Rebuilt,
+}
+
+/// Normalized Laplacian maintained under edge churn.
+///
+/// Holds the canonical adjacency (sorted neighbor lists, self-loops
+/// and duplicates collapsed — the same canonical form
+/// [`normalized_laplacian`] reduces its input to) plus the cached
+/// `D^{-1/2}` diagonal, and patches only the affected rows per delta
+/// batch. The patched matrix is **bit-identical** to a from-scratch
+/// rebuild (pinned by `tests/streaming_prop.rs`):
+///
+/// * a CSR row of `A = I - D^{-1/2} S D^{-1/2}` is exactly the sorted
+///   neighbor list with the diagonal `1.0` spliced in column order —
+///   the layout `Csr::from_coo`'s `(row, col)` sort produces;
+/// * the builder computes each off-diagonal weight once as
+///   `(-dinv_sqrt[min]) * dinv_sqrt[max]` and reuses it for both
+///   orientations, while the row patch computes
+///   `(-dinv_sqrt[row]) * dinv_sqrt[col]`; IEEE-754 multiplication is
+///   commutative and sign-symmetric, so both orientations round to the
+///   same bits;
+/// * `dinv_sqrt` entries are recomputed from the integer degree with
+///   the builder's exact expression, and rows whose degree *and*
+///   neighbor values are untouched are copied verbatim.
+#[derive(Clone, Debug)]
+pub struct IncrementalLaplacian {
+    n: usize,
+    /// Sorted neighbor lists, both directions, canonical.
+    adj: Vec<Vec<u32>>,
+    /// Cached `1/sqrt(degree)` (0.0 for isolated vertices).
+    dinv_sqrt: Vec<f64>,
+    lap: Csr,
+}
+
+impl IncrementalLaplacian {
+    /// Build the initial state from an edge list (canonicalized the
+    /// same way [`normalized_laplacian`] canonicalizes it).
+    pub fn new(n: usize, edges: &[(u32, u32)]) -> IncrementalLaplacian {
+        let mut es: Vec<(u32, u32)> = edges
+            .iter()
+            .filter(|&&(u, v)| u != v)
+            .map(|&(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        es.sort_unstable();
+        es.dedup();
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in &es {
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        for list in &mut adj {
+            list.sort_unstable();
+        }
+        let dinv_sqrt = adj.iter().map(|l| Self::scale(l.len())).collect();
+        let lap = normalized_laplacian(n, &es);
+        IncrementalLaplacian { n, adj, dinv_sqrt, lap }
+    }
+
+    fn scale(degree: usize) -> f64 {
+        if degree == 0 {
+            0.0
+        } else {
+            1.0 / (degree as f64).sqrt()
+        }
+    }
+
+    /// The current Laplacian.
+    pub fn lap(&self) -> &Csr {
+        &self.lap
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Current degree of vertex `u`.
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Canonical `(min, max)`-sorted edge list of the current graph.
+    pub fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut es = Vec::new();
+        for (u, list) in self.adj.iter().enumerate() {
+            for &v in list {
+                if (u as u32) < v {
+                    es.push((u as u32, v));
+                }
+            }
+        }
+        es
+    }
+
+    /// Apply one delta batch: removals first, then additions. Removing
+    /// an absent edge or adding a present one (or a self-loop) is a
+    /// no-op. Returns whether the update patched rows or fell back to
+    /// a full rebuild.
+    pub fn apply_delta(&mut self, removed: &[(u32, u32)], added: &[(u32, u32)]) -> LapUpdate {
+        // Endpoints whose degree changed (the set D in the row-set
+        // argument below).
+        let mut deg_changed = vec![false; self.n];
+        let mut effective = 0usize;
+        for &(u, v) in removed {
+            if self.adj_update(u, v, false) {
+                deg_changed[u as usize] = true;
+                deg_changed[v as usize] = true;
+                effective += 1;
+            }
+        }
+        for &(u, v) in added {
+            if self.adj_update(u, v, true) {
+                deg_changed[u as usize] = true;
+                deg_changed[v as usize] = true;
+                effective += 1;
+            }
+        }
+        if effective == 0 {
+            return LapUpdate::Patched { rows: 0 };
+        }
+        for u in 0..self.n {
+            if deg_changed[u] {
+                self.dinv_sqrt[u] = Self::scale(self.adj[u].len());
+            }
+        }
+        // Affected rows R = D ∪ (current neighbors of D). A row r ∉ D
+        // kept its neighbor set (every effective mutation puts both
+        // endpoints in D), so its values can only change through
+        // columns c ∈ D — i.e. r is a current neighbor of some member
+        // of D. Rows outside R are bitwise untouched.
+        let mut affected = deg_changed.clone();
+        for (u, flag) in deg_changed.iter().enumerate() {
+            if *flag {
+                for &c in &self.adj[u] {
+                    affected[c as usize] = true;
+                }
+            }
+        }
+        let rows = affected.iter().filter(|&&a| a).count();
+        if (rows as f64) > REBUILD_ROW_FRACTION * self.n as f64 {
+            self.lap = normalized_laplacian(self.n, &self.edge_list());
+            return LapUpdate::Rebuilt;
+        }
+        self.patch_rows(&affected);
+        LapUpdate::Patched { rows }
+    }
+
+    /// Bitwise-compare the maintained matrix against a from-scratch
+    /// rebuild of the current edge list. The serve loop's `validate`
+    /// mode asserts this every step; the property tests assert it
+    /// across random delta batches.
+    pub fn verify_equivalence(&self) -> bool {
+        let fresh = normalized_laplacian(self.n, &self.edge_list());
+        self.lap.indptr == fresh.indptr
+            && self.lap.indices == fresh.indices
+            && self.lap.values.len() == fresh.values.len()
+            && self
+                .lap
+                .values
+                .iter()
+                .zip(&fresh.values)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Insert (`insert = true`) or remove one undirected edge from the
+    /// adjacency lists; returns false for no-ops (self-loop, absent
+    /// removal, present addition).
+    fn adj_update(&mut self, u: u32, v: u32, insert: bool) -> bool {
+        if u == v || (u as usize) >= self.n || (v as usize) >= self.n {
+            return false;
+        }
+        match (self.adj[u as usize].binary_search(&v), insert) {
+            (Ok(_), true) | (Err(_), false) => false,
+            (Err(i), true) => {
+                self.adj[u as usize].insert(i, v);
+                // PANICS: the lists are kept mirror-symmetric, so v's
+                // list cannot already contain u when u's did not
+                // contain v.
+                let j = self.adj[v as usize].binary_search(&u).unwrap_err();
+                self.adj[v as usize].insert(j, u);
+                true
+            }
+            (Ok(i), false) => {
+                self.adj[u as usize].remove(i);
+                // PANICS: mirror symmetry — u is in v's list whenever v
+                // was in u's.
+                let j = self.adj[v as usize].binary_search(&u).unwrap();
+                self.adj[v as usize].remove(j);
+                true
+            }
+        }
+    }
+
+    /// Regenerate the rows marked in `affected` and splice every other
+    /// row's index/value slices from the previous matrix.
+    fn patch_rows(&mut self, affected: &[bool]) {
+        let old = &self.lap;
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(old.indices.len());
+        let mut values: Vec<f64> = Vec::with_capacity(old.values.len());
+        indptr.push(0usize);
+        for r in 0..self.n {
+            if affected[r] {
+                // Sorted neighbors with the diagonal 1.0 spliced in
+                // column order — exactly `from_coo`'s row layout.
+                let dr = self.dinv_sqrt[r];
+                let mut placed_diag = false;
+                for &c in &self.adj[r] {
+                    if !placed_diag && (c as usize) > r {
+                        indices.push(r as u32);
+                        values.push(1.0);
+                        placed_diag = true;
+                    }
+                    indices.push(c);
+                    values.push(-dr * self.dinv_sqrt[c as usize]);
+                }
+                if !placed_diag {
+                    indices.push(r as u32);
+                    values.push(1.0);
+                }
+            } else {
+                let lo = old.indptr[r];
+                let hi = old.indptr[r + 1];
+                indices.extend_from_slice(&old.indices[lo..hi]);
+                values.extend_from_slice(&old.values[lo..hi]);
+            }
+            indptr.push(indices.len());
+        }
+        self.lap = Csr {
+            nrows: self.n,
+            ncols: self.n,
+            indptr,
+            indices,
+            values,
+        };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +358,36 @@ mod tests {
         let a = normalized_laplacian(3, &[(0, 1), (1, 0), (2, 2), (1, 2)]);
         let b = normalized_laplacian(3, &[(0, 1), (1, 2)]);
         assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    fn incremental_matches_rebuild_on_small_mutations() {
+        let edges = [(0u32, 1u32), (1, 2), (2, 3), (3, 0), (0, 2)];
+        let mut inc = IncrementalLaplacian::new(8, &edges);
+        assert!(inc.verify_equivalence());
+        // add an edge touching the isolated vertices
+        let up = inc.apply_delta(&[], &[(4, 5)]);
+        assert_eq!(up, LapUpdate::Patched { rows: 2 });
+        assert!(inc.verify_equivalence());
+        // remove one, add one in the same batch
+        let up = inc.apply_delta(&[(0, 2)], &[(1, 3)]);
+        assert!(matches!(up, LapUpdate::Patched { .. }));
+        assert!(inc.verify_equivalence());
+        // no-op batch: absent removal + present addition + self-loop
+        let up = inc.apply_delta(&[(0, 5)], &[(4, 5), (2, 2)]);
+        assert_eq!(up, LapUpdate::Patched { rows: 0 });
+        assert!(inc.verify_equivalence());
+    }
+
+    #[test]
+    fn incremental_rebuild_fallback_fires_on_wide_batches() {
+        // a star delta touches the hub plus every leaf => all rows
+        let n = 12;
+        let mut inc = IncrementalLaplacian::new(n, &[(0, 1)]);
+        let batch: Vec<(u32, u32)> = (2..n as u32).map(|v| (0, v)).collect();
+        let up = inc.apply_delta(&[], &batch);
+        assert_eq!(up, LapUpdate::Rebuilt);
+        assert!(inc.verify_equivalence());
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod laplacian;
 pub mod partition;
 
 pub use csr::Csr;
-pub use laplacian::{avg_degree, normalized_laplacian};
+pub use laplacian::{avg_degree, normalized_laplacian, IncrementalLaplacian, LapUpdate};
 pub use partition::{split_ranges, u_block_of, v_block_of, Partition1D, Partition2D};

@@ -1,0 +1,110 @@
+//! Determinism pins for the streaming re-cluster service.
+//!
+//! 1. A whole session on the distributed route is *observationally
+//!    identical* between parallel rank execution and the sequential
+//!    escape hatch (`CHEBDAV_SEQ_RANKS=1`): eigenvalues, assignments
+//!    and centroids bit-for-bit, both RNG draw counts, and the modeled
+//!    communication ledger, at p = 1 and p = 4 — the streaming
+//!    extension of `tests/rank_parallel.rs`.
+//! 2. Replaying the same trace from the same seed yields byte-identical
+//!    JSONL (the `to_json(false)` rendering; measured `wall_s` is the
+//!    one field outside the guarantee).
+//!
+//! This binary owns the process-global `set_seq_ranks` toggle for its
+//! process; tests serialize on `MODE_LOCK`.
+
+use dist_chebdav::config::{ExperimentConfig, StreamConfig};
+use dist_chebdav::coordinator::run_stream;
+use dist_chebdav::mpi_sim::set_seq_ranks;
+use std::sync::Mutex;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn det_cfg(p: usize) -> StreamConfig {
+    let base = ExperimentConfig {
+        n: 600,
+        k: 6,
+        k_b: 3,
+        m: 11,
+        tol: 1e-3,
+        seed: 23,
+        ..ExperimentConfig::default()
+    };
+    StreamConfig {
+        base,
+        steps: 3,
+        fraction: 0.02,
+        same_block_prob: 0.9,
+        p,
+        route: "dist".into(),
+        validate: false,
+        compare_cold: false,
+    }
+}
+
+#[test]
+fn streaming_session_bit_identical_across_rank_modes() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for p in [1usize, 4] {
+        let cfg = det_cfg(p);
+        set_seq_ranks(Some(true));
+        let seq = run_stream(&cfg).unwrap();
+        set_seq_ranks(Some(false));
+        let par = run_stream(&cfg).unwrap();
+        set_seq_ranks(None);
+        assert_eq!(seq.len(), par.len(), "p={p}");
+        for (step, (s, r)) in seq.iter().zip(par.iter()).enumerate() {
+            // solver output bit-for-bit
+            assert_eq!(s.eigenvalues.len(), r.eigenvalues.len(), "p={p} step {step}");
+            for (i, (a, b)) in s.eigenvalues.iter().zip(r.eigenvalues.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "p={p} step {step} eigenvalue {i}");
+            }
+            assert_eq!(s.assignments, r.assignments, "p={p} step {step} assignments");
+            assert_eq!(
+                (s.centroids.rows, s.centroids.cols),
+                (r.centroids.rows, r.centroids.cols),
+                "p={p} step {step}"
+            );
+            for (i, (a, b)) in s.centroids.data.iter().zip(r.centroids.data.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "p={p} step {step} centroid entry {i}");
+            }
+
+            // identical control flow and RNG stream consumption
+            assert_eq!(s.report.iterations, r.report.iterations, "p={p} step {step}");
+            assert_eq!(s.report.spmm, r.report.spmm, "p={p} step {step}");
+            assert_eq!(s.report.eig_rng_draws, r.report.eig_rng_draws, "p={p} step {step}");
+            assert_eq!(
+                s.report.kmeans_rng_draws, r.report.kmeans_rng_draws,
+                "p={p} step {step}"
+            );
+
+            // modeled communication agrees exactly; measured compute is
+            // wall-clock and exempt
+            assert_eq!(s.ledger.comm, r.ledger.comm, "p={p} step {step} comm map");
+            assert_eq!(s.ledger.messages, r.ledger.messages, "p={p} step {step} messages map");
+            assert_eq!(s.ledger.words, r.ledger.words, "p={p} step {step} words map");
+
+            // the rendered service row (timing off) is identical too
+            assert_eq!(
+                s.report.to_json(false).render(),
+                r.report.to_json(false).render(),
+                "p={p} step {step} JSONL row"
+            );
+        }
+    }
+}
+
+#[test]
+fn replaying_a_trace_yields_byte_identical_jsonl() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = det_cfg(4);
+    let render = |outs: &[dist_chebdav::coordinator::StepOutcome]| {
+        outs.iter()
+            .map(|o| o.report.to_json(false).render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let a = render(&run_stream(&cfg).unwrap());
+    let b = render(&run_stream(&cfg).unwrap());
+    assert_eq!(a.into_bytes(), b.into_bytes(), "replay diverged");
+}

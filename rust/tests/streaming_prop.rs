@@ -1,0 +1,161 @@
+//! Property pins for the incremental Laplacian: after any sequence of
+//! delta batches, the patched matrix must be *bit-equal* to a
+//! from-scratch `normalized_laplacian` rebuild of the current edge
+//! list, and the maintained edge list must match an independently
+//! maintained canonical edge-set model.
+//!
+//! Batch semantics under test (documented on `apply_delta`): removals
+//! apply before additions; self-loops, duplicate/parallel edges,
+//! absent removals and present additions are no-ops.
+
+use dist_chebdav::sparse::{normalized_laplacian, IncrementalLaplacian, LapUpdate};
+use dist_chebdav::util::Rng;
+
+/// Canonical form of one undirected edge; `None` drops self-loops.
+fn canon(u: u32, v: u32) -> Option<(u32, u32)> {
+    if u == v {
+        None
+    } else {
+        Some((u.min(v), u.max(v)))
+    }
+}
+
+/// Reference model: a sorted canonical edge set with the same batch
+/// semantics as `apply_delta` (removals first, then additions).
+fn model_apply(model: &mut Vec<(u32, u32)>, removed: &[(u32, u32)], added: &[(u32, u32)]) {
+    for &(u, v) in removed {
+        if let Some(e) = canon(u, v) {
+            if let Ok(i) = model.binary_search(&e) {
+                model.remove(i);
+            }
+        }
+    }
+    for &(u, v) in added {
+        if let Some(e) = canon(u, v) {
+            if let Err(i) = model.binary_search(&e) {
+                model.insert(i, e);
+            }
+        }
+    }
+}
+
+/// The core pin: maintained CSR bit-equal to a fresh rebuild, and the
+/// maintained edge list equal to the reference model.
+fn assert_matches(inc: &IncrementalLaplacian, model: &[(u32, u32)]) {
+    assert_eq!(inc.edge_list(), model, "edge list diverged from the set model");
+    let fresh = normalized_laplacian(inc.n(), model);
+    let lap = inc.lap();
+    assert_eq!(lap.indptr, fresh.indptr, "indptr diverged");
+    assert_eq!(lap.indices, fresh.indices, "indices diverged");
+    assert_eq!(lap.values.len(), fresh.values.len());
+    for (i, (a, b)) in lap.values.iter().zip(fresh.values.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "value {i}: {a} vs {b}");
+    }
+    assert!(inc.verify_equivalence());
+}
+
+#[test]
+fn random_delta_batches_stay_bit_equal_to_rebuild() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0xde17a ^ seed);
+        let n = 48usize;
+        // random initial graph, ~3n candidate edges
+        let mut init = Vec::new();
+        for _ in 0..3 * n {
+            init.push((rng.below(n) as u32, rng.below(n) as u32));
+        }
+        let mut model = Vec::new();
+        model_apply(&mut model, &[], &init);
+        let mut inc = IncrementalLaplacian::new(n, &init);
+        assert_matches(&inc, &model);
+        for _batch in 0..25 {
+            // removals sampled from the current edge set, additions
+            // uniform (so some collide with present edges — no-ops)
+            let mut removed = Vec::new();
+            for _ in 0..rng.below(6) {
+                if !model.is_empty() {
+                    removed.push(model[rng.below(model.len())]);
+                }
+            }
+            let mut added = Vec::new();
+            for _ in 0..rng.below(8) {
+                added.push((rng.below(n) as u32, rng.below(n) as u32));
+            }
+            let update = inc.apply_delta(&removed, &added);
+            model_apply(&mut model, &removed, &added);
+            match update {
+                LapUpdate::Patched { rows } => assert!(rows <= n),
+                LapUpdate::Rebuilt => {}
+            }
+            assert_matches(&inc, &model);
+        }
+    }
+}
+
+#[test]
+fn removing_a_nodes_last_edge_leaves_a_diagonal_only_row() {
+    let n = 5usize;
+    let mut inc = IncrementalLaplacian::new(n, &[(0, 1), (2, 3), (3, 4)]);
+    let up = inc.apply_delta(&[(1, 0)], &[]);
+    assert!(matches!(up, LapUpdate::Patched { .. } | LapUpdate::Rebuilt));
+    assert_eq!(inc.degree(0), 0);
+    assert_eq!(inc.degree(1), 0);
+    // isolated rows hold exactly the unit diagonal
+    let lap = inc.lap();
+    for r in [0usize, 1] {
+        assert_eq!(lap.indptr[r + 1] - lap.indptr[r], 1, "row {r} width");
+        assert_eq!(lap.indices[lap.indptr[r]], r as u32);
+        assert_eq!(lap.values[lap.indptr[r]].to_bits(), 1.0f64.to_bits());
+    }
+    assert_matches(&inc, &[(2, 3), (3, 4)]);
+}
+
+#[test]
+fn duplicate_and_parallel_edges_in_one_batch_collapse() {
+    let n = 6usize;
+    let mut inc = IncrementalLaplacian::new(n, &[(0, 1)]);
+    // (1,2) three times in both orientations, a self-loop, and a
+    // duplicate of an existing edge: net effect is the single new
+    // edge (1,2)
+    let up = inc.apply_delta(&[], &[(1, 2), (2, 1), (1, 2), (3, 3), (1, 0)]);
+    assert!(matches!(up, LapUpdate::Patched { .. } | LapUpdate::Rebuilt));
+    assert_eq!(inc.degree(1), 2);
+    assert_eq!(inc.degree(2), 1);
+    assert_matches(&inc, &[(0, 1), (1, 2)]);
+}
+
+#[test]
+fn add_then_remove_of_the_same_edge_in_one_batch_is_a_net_add() {
+    // Removals apply first: when the edge is absent the removal is a
+    // no-op and the addition lands; when it is present the removal and
+    // re-addition cancel into "still present". Either way the edge
+    // exists afterwards.
+    let n = 4usize;
+    let mut inc = IncrementalLaplacian::new(n, &[(0, 1)]);
+    // absent edge (2,3): removal no-op, addition effective
+    inc.apply_delta(&[(2, 3)], &[(2, 3)]);
+    assert_eq!(inc.degree(2), 1);
+    assert_matches(&inc, &[(0, 1), (2, 3)]);
+    // present edge (0,1): removed then re-added inside one batch
+    inc.apply_delta(&[(0, 1)], &[(0, 1)]);
+    assert_eq!(inc.degree(0), 1);
+    assert_matches(&inc, &[(0, 1), (2, 3)]);
+}
+
+#[test]
+fn empty_batch_is_a_bitwise_no_op() {
+    let n = 6usize;
+    let edges = [(0, 1), (1, 2), (3, 4)];
+    let mut inc = IncrementalLaplacian::new(n, &edges);
+    let before: Vec<u64> = inc.lap().values.iter().map(|v| v.to_bits()).collect();
+    let up = inc.apply_delta(&[], &[]);
+    assert_eq!(up, LapUpdate::Patched { rows: 0 });
+    let after: Vec<u64> = inc.lap().values.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(before, after);
+    assert_matches(&inc, &edges);
+    // a batch of pure no-ops (absent removal, present addition,
+    // self-loop) is the same as an empty one
+    let up = inc.apply_delta(&[(4, 5)], &[(0, 1), (2, 2)]);
+    assert_eq!(up, LapUpdate::Patched { rows: 0 });
+    assert_matches(&inc, &edges);
+}

@@ -1,0 +1,125 @@
+//! Cold-vs-warm pin for the streaming re-cluster service: over a
+//! 20-step SBM evolution trace at small churn (1% rewired per step),
+//! every warm-started re-solve must take strictly fewer Davidson
+//! iterations than a cold solve of the *same* snapshot, and must land
+//! on the same partition. A zero-delta step must lock immediately from
+//! the retained panel.
+//!
+//! The documented margin: per churn step `warm < cold` strictly, so
+//! across the trace the aggregate gap is at least one iteration per
+//! step (in practice warm runs at a small constant while cold rebuilds
+//! its subspace from a random panel every time).
+
+use dist_chebdav::cluster::adjusted_rand_index;
+use dist_chebdav::coordinator::{EvolutionTrace, SolveSpec, StreamRoute, StreamingSession};
+use dist_chebdav::graph::sbm::{generate, Category, SbmParams};
+use dist_chebdav::graph::EdgeDelta;
+
+const N: usize = 600;
+const STEPS: usize = 20;
+
+fn spec() -> SolveSpec {
+    // k = 2 * k_b: two Davidson blocks; clusters = the SBM block count
+    // graph_challenge picks at n = 600 (8), so the embedding separates
+    // every block and the partition comparison below is sharp.
+    SolveSpec {
+        k: 8,
+        k_b: 4,
+        m: 11,
+        tol: 1e-6,
+        seed: 7,
+        clusters: 8,
+    }
+}
+
+/// Fresh (trace, warm session) pair on a well-separated LBOLBSV
+/// instance. `validate` keeps the incremental Laplacian honest at every
+/// step of every test in this binary.
+fn setup() -> (EvolutionTrace, StreamingSession) {
+    let params = SbmParams::graph_challenge(N, Category::from_name("LBOLBSV").unwrap());
+    let g = generate(&params, 7);
+    let session = StreamingSession::new(g.n, &g.edges, spec(), StreamRoute::Sequential, true);
+    let trace = EvolutionTrace::new(g.n, g.edges, g.labels, 0.01, 0.9, 0xfeed);
+    (trace, session)
+}
+
+/// Cold re-solve of the given snapshot: a fresh session (no retained
+/// panel, no retained centroids) stepped once with an empty delta.
+fn cold_solve(edges: &[(u32, u32)]) -> dist_chebdav::coordinator::StepOutcome {
+    let mut cold = StreamingSession::new(N, edges, spec(), StreamRoute::Sequential, false);
+    cold.step(&EdgeDelta::default(), false)
+}
+
+#[test]
+fn warm_steps_beat_cold_solves_and_agree_on_assignments() {
+    let (mut trace, mut session) = setup();
+    let (mut warm_total, mut cold_total) = (0usize, 0usize);
+    for step in 0..=STEPS {
+        let delta = if step == 0 {
+            EdgeDelta::default()
+        } else {
+            trace.advance(step)
+        };
+        let out = session.step(&delta, false);
+        assert!(out.report.converged, "step {step} did not converge");
+        if step == 0 {
+            assert!(!out.report.warm, "step 0 must be the cold seed");
+            continue;
+        }
+        assert!(out.report.warm, "step {step} lost the retained panel");
+        let cold = cold_solve(trace.edges());
+        assert!(cold.report.converged, "cold reference at step {step}");
+        // The pin: warm strictly beats cold on the identical snapshot.
+        assert!(
+            out.report.iterations < cold.report.iterations,
+            "step {step}: warm {} !< cold {}",
+            out.report.iterations,
+            cold.report.iterations
+        );
+        // Same partition: ARI is permutation-invariant, so label ids
+        // may differ but the grouping must be identical.
+        let ari = adjusted_rand_index(&out.assignments, &cold.assignments);
+        assert!(
+            (ari - 1.0).abs() < 1e-9,
+            "step {step}: warm/cold assignments diverged (ARI {ari})"
+        );
+        warm_total += out.report.iterations;
+        cold_total += cold.report.iterations;
+    }
+    // Aggregate margin implied by the per-step pin, restated so a
+    // failure prints the whole-trace picture.
+    assert!(
+        cold_total >= warm_total + STEPS,
+        "aggregate margin collapsed: warm {warm_total} vs cold {cold_total} over {STEPS} steps"
+    );
+}
+
+#[test]
+fn zero_delta_step_locks_from_the_retained_panel() {
+    let (mut trace, mut session) = setup();
+    // Seed the warm state with the cold step plus a little churn.
+    session.step(&EdgeDelta::default(), false);
+    for step in 1..=3 {
+        let delta = trace.advance(step);
+        session.step(&delta, false);
+    }
+    // An empty batch re-solves an unchanged matrix from its own
+    // converged panel: one Rayleigh-Ritz pass per block locks
+    // everything, so with k = 2 * k_b at most 2 outer iterations.
+    let out = session.step(&EdgeDelta::default(), false);
+    assert!(out.report.warm && out.report.converged);
+    assert!(!out.report.rebuilt);
+    assert_eq!(out.report.patched_rows, 0, "empty batch must not touch rows");
+    assert_eq!((out.report.added, out.report.removed), (0, 0));
+    assert!(
+        out.report.iterations <= 2,
+        "zero-delta step took {} iterations",
+        out.report.iterations
+    );
+    // The partition of an unchanged graph stays put.
+    assert!(
+        out.report.ari_prev > 0.99,
+        "zero-delta step moved the partition (ARI {})",
+        out.report.ari_prev
+    );
+}

@@ -10,14 +10,23 @@
 //!              "speedup":3.0},...]}
 //! ```
 //!
-//! Two record shapes are accepted, dispatched per record: kernel-shaped
-//! (old-vs-new microbench rows as above, `BENCH_kernels.json`) and
+//! Three record shapes are accepted, dispatched per record: kernel-shaped
+//! (old-vs-new microbench rows as above, `BENCH_kernels.json`),
 //! e2e-shaped (per-(matrix, p) pipeline breakdowns with the kmeans-tail
 //! fields, `BENCH_fig10.json`):
 //!
 //! ```json
 //! {"matrix":"LBOLBSV","p":4,"total":1.9,"eig":1.7,"embed":0.01,
 //!  "kmeans":0.19,"kmeans_frac":0.1,"ari":0.98}
+//! ```
+//!
+//! and streaming-shaped (per-step warm-vs-cold rows of the streaming
+//! re-cluster service, `BENCH_streaming.json`; dispatched on the `step`
+//! key — checked before `p`, which streaming records also carry):
+//!
+//! ```json
+//! {"step":3,"p":4,"warm_iters":5,"cold_iters":19,"spmm":60,
+//!  "cold_spmm":228,"ari_prev":0.97,"comm_words":12345.0,"wall_s":0.8}
 //! ```
 //!
 //! The checker validates shape, not values: required keys present with
@@ -287,11 +296,16 @@ fn check_record(v: &Value) -> Result<(), String> {
     for (i, r) in recs.iter().enumerate() {
         if r.get("kernel").is_some() {
             check_kernel_record(i, r)?;
+        } else if r.get("step").is_some() {
+            // Streaming rows also carry 'p', so this arm must come
+            // before the e2e dispatch.
+            check_streaming_record(i, r)?;
         } else if r.get("p").is_some() {
             check_e2e_record(i, r)?;
         } else {
             return Err(format!(
-                "records[{i}]: neither kernel- nor e2e-shaped (no 'kernel' or 'p' key)"
+                "records[{i}]: not kernel-, streaming- or e2e-shaped \
+                 (no 'kernel', 'step' or 'p' key)"
             ));
         }
     }
@@ -328,6 +342,33 @@ fn check_e2e_record(i: usize, r: &Value) -> Result<(), String> {
             .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
         if !x.is_finite() || x < 0.0 {
             return Err(format!("records[{i}]: '{key}' = {x} not finite non-negative"));
+        }
+    }
+    Ok(())
+}
+
+/// Streaming-shaped record: one per-step warm-vs-cold row of the
+/// streaming re-cluster service. `cold_spmm`, `comm_words` and `wall_s`
+/// are checked when present; `ari_prev` may be null (step 0 has no
+/// previous assignment to compare against).
+fn check_streaming_record(i: usize, r: &Value) -> Result<(), String> {
+    for key in ["step", "p", "warm_iters", "cold_iters", "spmm"] {
+        let x = r
+            .get(key)
+            .and_then(Value::as_num)
+            .ok_or_else(|| format!("records[{i}]: missing or non-numeric '{key}'"))?;
+        if !x.is_finite() || x < 0.0 {
+            return Err(format!("records[{i}]: '{key}' = {x} not finite non-negative"));
+        }
+    }
+    for key in ["cold_spmm", "comm_words", "wall_s"] {
+        if let Some(v) = r.get(key) {
+            let x = v
+                .as_num()
+                .ok_or_else(|| format!("records[{i}]: non-numeric '{key}'"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("records[{i}]: '{key}' = {x} not finite non-negative"));
+            }
         }
     }
     Ok(())
@@ -373,6 +414,13 @@ mod tests {
         r#""config":{"n":8192,"threads":4,"full":false},"#,
         r#""records":[{"matrix":"LBOLBSV","p":4,"total":1.9,"eig":1.7,"embed":0.01,"#,
         r#""kmeans":0.19,"kmeans_frac":0.1,"ari":0.98}]}"#
+    );
+
+    const GOOD_STREAMING: &str = concat!(
+        r#"{"bench":"streaming","rev":"abc1234","unix_time":1720000000,"#,
+        r#""config":{"n":4096,"threads":4,"steps":8,"fraction":0.02,"p":4,"full":false},"#,
+        r#""records":[{"step":3,"p":4,"warm_iters":5,"cold_iters":19,"spmm":60,"#,
+        r#""cold_spmm":228,"ari_prev":0.97,"comm_words":12345.0,"wall_s":0.8}]}"#
     );
 
     #[test]
@@ -447,6 +495,33 @@ mod tests {
         // an e2e record must not satisfy the kernel schema by accident
         let both = GOOD_E2E.replace(r#""matrix""#, r#""kernel""#);
         assert!(check_record(&parse(&both).unwrap()).is_err());
+    }
+
+    #[test]
+    fn streaming_record_passes_and_violations_are_reported() {
+        assert!(check_record(&parse(GOOD_STREAMING).unwrap()).is_ok());
+        // step-0 rows carry a null ari_prev; optional keys may be absent
+        let null_ari = GOOD_STREAMING.replace(r#""ari_prev":0.97"#, r#""ari_prev":null"#);
+        assert!(check_record(&parse(&null_ari).unwrap()).is_ok());
+        let no_wall = GOOD_STREAMING.replace(r#","wall_s":0.8"#, "");
+        assert!(check_record(&parse(&no_wall).unwrap()).is_ok());
+        // drop each required per-record key in turn; dropping 'step'
+        // demotes the row to e2e dispatch, which also rejects it
+        for (pat, repl) in [
+            (r#""step":3,"#, ""),
+            (r#""p":4,"#, ""),
+            (r#""warm_iters":5,"#, ""),
+            (r#""cold_iters":19,"#, ""),
+            (r#""spmm":60,"#, ""),
+        ] {
+            let bad = GOOD_STREAMING.replace(pat, repl);
+            assert!(check_record(&parse(&bad).unwrap()).is_err(), "dropping {pat} accepted");
+        }
+        // negative counters and non-numeric optional keys are rejected
+        let neg = GOOD_STREAMING.replace(r#""warm_iters":5"#, r#""warm_iters":-5"#);
+        assert!(check_record(&parse(&neg).unwrap()).is_err());
+        let bad_wall = GOOD_STREAMING.replace(r#""wall_s":0.8"#, r#""wall_s":"fast""#);
+        assert!(check_record(&parse(&bad_wall).unwrap()).is_err());
     }
 
     #[test]
